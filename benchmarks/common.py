@@ -1,0 +1,42 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import List, Optional
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO, "results", "bench")
+
+
+def run_halo_child(backend: str, devices: int = 8, box: int = 16,
+                   steps: int = 2, runs: int = 5, emit_trace: bool = False,
+                   emit_hlo_stats: bool = False) -> dict:
+    cmd = [sys.executable, "-m", "benchmarks.halo_child",
+           "--backend", backend, "--devices", str(devices),
+           "--box", str(box), "--steps", str(steps), "--runs", str(runs)]
+    if emit_trace:
+        cmd.append("--emit-trace")
+    if emit_hlo_stats:
+        cmd.append("--emit-hlo-stats")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + ":" + REPO
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=REPO, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"halo_child failed: {out.stderr[-2000:]}")
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

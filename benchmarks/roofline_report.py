@@ -1,0 +1,50 @@
+"""§Roofline table: reads results/dryrun/*.json into the per-cell report."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import REPO, csv_row
+
+DRYRUN = os.path.join(REPO, "results", "dryrun")
+
+
+def load_cells(mesh: str = "16x16", tag: str = ""):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        d = json.load(open(f))
+        if d.get("mesh") != mesh or d.get("tag", "") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def table(emit=print, mesh: str = "16x16") -> dict:
+    cells = load_cells(mesh)
+    opt = load_cells(mesh, tag="opt")
+    emit(f"== Roofline baselines ({mesh}, {len(cells)} cells; "
+         f"{len(opt)} hillclimbed 'opt' variants reported in §Perf) ==")
+    emit("arch,shape,ok,mem_GB,fits,bound,t_compute_ms,t_memory_ms,"
+         "t_collective_ms,useful_flops,mfu_bound")
+    out = {}
+    for d in cells:
+        key = f"{d['arch']}__{d['shape']}"
+        if not d.get("ok"):
+            emit(f"{d['arch']},{d['shape']},FAIL")
+            out[key] = {"ok": False}
+            continue
+        r = d["roofline"]
+        m = d["memory"]
+        uf = r.get("useful_flops_fraction") or 0.0
+        mfu = r.get("mfu_bound") or 0.0
+        emit(f"{d['arch']},{d['shape']},ok,{m['per_device_total']/1e9:.2f},"
+             f"{m['fits_hbm']},{r['bound']},{r['t_compute']*1e3:.2f},"
+             f"{r['t_memory']*1e3:.2f},{r['t_collective']*1e3:.2f},"
+             f"{uf:.3f},{mfu:.4f}")
+        out[key] = {"ok": True, "roofline": r, "memory": m}
+    if cells:
+        ok = [c for c in cells if c.get("ok")]
+        emit(csv_row("roofline_cells_ok", float(len(ok)),
+                     f"of {len(cells)} on {mesh}"))
+    return out

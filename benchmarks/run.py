@@ -1,0 +1,53 @@
+"""Benchmark harness: one function per paper table/figure + the roofline
+report. Prints ``name,us_per_call,derived`` CSV lines throughout.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import figures, roofline_report
+from .common import save_json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,fig4,fig5,fig7,fig10,fig11,"
+                         "modeled,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    benches = [
+        ("fig1", figures.fig1_hatchet_tree),
+        ("fig2", figures.fig2_fig3_comparison_trees),
+        ("fig4", figures.fig4_per_region),
+        ("fig5", figures.fig5_completion_times),
+        ("fig7", figures.fig7_9_timelines),
+        ("fig10", figures.fig10_op_scaling),
+        ("fig11", figures.fig11_app_scaling),
+        ("modeled", figures.modeled_device_timeline),
+        ("roofline", roofline_report.table),
+    ]
+    failures = []
+    for name, fn in benches:
+        if only and name not in only:
+            continue
+        print(f"\n########## {name} ##########", flush=True)
+        try:
+            result = fn()
+            save_json(f"{name}.json", result)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED benches: {failures}")
+        sys.exit(1)
+    print("\nall benches complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Comparison-based profiling (paper method 1), end to end.
+
+    PYTHONPATH=src:. python examples/compare_impls.py
+
+Runs the COMB-analog halo app under the vendor backend (xla_auto) and two
+builds of the explicit backend (pre-fix one-queue + host defect; post-fix
+two-queue), aggregates N runs per implementation into GraphFrames,
+divides the trees, and prints the paper-Fig-2/3-style ratio trees plus
+the hotspot list that tells you where to optimize next.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.figures import fig2_fig3_comparison_trees, fig5_completion_times
+
+
+def main():
+    print("Method 1: comparison-based profiling")
+    print("baseline = xla_auto (vendor black box / 'Spectrum' analog)\n")
+    fig2_fig3_comparison_trees()
+    print()
+    fig5_completion_times()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: profile a small LM training run with the core library.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the 60-second path: annotate regions -> train a few steps ->
+print the Hatchet-style tree -> export a Chromium trace you can open in
+chrome://tracing or Perfetto (the paper's viewers).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import get_config
+from repro.core import annotate, regions, timeline
+from repro.core.collector import global_collector, reset_global_collector
+from repro.core.graphframe import GraphFrame
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+
+def main():
+    cfg = get_config("yi-6b", "smoke")
+    data = SyntheticTokens(cfg, DataConfig(batch=4, seq_len=128))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_state(params)
+    step = jax.jit(make_train_step(cfg, adamw.AdamWConfig(total_steps=8)),
+                   donate_argnums=(0, 1))
+
+    reset_global_collector()
+    for i in range(8):
+        with annotate("train/step", step=i):
+            with annotate("train/data", category="data"):
+                batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            with annotate("train/compute", category="api") :
+                params, opt, metrics = step(params, opt, batch)
+                jax.block_until_ready(metrics["loss"])
+        print(f"step {i}: loss {float(metrics['loss']):.4f}")
+
+    events = global_collector().drain()
+    gf = GraphFrame.from_events(events)
+    print("\nregion tree (mean seconds per occurrence):")
+    print(gf.tree(metric="mean", fmt="{:.4f}"))
+    out = "/tmp/quickstart_trace.json"
+    timeline.save_trace(timeline.to_chrome_trace(events), out)
+    print(f"\nchrome trace written to {out} (open in chrome://tracing)")
+
+
+if __name__ == "__main__":
+    main()

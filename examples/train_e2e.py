@@ -1,0 +1,52 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_e2e.py --preset tiny    # CI/CPU
+    PYTHONPATH=src python examples/train_e2e.py --preset 100m    # real run
+
+Wraps repro.launch.train with two presets:
+  tiny — ~4M params, 300 steps, finishes on 1 CPU core in minutes and
+         shows the loss dropping on the structured synthetic stream.
+  100m — ~100M params (d_model 768, 12 layers), few hundred steps;
+         sized for a single accelerator host.
+Both checkpoint every 50 steps and resume with --resume.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.preset == "tiny":
+        steps = args.steps or 300
+        argv = ["--arch", "yi-6b", "--preset", "smoke",
+                "--steps", str(steps), "--batch", "8", "--seq", "128",
+                "--d-model", "128", "--layers", "4",
+                "--ckpt-dir", "/tmp/e2e_tiny", "--ckpt-every", "50",
+                "--lr", "1e-3"]
+    else:
+        steps = args.steps or 300
+        argv = ["--arch", "yi-6b", "--preset", "smoke",
+                "--steps", str(steps), "--batch", "8", "--seq", "512",
+                "--d-model", "768", "--layers", "12",
+                "--ckpt-dir", "/tmp/e2e_100m", "--ckpt-every", "50",
+                "--lr", "3e-4"]
+    if args.resume:
+        argv.append("--resume")
+    losses = train.main(argv)
+    assert losses[-1] == losses[-1], "loss is NaN"
+    print(f"\ne2e {args.preset}: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Elastic restart: resume a checkpoint on a *different* device count.
+
+At 1000+ nodes, restarts rarely come back with the same world size. The
+checkpoint stores unsharded (host) arrays; this module picks a new mesh
+from whatever devices survive and re-places every array under the same
+logical sharding rules — parameters keep their logical axes, only the
+mesh changes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+from ..sharding import rules as R
+
+
+def viable_meshes(n_devices: int, prefer_model: int = 16) -> List[Tuple[int, int]]:
+    """(data, model) factorizations, best-first: keep model parallelism as
+    close to the preferred width as divisibility allows."""
+    out = []
+    for model in range(min(prefer_model, n_devices), 0, -1):
+        if n_devices % model == 0:
+            out.append((n_devices // model, model))
+    return out
+
+
+def make_elastic_mesh(devices: Optional[list] = None,
+                      prefer_model: int = 16) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    data, model = viable_meshes(n, prefer_model)[0]
+    return Mesh(
+        np.asarray(devices).reshape(data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def reshard_state(
+    cfg: ModelConfig,
+    host_state: Dict[str, Any],
+    mesh: Mesh,
+) -> Dict[str, Any]:
+    """Place a host (numpy) train state onto a new mesh under the standard
+    logical rules. Works for any (data, model) factorization."""
+    rules = R.make_rules(mesh)
+    axes = M.param_axes(cfg)
+    shapes = M.param_shapes(cfg)
+    param_sh = R.tree_shardings(axes, mesh, rules, shapes)
+
+    def place(host_tree, sh_tree):
+        return jax.tree.map(
+            lambda h, s: jax.device_put(np.asarray(h), s), host_tree, sh_tree)
+
+    out: Dict[str, Any] = {}
+    if "params" in host_state:
+        out["params"] = place(host_state["params"], param_sh)
+    if "opt_state" in host_state:
+        opt = host_state["opt_state"]
+        out["opt_state"] = {
+            "m": place(opt["m"], param_sh),
+            "v": place(opt["v"], param_sh),
+            "step": jax.device_put(np.asarray(opt["step"])),
+        }
+    for k, v in host_state.items():
+        if k not in out:
+            out[k] = v
+    return out

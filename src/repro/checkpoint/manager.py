@@ -1,0 +1,175 @@
+"""Fault-tolerant checkpointing.
+
+  * atomic commits: write to ``step_K.tmp-<nonce>/``, fsync, rename —
+    a crash mid-save never corrupts the latest checkpoint
+  * async save: the train loop hands off a host snapshot to a background
+    thread (the paper's progress-thread pattern: a second queue so the
+    producer — the training step — never blocks on I/O)
+  * retention: keep the newest ``keep`` checkpoints
+  * restore: latest or explicit step; arrays come back as numpy and are
+    re-sharded by the caller (see elastic.py for mesh-changing restores)
+  * preemption hook: ``install_signal_handler`` saves synchronously on
+    SIGTERM before re-raising
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import signal
+import threading
+import time
+import uuid
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core import regions
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    else:
+        yield "/".join(prefix), tree
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async = async_save
+        self._queue: "queue.Queue[Optional[Tuple[int, dict, dict]]]" = (
+            queue.Queue(maxsize=2))
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        if async_save:
+            self._worker = threading.Thread(
+                target=self._drain, name="ckpt-saver", daemon=True)
+            self._worker.start()
+
+    # -- public API ---------------------------------------------------------
+
+    def save(self, step: int, state: Dict[str, Any],
+             metadata: Optional[dict] = None, block: bool = False) -> None:
+        """Snapshot to host memory (cheap) and enqueue the write."""
+        if self._error:
+            raise RuntimeError("checkpoint writer failed") from self._error
+        with regions.annotate("ckpt/snapshot", category="runtime", step=step):
+            host = {k: np.asarray(v) for k, v in _flatten(state)}
+        item = (step, host, metadata or {})
+        if self._async and not block:
+            self._queue.put(item)
+        else:
+            self._write(*item)
+
+    def wait(self) -> None:
+        """Barrier: all enqueued saves are durable."""
+        if self._async:
+            self._queue.join()
+        if self._error:
+            raise RuntimeError("checkpoint writer failed") from self._error
+
+    def restore(self, step: Optional[int] = None
+                ) -> Optional[Tuple[int, Dict[str, Any], dict]]:
+        steps = self.available_steps()
+        if not steps:
+            return None
+        step = step if step is not None else steps[-1]
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        with regions.annotate("ckpt/restore", category="runtime", step=step):
+            with np.load(os.path.join(path, "arrays.npz")) as zf:
+                flat = {k: zf[k] for k in zf.files}
+            with open(os.path.join(path, "metadata.json")) as f:
+                meta = json.load(f)
+        return step, _unflatten(flat), meta
+
+    def available_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                full = os.path.join(self.directory, name)
+                if os.path.exists(os.path.join(full, "COMMITTED")):
+                    steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def install_signal_handler(self, state_fn: Callable[[], Tuple[int, dict]]):
+        """Save synchronously on SIGTERM (preemption notice), then re-raise."""
+        prev = signal.getsignal(signal.SIGTERM)
+
+        def handler(signum, frame):
+            step, state = state_fn()
+            self.save(step, state, {"reason": "preemption"}, block=True)
+            if callable(prev):
+                prev(signum, frame)
+            else:
+                signal.default_int_handler(signum, frame)
+
+        signal.signal(signal.SIGTERM, handler)
+
+    def close(self):
+        if self._async and self._worker is not None:
+            self._queue.put(None)
+            self._worker.join(timeout=60)
+
+    # -- internals ------------------------------------------------------------
+
+    def _drain(self):
+        while True:
+            item = self._queue.get()
+            if item is None:
+                self._queue.task_done()
+                return
+            try:
+                self._write(*item)
+            except BaseException as e:       # surfaced on next save()/wait()
+                self._error = e
+            finally:
+                self._queue.task_done()
+
+    def _write(self, step: int, host: Dict[str, np.ndarray], meta: dict):
+        with regions.annotate("ckpt/write", category="runtime", step=step):
+            final = os.path.join(self.directory, f"step_{step:010d}")
+            tmp = final + f".tmp-{uuid.uuid4().hex[:8]}"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            meta = dict(meta)
+            meta.update(step=step, time=time.time(),
+                        n_arrays=len(host))
+            with open(os.path.join(tmp, "metadata.json"), "w") as f:
+                json.dump(meta, f)
+            with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+                f.write("ok")
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+    def _gc(self):
+        steps = self.available_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+        # remove orphaned tmp dirs from crashed writers
+        for name in os.listdir(self.directory):
+            if ".tmp-" in name:
+                full = os.path.join(self.directory, name)
+                if time.time() - os.path.getmtime(full) > 3600:
+                    shutil.rmtree(full, ignore_errors=True)

@@ -1,0 +1,72 @@
+"""Instrumented collective primitives (the 'MPI procedure calls').
+
+Each wrapper is usable inside shard_map and annotates the *dispatch site*
+with a profiling region (category="collective") carrying logical byte
+counts — the host-side analog of Caliper-instrumented MPI entry points.
+jax.named_scope mirrors the region into HLO metadata so host regions can
+be correlated with compiled collectives.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core import regions
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+def _nbytes(x) -> int:
+    return int(x.size * x.dtype.itemsize)
+
+
+def psum(x: jax.Array, axis_name: AxisName) -> jax.Array:
+    with regions.annotate(f"psum({axis_name})", category="collective",
+                          bytes=_nbytes(x)):
+        with jax.named_scope(f"comm_psum_{axis_name}"):
+            return jax.lax.psum(x, axis_name)
+
+
+def all_gather(x: jax.Array, axis_name: AxisName, axis: int = 0,
+               tiled: bool = True) -> jax.Array:
+    with regions.annotate(f"all_gather({axis_name})", category="collective",
+                          bytes=_nbytes(x)):
+        with jax.named_scope(f"comm_all_gather_{axis_name}"):
+            return jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+
+
+def reduce_scatter(x: jax.Array, axis_name: AxisName,
+                   scatter_dimension: int = 0) -> jax.Array:
+    with regions.annotate(f"reduce_scatter({axis_name})",
+                          category="collective", bytes=_nbytes(x)):
+        with jax.named_scope(f"comm_reduce_scatter_{axis_name}"):
+            return jax.lax.psum_scatter(
+                x, axis_name, scatter_dimension=scatter_dimension, tiled=True)
+
+
+def all_to_all(x: jax.Array, axis_name: AxisName, split_axis: int,
+               concat_axis: int) -> jax.Array:
+    with regions.annotate(f"all_to_all({axis_name})", category="collective",
+                          bytes=_nbytes(x)):
+        with jax.named_scope(f"comm_all_to_all_{axis_name}"):
+            return jax.lax.all_to_all(
+                x, axis_name, split_axis=split_axis, concat_axis=concat_axis,
+                tiled=True)
+
+
+def ppermute(x: jax.Array, axis_name: AxisName,
+             perm: Sequence[Tuple[int, int]]) -> jax.Array:
+    with regions.annotate(f"ppermute({axis_name})", category="collective",
+                          bytes=_nbytes(x)):
+        with jax.named_scope(f"comm_ppermute_{axis_name}"):
+            return jax.lax.ppermute(x, axis_name, perm)
+
+
+def axis_index(axis_name: AxisName) -> jax.Array:
+    return jax.lax.axis_index(axis_name)
+
+
+def axis_size(axis_name: AxisName) -> int:
+    return jax.lax.axis_size(axis_name)

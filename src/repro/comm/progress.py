@@ -1,0 +1,126 @@
+"""Strong-progress engine — a faithful host-level port of ExaMPI's §4
+architecture, including the defect and the fix.
+
+ExaMPI devotes a per-process *progress thread* to completing communication
+requests that the *user thread* enqueues (strong progress, paper §2.1).
+Before the fix, both threads shared ONE request queue guarded by one
+mutex, and the progress thread held that mutex *while processing*; the
+user thread's MPI_Isend therefore blocked for the whole processing
+quantum (Fig. 8), and Isend latency grew with the number of pending
+requests (Fig. 10). The fix added a second *incoming* queue the producer
+can always append to; the progress thread swaps it into a private
+internal queue and processes without holding the shared lock (Fig. 9).
+
+  ProgressEngine(mode="shared")    the pre-fix design (one queue)
+  ProgressEngine(mode="incoming")  the post-fix design (second queue)
+
+``submit`` is the MPI_Isend analog (returns a Request); Request.wait is
+MPI_Wait. Both threads annotate their critical sections with the region
+name "BlockingProgress lock", so timeline contention analysis
+(core.analyses.contention) finds the defect exactly as the paper's
+Fig. 8 does.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Optional, Tuple
+
+from ..core import regions
+
+LOCK_REGION = "BlockingProgress lock"
+
+
+class Request:
+    __slots__ = ("_event", "_result", "_exc")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._result = None
+        self._exc: Optional[BaseException] = None
+
+    def _fulfill(self, result=None, exc: Optional[BaseException] = None):
+        self._result = result
+        self._exc = exc
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None):
+        with regions.annotate("MPI_Wait", category="api"):
+            if not self._event.wait(timeout):
+                raise TimeoutError("request not completed")
+            if self._exc is not None:
+                raise self._exc
+            return self._result
+
+
+class ProgressEngine:
+    def __init__(self, mode: str = "incoming", process_fn=None):
+        assert mode in ("shared", "incoming")
+        self.mode = mode
+        self._lock = threading.Lock()            # the BlockingProgress lock
+        self._queue: Deque[Tuple[Callable, tuple, Request]] = deque()
+        self._internal: Deque[Tuple[Callable, tuple, Request]] = deque()
+        self._wake = threading.Event()
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._progress_loop, name="progress", daemon=True)
+        self._thread.start()
+
+    # ---- user-thread side ---------------------------------------------------
+
+    def submit(self, fn: Callable, *args: Any) -> Request:
+        """MPI_Isend analog: enqueue a communication request."""
+        req = Request()
+        with regions.annotate("MPI_Isend", category="api", mode=self.mode):
+            with regions.annotate(LOCK_REGION, category="runtime",
+                                  lock="request_queue"):
+                with self._lock:
+                    self._queue.append((fn, args, req))
+            self._wake.set()
+        return req
+
+    def shutdown(self):
+        self._stop = True
+        self._wake.set()
+        self._thread.join(timeout=10)
+
+    # ---- progress-thread side -------------------------------------------------
+
+    def _progress_loop(self):
+        while not self._stop:
+            self._wake.wait(timeout=0.05)
+            self._wake.clear()
+            if self.mode == "shared":
+                # DEFECT: hold the shared lock while *processing* — the
+                # user thread's Isend blocks for the whole quantum.
+                with regions.annotate(LOCK_REGION, category="runtime",
+                                      lock="request_queue"):
+                    with self._lock:
+                        while self._queue:
+                            fn, args, req = self._queue.popleft()
+                            self._process(fn, args, req)
+            else:
+                # FIX: grab the incoming queue quickly, process privately.
+                with regions.annotate(LOCK_REGION, category="runtime",
+                                      lock="request_queue"):
+                    with self._lock:
+                        while self._queue:
+                            self._internal.append(self._queue.popleft())
+                while self._internal:
+                    fn, args, req = self._internal.popleft()
+                    self._process(fn, args, req)
+
+    def _process(self, fn, args, req: Request):
+        with regions.annotate("progress/process", category="runtime"):
+            try:
+                result = fn(*args)
+                import jax
+
+                jax.block_until_ready(result)
+                req._fulfill(result)
+            except BaseException as e:           # surfaced at wait()
+                req._fulfill(exc=e)

@@ -1,0 +1,21 @@
+# The paper's primary contribution: communication-layer profiling
+# infrastructure — region annotation (Caliper analog), hierarchical
+# GraphFrames (Hatchet analog), comparison-based profiling (method 1),
+# chrome-trace timelines + automated analyses (method 2), and the TPU
+# adaptation: HLO collective parsing, trip-count-correct cost attribution,
+# roofline terms and modeled device timelines.
+from . import analyses, comparison, graphframe, hlo, hlo_cost, regions, timeline
+from .collector import Collector, global_collector, reset_global_collector
+from .comparison import ComparisonResult, compare, compare_frames, profile_runs
+from .events import Event
+from .graphframe import GraphFrame
+from .regions import annotate, annotate_jax, configure, profiled
+from .roofline import HW, Roofline
+
+__all__ = [
+    "analyses", "comparison", "graphframe", "hlo", "hlo_cost", "regions",
+    "timeline", "Collector", "global_collector", "reset_global_collector",
+    "ComparisonResult", "compare", "compare_frames", "profile_runs", "Event",
+    "GraphFrame", "annotate", "annotate_jax", "configure", "profiled",
+    "HW", "Roofline",
+]

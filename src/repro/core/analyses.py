@@ -1,0 +1,202 @@
+"""Automated timeline analyses (paper §4.1).
+
+The paper suggests four activities when reading a timeline; each is
+implemented as a detector over a list of events:
+
+  * large waits in synchronizing functions  -> :func:`large_waits`
+  * thread contention in critical sections  -> :func:`contention`
+  * irregular durations of one region       -> :func:`irregular`
+  * large gaps between profiled regions     -> :func:`gaps`
+
+Each returns a list of :class:`Finding`. ``analyze_all`` runs the suite —
+this is what found the BlockingProgress-lock contention analog in our
+serialized communication schedule (see benchmarks/fig_timeline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .events import Event
+
+
+@dataclasses.dataclass
+class Finding:
+    kind: str                 # "large_wait" | "contention" | "irregular" | "gap"
+    message: str
+    severity: float           # seconds of suspect time
+    events: List[Event] = dataclasses.field(default_factory=list)
+
+    def __str__(self) -> str:
+        return f"[{self.kind}] ({self.severity * 1e3:.3f} ms) {self.message}"
+
+
+def _by_name(events: Sequence[Event]) -> Dict[str, List[Event]]:
+    groups: Dict[str, List[Event]] = defaultdict(list)
+    for ev in events:
+        groups[ev.name].append(ev)
+    return groups
+
+
+def large_waits(
+    events: Sequence[Event],
+    categories: Tuple[str, ...] = ("collective",),
+    factor: float = 3.0,
+    min_duration_ns: int = 0,
+) -> List[Finding]:
+    """Occurrences of synchronizing regions that take >= factor x median of
+    their own name — the 'large waits in barriers/reductions' check."""
+    out: List[Finding] = []
+    sync = [e for e in events if e.category in categories]
+    for name, evs in _by_name(sync).items():
+        if len(evs) < 2:
+            continue
+        med = statistics.median(e.duration for e in evs)
+        if med <= 0:
+            continue
+        for ev in evs:
+            if ev.duration >= factor * med and ev.duration >= min_duration_ns:
+                out.append(
+                    Finding(
+                        kind="large_wait",
+                        message=(
+                            f"'{name}' (pid {ev.pid}, tid {ev.tid}) took "
+                            f"{ev.duration / 1e6:.3f} ms vs median {med / 1e6:.3f} ms"
+                        ),
+                        severity=(ev.duration - med) / 1e9,
+                        events=[ev],
+                    )
+                )
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def contention(
+    events: Sequence[Event],
+    name_filter: Optional[str] = None,
+    min_overlap_ns: int = 0,
+) -> List[Finding]:
+    """Same-named regions overlapping in time on *different threads* of the
+    same pid — the BlockingProgress-lock pattern of paper Fig. 8. Regions
+    tagged with attrs={'lock': ...} are always considered; otherwise any
+    same-name cross-thread overlap is reported."""
+    out: List[Finding] = []
+    per_pid: Dict[int, List[Event]] = defaultdict(list)
+    for ev in events:
+        if name_filter is not None and name_filter not in ev.name:
+            continue
+        per_pid[ev.pid].append(ev)
+    for pid, evs in per_pid.items():
+        for name, group in _by_name(evs).items():
+            group.sort(key=lambda e: e.t_start)
+            active: List[Event] = []
+            for ev in group:
+                active = [a for a in active if a.t_end > ev.t_start]
+                for a in active:
+                    if a.tid == ev.tid:
+                        continue
+                    ov = a.overlaps(ev)
+                    if ov > min_overlap_ns:
+                        out.append(
+                            Finding(
+                                kind="contention",
+                                message=(
+                                    f"'{name}' contended between tid {a.tid} and "
+                                    f"tid {ev.tid} on pid {pid} for {ov / 1e6:.3f} ms"
+                                ),
+                                severity=ov / 1e9,
+                                events=[a, ev],
+                            )
+                        )
+                active.append(ev)
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def irregular(
+    events: Sequence[Event],
+    factor: float = 3.0,
+    min_occurrences: int = 4,
+) -> List[Finding]:
+    """Occurrences irregular in duration relative to other occurrences of
+    the same region (any category)."""
+    out: List[Finding] = []
+    for name, evs in _by_name(events).items():
+        if len(evs) < min_occurrences:
+            continue
+        med = statistics.median(e.duration for e in evs)
+        if med <= 0:
+            continue
+        for ev in evs:
+            if ev.duration >= factor * med:
+                out.append(
+                    Finding(
+                        kind="irregular",
+                        message=(
+                            f"'{name}' occurrence at {ev.t_start / 1e6:.3f} ms is "
+                            f"{ev.duration / med:.1f}x its median duration"
+                        ),
+                        severity=(ev.duration - med) / 1e9,
+                        events=[ev],
+                    )
+                )
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def gaps(
+    events: Sequence[Event],
+    min_gap_ns: int = 1_000_000,
+    leaf_only: bool = True,
+) -> List[Finding]:
+    """Large gaps between consecutive profiled regions on one (pid, tid)."""
+    out: List[Finding] = []
+    lanes: Dict[Tuple[int, int], List[Event]] = defaultdict(list)
+    for ev in events:
+        lanes[(ev.pid, ev.tid)].append(ev)
+    for (pid, tid), evs in lanes.items():
+        if leaf_only:
+            # keep only events that contain no other event (innermost regions)
+            evs = [
+                e
+                for e in evs
+                if not any(
+                    o is not e and o.t_start >= e.t_start and o.t_end <= e.t_end
+                    for o in evs
+                )
+            ]
+        evs.sort(key=lambda e: e.t_start)
+        for prev, nxt in zip(evs, evs[1:]):
+            gap = nxt.t_start - prev.t_end
+            if gap >= min_gap_ns:
+                out.append(
+                    Finding(
+                        kind="gap",
+                        message=(
+                            f"{gap / 1e6:.3f} ms unprofiled gap between "
+                            f"'{prev.name}' and '{nxt.name}' on pid {pid} tid {tid}"
+                        ),
+                        severity=gap / 1e9,
+                        events=[prev, nxt],
+                    )
+                )
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def analyze_all(events: Sequence[Event], **kwargs) -> List[Finding]:
+    out: List[Finding] = []
+    out.extend(large_waits(events))
+    out.extend(contention(events))
+    out.extend(irregular(events))
+    out.extend(gaps(events, min_gap_ns=kwargs.get("min_gap_ns", 1_000_000)))
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def report(findings: Sequence[Finding], limit: int = 20) -> str:
+    lines = [f"{len(findings)} findings"]
+    lines += [str(f) for f in findings[:limit]]
+    return "\n".join(lines)

@@ -1,0 +1,120 @@
+"""Comparison-based profiling — method 1 of the paper (§3).
+
+Run an identical application under two communication implementations,
+aggregate per-region times over many runs, and divide the baseline tree by
+the experimental tree. Values > 1: experimental faster; < 1: slower;
+~1: equal. ``hotspots()`` then lists the worst regions — 'a starting point
+for optimization efforts'.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .collector import Collector, reset_global_collector
+from .events import Event
+from .graphframe import GraphFrame
+
+
+@dataclasses.dataclass
+class ComparisonResult:
+    baseline_name: str
+    experimental_name: str
+    baseline: GraphFrame          # aggregated over runs
+    experimental: GraphFrame
+    ratio: GraphFrame             # baseline / experimental
+    runs: Dict[str, List[GraphFrame]] = dataclasses.field(default_factory=dict)
+
+    def hotspots(self, n: int = 10):
+        """Regions where the experimental implementation performs worst."""
+        return self.ratio.hotspots(n=n, metric="value", ascending=True)
+
+    def wins(self, n: int = 10):
+        return self.ratio.hotspots(n=n, metric="value", ascending=False)
+
+    def tree(self, **kw) -> str:
+        return self.ratio.tree(**kw)
+
+    def mean_speedup(self, category_paths: Optional[Sequence[str]] = None) -> float:
+        """Geometric-mean-free average ratio across (optionally filtered) leaves
+        — the paper reports 'an average speedup of 3.58x across all MPI
+        procedure calls'."""
+        vals = []
+        for path, node in self.ratio.walk():
+            if node.children:
+                continue
+            if category_paths is not None and not any(
+                s in "/".join(path) for s in category_paths
+            ):
+                continue
+            v = node.metric("value")
+            if v == v and v not in (float("inf"), float("-inf")):
+                vals.append(v)
+        return sum(vals) / len(vals) if vals else float("nan")
+
+
+def profile_runs(
+    app: Callable[[], None],
+    n_runs: int = 5,
+    warmup: int = 1,
+    pid: int = 0,
+) -> List[GraphFrame]:
+    """Run ``app`` n times, each under a fresh collector; return one
+    GraphFrame of inclusive mean times per run."""
+    frames: List[GraphFrame] = []
+    for _ in range(warmup):
+        reset_global_collector(pid=pid)
+        app()
+    for _ in range(n_runs):
+        col = reset_global_collector(pid=pid)
+        app()
+        events: List[Event] = col.drain()
+        frames.append(GraphFrame.from_events(events))
+    reset_global_collector(pid=pid)
+    return frames
+
+
+def compare(
+    baseline_app: Callable[[], None],
+    experimental_app: Callable[[], None],
+    n_runs: int = 5,
+    warmup: int = 1,
+    baseline_name: str = "baseline",
+    experimental_name: str = "experimental",
+    metric: str = "mean",
+) -> ComparisonResult:
+    """The full method: N runs per implementation, mean-aggregate, divide."""
+    base_runs = profile_runs(baseline_app, n_runs=n_runs, warmup=warmup)
+    exp_runs = profile_runs(experimental_app, n_runs=n_runs, warmup=warmup)
+    base = GraphFrame.aggregate(base_runs, metric=metric, how="mean")
+    exp = GraphFrame.aggregate(exp_runs, metric=metric, how="mean")
+    ratio = base.div(exp, metric="value")
+    return ComparisonResult(
+        baseline_name=baseline_name,
+        experimental_name=experimental_name,
+        baseline=base,
+        experimental=exp,
+        ratio=ratio,
+        runs={baseline_name: base_runs, experimental_name: exp_runs},
+    )
+
+
+def compare_frames(
+    baseline_runs: Sequence[GraphFrame],
+    experimental_runs: Sequence[GraphFrame],
+    metric: str = "mean",
+    baseline_name: str = "baseline",
+    experimental_name: str = "experimental",
+) -> ComparisonResult:
+    """Comparison from pre-collected per-run frames (e.g. from subprocesses)."""
+    base = GraphFrame.aggregate(baseline_runs, metric=metric, how="mean")
+    exp = GraphFrame.aggregate(experimental_runs, metric=metric, how="mean")
+    return ComparisonResult(
+        baseline_name=baseline_name,
+        experimental_name=experimental_name,
+        baseline=base,
+        experimental=exp,
+        ratio=base.div(exp, metric="value"),
+        runs={baseline_name: list(baseline_runs),
+              experimental_name: list(experimental_runs)},
+    )

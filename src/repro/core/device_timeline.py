@@ -1,0 +1,191 @@
+"""Modeled device timeline from compiled HLO (timeline profiling, method 2,
+adapted per DESIGN.md §2: no TPU wall clock exists in this container, so the
+timeline is *reconstructed* from the compiled module — the schedule XLA will
+actually execute — with each op costed by the roofline terms).
+
+Two lanes per device, mirroring the paper's user-thread/progress-thread view:
+
+    tid 0  "compute stream"  (MXU/VPU time = max(flops, hbm) term per segment)
+    tid 1  "ICI stream"      (collective wire time)
+
+A *serialized* schedule places each collective's cost on the ICI lane while
+the compute lane idles (one queue). An *overlapped* schedule (async
+``-start``/``-done`` with compute between them, or our double-buffered ring)
+runs the lanes concurrently (second queue). ``serialization_report`` scores
+how much collective time is exposed — the TPU analog of Fig. 8's lock-wait.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .events import Event
+from .hlo import parse_collectives
+from .hlo_cost import module_cost, parse_module, _local_cost
+from .roofline import HW
+
+
+@dataclasses.dataclass
+class Segment:
+    name: str
+    kind: str       # "compute" | "collective"
+    t_cost: float   # seconds
+    overlapped: bool = False
+
+
+def extract_schedule(hlo_text: str, hw: Optional[Dict[str, float]] = None,
+                     trip_hint: Optional[float] = None) -> List[Segment]:
+    """Linearize the entry computation into costed segments.
+
+    Compute between consecutive collectives is merged into one segment whose
+    cost is max(flops/peak, bytes/hbm_bw) of the ops in between. Collectives
+    become 'collective' segments, flagged overlapped when asynchronous
+    (-start/-done with interleaved compute)."""
+    hw = hw or HW
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return []
+    segments: List[Segment] = []
+
+    def walk(comp_name: str, mult: float, depth: int = 0):
+        comp = comps.get(comp_name)
+        if comp is None or depth > 8:
+            return
+        pending_flops = 0.0
+        pending_bytes = 0.0
+        open_async: Dict[str, Segment] = {}
+
+        def flush_compute(label: str = "compute"):
+            nonlocal pending_flops, pending_bytes
+            if pending_flops or pending_bytes:
+                t = max(pending_flops / hw["peak_flops_bf16"],
+                        pending_bytes / hw["hbm_bw"]) * mult
+                segments.append(Segment(label, "compute", t))
+                pending_flops = pending_bytes = 0.0
+
+        from .hlo_cost import _dot_flops, _type_bytes, _operand_names, _TRIP_RE
+        from .hlo import COLLECTIVE_OPS as _COLL
+
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if oc == "while":
+                flush_compute()
+                trip = trip_hint or 1.0
+                m = _TRIP_RE.search(op.line)
+                if m:
+                    trip = float(m.group(1))
+                import re as _re
+
+                for ref in _re.findall(r"body=%?([\w.\-]+)", op.line):
+                    walk(ref, mult * trip, depth + 1)
+                continue
+            if oc == "fusion" or oc == "call":
+                import re as _re
+
+                for ref in _re.findall(r"(?:calls|to)=%?([\w.\-]+)", op.line):
+                    comp2 = comps.get(ref)
+                    if comp2 is not None:
+                        lc, _ = _local_cost(comp2)
+                        pending_flops += lc.flops
+                pending_bytes += _type_bytes(op.result_type)
+                continue
+            if base in _COLL:
+                if oc.endswith("-done"):
+                    seg = open_async.pop(op.name.replace("-done", ""), None)
+                    continue
+                flush_compute()
+                ops_parsed = parse_collectives(op.line)
+                wire = sum(o.wire_bytes for o in ops_parsed)
+                seg = Segment(
+                    name=f"{base}", kind="collective",
+                    t_cost=wire / hw["ici_bw"] * mult,
+                    overlapped=oc.endswith("-start"),
+                )
+                segments.append(seg)
+                continue
+            if oc == "dot":
+                pending_flops += _dot_flops(op, comp.types)
+                pending_bytes += _type_bytes(op.result_type)
+                continue
+            pending_bytes += _type_bytes(op.result_type)
+        flush_compute()
+
+    walk(entry, 1.0)
+    return segments
+
+
+@dataclasses.dataclass
+class SerializationReport:
+    t_compute: float
+    t_collective_total: float
+    t_collective_exposed: float     # serialized (not overlapped) collective time
+    n_collectives: int
+    n_overlapped: int
+
+    @property
+    def exposed_fraction(self) -> float:
+        if self.t_collective_total == 0:
+            return 0.0
+        return self.t_collective_exposed / self.t_collective_total
+
+    @property
+    def modeled_step_time(self) -> float:
+        return self.t_compute + self.t_collective_exposed
+
+    def summary(self) -> str:
+        return (
+            f"compute {self.t_compute * 1e3:.3f} ms, collective "
+            f"{self.t_collective_total * 1e3:.3f} ms total / "
+            f"{self.t_collective_exposed * 1e3:.3f} ms exposed "
+            f"({self.exposed_fraction * 100:.1f}% serialized; "
+            f"{self.n_overlapped}/{self.n_collectives} collectives async) -> "
+            f"modeled step {self.modeled_step_time * 1e3:.3f} ms"
+        )
+
+
+def serialization_report(segments: List[Segment]) -> SerializationReport:
+    t_comp = sum(s.t_cost for s in segments if s.kind == "compute")
+    colls = [s for s in segments if s.kind == "collective"]
+    t_coll = sum(s.t_cost for s in colls)
+    exposed = sum(s.t_cost for s in colls if not s.overlapped)
+    return SerializationReport(
+        t_compute=t_comp,
+        t_collective_total=t_coll,
+        t_collective_exposed=exposed,
+        n_collectives=len(colls),
+        n_overlapped=sum(1 for s in colls if s.overlapped),
+    )
+
+
+def to_events(segments: List[Segment], pid: int = 0,
+              time_scale: float = 1e9) -> List[Event]:
+    """Lay segments onto two lanes (compute=tid 0, ICI=tid 1) as Events so
+    the standard chrome-trace exporter and analyses apply."""
+    events: List[Event] = []
+    t_compute = 0.0   # frontier of compute lane (seconds)
+    t_ici = 0.0
+    for seg in segments:
+        dur = seg.t_cost
+        if seg.kind == "compute":
+            t0 = t_compute
+            t_compute += dur
+            events.append(Event(
+                name=seg.name, path=("step", seg.name), category="runtime",
+                t_start=int(t0 * time_scale), t_end=int((t0 + dur) * time_scale),
+                pid=pid, tid=0,
+            ))
+        else:
+            if seg.overlapped:
+                t0 = max(t_ici, t_compute - dur if t_compute > dur else t_ici)
+                t_ici = t0 + dur
+            else:
+                t0 = max(t_compute, t_ici)        # serializes both lanes
+                t_ici = t0 + dur
+                t_compute = t_ici
+            events.append(Event(
+                name=seg.name, path=("step", seg.name), category="collective",
+                t_start=int(t0 * time_scale), t_end=int(t_ici * time_scale),
+                pid=pid, tid=1,
+            ))
+    return events

@@ -1,0 +1,158 @@
+"""Caliper-analog region annotation API (paper §2.2, §4.1, Fig. 6).
+
+    from repro.core import regions
+
+    with regions.annotate("post-send", category="api"):
+        ...
+
+Regions nest; the full path is recorded per event, which is what lets the
+GraphFrame reconstruct the hierarchical context tree (paper Fig. 1).
+
+Categories mirror ExaMPI's runtime-configurable profiling groups (§4.2):
+profiling of each category can be switched on/off at runtime to bound
+overhead and trace size. The default category set used by the framework:
+
+    app         user/application level phases
+    api         public framework entry points (the "MPI procedure calls")
+    collective  communication primitives
+    runtime     internal machinery (dispatch, queues, checkpoint I/O)
+    data        input pipeline
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+import time
+from typing import Any, Dict, Iterator, Optional, Set
+
+from .collector import Collector, global_collector
+from .events import Event
+
+DEFAULT_CATEGORIES = ("app", "api", "collective", "runtime", "data")
+
+
+class ProfilingConfig:
+    """Runtime profiling configuration (which categories are live, fencing)."""
+
+    def __init__(self, categories: Optional[Set[str]] = None, fence: bool = False):
+        # None => everything enabled
+        self.categories: Optional[Set[str]] = categories
+        # fence=True => regions wrapping jax dispatch should block_until_ready
+        # ("fenced" timing measures completion; unfenced measures dispatch).
+        self.fence = fence
+
+    def enabled(self, category: str) -> bool:
+        return self.categories is None or category in self.categories
+
+
+_config = ProfilingConfig()
+_tls = threading.local()
+
+
+_UNSET = object()
+
+
+def configure(categories=_UNSET, fence=_UNSET) -> None:
+    """Runtime re-configuration, like ExaMPI's profiling level toggles.
+    ``categories=None`` enables everything; a set enables only those."""
+    global _config
+    cats = (_config.categories if categories is _UNSET
+            else (set(categories) if categories is not None else None))
+    fn = _config.fence if fence is _UNSET else bool(fence)
+    _config = ProfilingConfig(categories=cats, fence=fn)
+
+
+def config() -> ProfilingConfig:
+    return _config
+
+
+def _stack() -> list:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = []
+        _tls.stack = st
+    return st
+
+
+def current_path() -> tuple:
+    return tuple(name for name, _cat in _stack())
+
+
+def clock_ns() -> int:
+    return time.perf_counter_ns()
+
+
+@contextlib.contextmanager
+def annotate(
+    name: str,
+    category: str = "app",
+    collector: Optional[Collector] = None,
+    **attrs: Any,
+) -> Iterator[None]:
+    """Annotate a region of interest (Caliper's ``cali_begin/end_region``)."""
+    if not _config.enabled(category):
+        yield
+        return
+    col = collector or global_collector()
+    st = _stack()
+    st.append((name, category))
+    t0 = clock_ns()
+    try:
+        yield
+    finally:
+        t1 = clock_ns()
+        path = tuple(n for n, _c in st)
+        st.pop()
+        col.emit(
+            Event(
+                name=name,
+                path=path,
+                category=category,
+                t_start=t0,
+                t_end=t1,
+                pid=col.pid,
+                tid=col.normalized_tid(),
+                attrs=dict(attrs) if attrs else None,
+            )
+        )
+
+
+def profiled(name: Optional[str] = None, category: str = "app", **attrs: Any):
+    """Decorator form of :func:`annotate`."""
+
+    def deco(fn):
+        region_name = name or fn.__name__
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with annotate(region_name, category=category, **attrs):
+                return fn(*args, **kwargs)
+
+        return wrapper
+
+    return deco
+
+
+@contextlib.contextmanager
+def annotate_jax(
+    name: str,
+    category: str = "api",
+    collector: Optional[Collector] = None,
+    **attrs: Any,
+) -> Iterator[Dict[str, Any]]:
+    """Region for code that dispatches JAX computations.
+
+    If ``config().fence`` is set, the caller should place its outputs in the
+    yielded dict under ``"out"``; the region then blocks until those arrays
+    are ready, so the recorded time is *completion* time, not dispatch time
+    (the distinction the paper draws between MPI_Isend enqueue cost and the
+    progress thread's completion work).
+    """
+    box: Dict[str, Any] = {}
+    with annotate(name, category=category, collector=collector, **attrs):
+        yield box
+        if _config.fence and "out" in box:
+            import jax
+
+            jax.block_until_ready(box["out"])

@@ -1,0 +1,116 @@
+"""Three-term roofline model for compiled cells (TPU v5e target constants).
+
+    compute term    = FLOPs_per_device / peak_FLOP/s
+    memory term     = HBM_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / ICI_link_bw
+
+All inputs are per-device quantities from the SPMD-partitioned module (the
+compiled module *is* the per-device program), which is equivalent to the
+global/(chips * peak) formulation. The dominant term approximates the step
+time lower bound; its fraction of the total is the roofline fraction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# TPU v5e, per chip
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+    "hbm_gb": 16.0,
+}
+
+
+@dataclasses.dataclass
+class Roofline:
+    # raw per-device inputs
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    n_chips: int
+    # model facts
+    model_flops: Optional[float] = None      # 6*N*D (active params) global
+    hw: Dict[str, float] = dataclasses.field(default_factory=lambda: dict(HW))
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.hw["peak_flops_bf16"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hw["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / self.hw["ici_bw"]
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def t_overlapped(self) -> float:
+        """Ideal step time if all three engines fully overlap."""
+        return self.t_bound
+
+    @property
+    def t_serial(self) -> float:
+        """Step time if nothing overlaps."""
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs (global) — how much compiled compute is
+        'useful'; catches remat/redundancy waste. > 1 would indicate the
+        compiler found *fewer* flops than the model math (e.g. dropped MoE
+        experts); < 1 indicates remat / padding / dispatch overhead."""
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / (self.flops * self.n_chips)
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Model-FLOPs utilization at the roofline bound (the score: how
+        close the compiled step could get to peak if it hits the bound)."""
+        if not self.model_flops:
+            return None
+        per_dev_useful = self.model_flops / self.n_chips
+        return (per_dev_useful / self.hw["peak_flops_bf16"]) / self.t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bound": self.bound,
+            "t_bound": self.t_bound,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+    def summary(self) -> str:
+        uf = self.useful_flops_fraction
+        mfu = self.mfu_bound
+        return (
+            f"compute {self.t_compute * 1e3:9.3f} ms | "
+            f"memory {self.t_memory * 1e3:9.3f} ms | "
+            f"collective {self.t_collective * 1e3:9.3f} ms | "
+            f"bound={self.bound:10s} | "
+            f"useful={uf:.3f} | " if uf is not None else ""
+        ) + (f"mfu_bound={mfu:.3f}" if mfu is not None else "")

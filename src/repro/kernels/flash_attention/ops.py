@@ -1,0 +1,71 @@
+"""jit'd public wrapper: custom-VJP flash attention with GQA handling.
+
+``flash_attention(q, k, v)`` takes model-layout tensors (B, T, H, D) /
+(B, S, K, D) (K kv heads), expands GQA groups, transposes to the kernel
+layout, and differentiates through the Pallas bwd kernels. On non-TPU
+backends ``interpret=True`` runs the same kernel body for validation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bwd, flash_attention_fwd
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, block_q, block_k):
+    out, _ = flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_use_interpret())
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_k):
+    out, lse = flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_use_interpret())
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, out, lse, do, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_use_interpret())
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,                  # (B, T, H, D)
+    k: jax.Array,                  # (B, S, K, D), K | H
+    v: jax.Array,                  # (B, S, K, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    B, T, H, D = q.shape
+    K = k.shape[2]
+    assert H % K == 0, (H, K)
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = min(block_q, T)
+    bk = min(block_k, k.shape[1])
+    out = _flash(qt, kt, vt, causal, window, bq, bk)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Small-shape reference with materialized scores; the kernel (and the
+blockwise jnp path in models.attention) must match this to fp tolerance.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def mha_reference(
+    q: jax.Array,              # (B, T, H, D)
+    k: jax.Array,              # (B, S, H, D)   (same head count; GQA is
+    v: jax.Array,              #                 expanded by the caller)
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * scale
+    pos_q = jnp.arange(T)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", p.astype(v.dtype), v)

@@ -1,0 +1,12 @@
+"""jit'd wrapper for the selective-scan kernel (interpret on non-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import selective_scan
+
+
+def mamba_scan(x, dt, A, Bc, Cc, D, block_d: int = 512, block_t: int = 128):
+    return selective_scan(
+        x, dt, A, Bc, Cc, D, block_d=block_d, block_t=block_t,
+        interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the selective-scan kernel: naive sequential scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_reference(
+    x: jax.Array,        # (B, T, dI)  conv'd, silu'd inputs
+    dt: jax.Array,       # (B, T, dI)  softplus'd step sizes
+    A: jax.Array,        # (dI, N)     negative (A = -exp(A_log))
+    Bc: jax.Array,       # (B, T, N)
+    Cc: jax.Array,       # (B, T, N)
+    D: jax.Array,        # (dI,)
+) -> jax.Array:
+    B, T, dI = x.shape
+    N = A.shape[1]
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs                     # (B,dI),(B,dI),(B,N),(B,N)
+        dA = jnp.exp(dtt[..., None] * A)             # (B, dI, N)
+        dBx = (dtt * xt)[..., None] * bt[:, None, :]
+        h = dA * h + dBx
+        y = (h * ct[:, None, :]).sum(-1) + D * xt
+        return h, y
+
+    h0 = jnp.zeros((B, dI, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)                    # (B, T, dI)

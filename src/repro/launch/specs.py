@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every model input of every cell —
+weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import model as M
+
+I32 = jnp.int32
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    T = 1 if shape.is_decode else shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {}
+    if cfg.input_mode == "frames":
+        out["frames"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), dt)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, T, cfg.n_codebooks), I32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, T), I32)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, T), I32)
+    if cfg.input_mode == "tokens+image" and not shape.is_decode:
+        out["encoder_embeddings"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_len, cfg.d_model), dt)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All step inputs for one (arch x shape) cell.
+
+    train:   {params, opt_state, batch}
+    prefill: {params, batch}
+    decode:  {params, caches, batch, pos}
+    """
+    if shape.kind == "train":
+        params = M.param_shapes(cfg, jnp.float32)
+        opt = {
+            "m": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+            "v": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+            "step": jax.ShapeDtypeStruct((), I32),
+        }
+        return {"params": params, "opt_state": opt,
+                "batch": batch_specs(cfg, shape)}
+    params = M.param_shapes(cfg, jnp.dtype(cfg.dtype))   # serving weights
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch_specs(cfg, shape)}
+    caches = M.init_cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    return {
+        "params": params,
+        "caches": caches,
+        "batch": batch_specs(cfg, shape),
+        "pos": jax.ShapeDtypeStruct((), I32),
+    }

@@ -1,0 +1,156 @@
+"""One pattern position = pre-norm mixer + (optional cross-attn) + FFN."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LayerSpec, ModelConfig
+from . import attention, mamba, moe, xlstm
+from .common import ParamSpec, activation, rms_norm
+
+
+def mlp_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    E, F = cfg.d_model, cfg.d_ff
+    return {
+        "wg": ParamSpec((E, F), ("embed", "mlp")),
+        "wi": ParamSpec((E, F), ("embed", "mlp")),
+        "wo": ParamSpec((F, E), ("mlp", "embed"), init="scaled", scale=1.0),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    act = activation(cfg.act)
+    h = act(x @ params["wg"]) * (x @ params["wi"])
+    return h @ params["wo"]
+
+
+_MIXER_SPECS = {
+    "attn": lambda cfg: attention.attn_specs(cfg),
+    "mamba": lambda cfg: mamba.mamba_specs(cfg),
+    "mlstm": lambda cfg: xlstm.mlstm_specs(cfg),
+    "slstm": lambda cfg: xlstm.slstm_specs(cfg),
+}
+
+
+def block_specs(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, Any]:
+    out: Dict[str, Any] = {
+        "norm_mixer": ParamSpec((cfg.d_model,), (None,), init="zeros"),
+        "mixer": _MIXER_SPECS[spec.mixer](cfg) if spec.mixer != "none" else {},
+    }
+    if spec.cross_attn:
+        out["norm_cross"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        out["cross"] = attention.cross_attn_specs(cfg)
+    if spec.ffn == "mlp":
+        out["norm_ffn"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        out["ffn"] = mlp_specs(cfg)
+    elif spec.ffn == "moe":
+        out["norm_ffn"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        out["ffn"] = moe.moe_specs(cfg)
+    return out
+
+
+def block_cache_specs(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, seq_len: int
+) -> Dict[str, Any]:
+    """Abstract decode-cache entries for one pattern position."""
+    out: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        out["mixer"] = attention.cache_specs(cfg, spec, batch, seq_len)
+    elif spec.mixer == "mamba":
+        out["mixer"] = mamba.mamba_cache_specs(cfg, batch)
+    elif spec.mixer == "mlstm":
+        out["mixer"] = xlstm.mlstm_cache_specs(cfg, batch)
+    elif spec.mixer == "slstm":
+        out["mixer"] = xlstm.slstm_cache_specs(cfg, batch)
+    if spec.cross_attn:
+        # precomputed cross K/V over the encoder sequence
+        K, D = cfg.n_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+        out["cross_kv"] = {
+            "k": jax.ShapeDtypeStruct((batch, cfg.encoder_len, K, D), dt),
+            "v": jax.ShapeDtypeStruct((batch, cfg.encoder_len, K, D), dt),
+        }
+    return out
+
+
+def block_apply(
+    params: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    positions: jax.Array,
+    cache: Optional[Dict[str, Any]] = None,
+    enc: Optional[jax.Array] = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], Dict[str, jax.Array]]:
+    """Returns (x, new_cache, aux)."""
+    aux: Dict[str, jax.Array] = {}
+    new_cache: Dict[str, Any] = {}
+    h = rms_norm(x, params["norm_mixer"], cfg.norm_eps)
+    sub_cache = (cache or {}).get("mixer")
+    if spec.mixer == "attn":
+        out, nc = attention.attn_apply(
+            params["mixer"], h, cfg, spec, positions, cache=sub_cache, mode=mode)
+    elif spec.mixer == "mamba":
+        out, nc = mamba.mamba_apply(params["mixer"], h, cfg, cache=sub_cache,
+                                    mode=mode)
+    elif spec.mixer == "mlstm":
+        out, nc = xlstm.mlstm_apply(params["mixer"], h, cfg, cache=sub_cache,
+                                    mode=mode)
+    elif spec.mixer == "slstm":
+        # slstm block is self-contained (includes its own MLP + residuals)
+        out, nc = xlstm.slstm_apply(params["mixer"], h, cfg, cache=sub_cache,
+                                    mode=mode)
+    else:
+        out, nc = jnp.zeros_like(x), None
+    x = x + out
+    if nc is not None:
+        new_cache["mixer"] = nc
+
+    if spec.cross_attn:
+        assert enc is not None or (cache and "cross_kv" in cache)
+        h = rms_norm(x, params["norm_cross"], cfg.norm_eps)
+        if mode == "decode" and cache and "cross_kv" in cache:
+            out = _cross_from_cache(params["cross"], h, cache["cross_kv"], cfg)
+            new_cache["cross_kv"] = cache["cross_kv"]
+        else:
+            out = attention.cross_attn_apply(params["cross"], h, enc, cfg)
+            if mode == "prefill":
+                new_cache["cross_kv"] = _build_cross_kv(params["cross"], enc, cfg)
+        x = x + out
+
+    if spec.ffn in ("mlp", "moe"):
+        h = rms_norm(x, params["norm_ffn"], cfg.norm_eps)
+        if spec.ffn == "mlp":
+            out = mlp_apply(params["ffn"], h, cfg)
+        else:
+            out, aux = moe.moe_apply(params["ffn"], h, cfg)
+        x = x + out
+    return x, (new_cache or None), aux
+
+
+def _build_cross_kv(params, enc, cfg: ModelConfig):
+    B, N, _ = enc.shape
+    K, D = cfg.n_kv_heads, cfg.head_dim
+    k = (enc @ params["wk"]).reshape(B, N, K, D)
+    v = (enc @ params["wv"]).reshape(B, N, K, D)
+    if cfg.qk_norm:
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return {"k": k, "v": v}
+
+
+def _cross_from_cache(params, x, kv, cfg: ModelConfig):
+    B, T, E = x.shape
+    H, K, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    q = (x @ params["wq"]).reshape(B, T, K, G, D)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+    N = kv["k"].shape[1]
+    pos_k = jnp.arange(N, dtype=jnp.int32)
+    out = attention.decode_attention(q, kv["k"], kv["v"], pos_k,
+                                     jnp.int32(2**30))
+    out = out.reshape(B, T, H * D) @ params["wo"]
+    return jnp.tanh(params["gate"]).astype(out.dtype) * out

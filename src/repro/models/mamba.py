@@ -1,0 +1,157 @@
+"""Mamba-1 selective-state-space mixer (jamba's sequence layer).
+
+Forward uses a *chunked* selective scan: time is split into chunks; within
+a chunk the recurrence h_t = dA_t * h_{t-1} + dBx_t runs as an associative
+scan (parallel), across chunks a lax.scan carries the (B, d_inner, d_state)
+state. This bounds the materialized (B, chunk, d_inner, d_state) tensor —
+the full (B, T, d_inner, d_state) would be terabytes at 4k+ contexts.
+The Pallas kernel in repro.kernels.mamba_scan implements the same chunking
+with VMEM-resident state; this jnp path is its oracle and the dry-run path.
+
+Decode is a single recurrence step against a carried (h, conv tail) cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import ParamSpec
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    return d_inner, m.d_state, m.d_conv, m.dt_rank_for(cfg.d_model)
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    E = cfg.d_model
+    dI, N, dC, R = _dims(cfg)
+    return {
+        "in_proj": ParamSpec((E, 2 * dI), ("embed", "inner")),
+        "conv_w": ParamSpec((dC, dI), (None, "inner"), init="normal", scale=0.1),
+        "conv_b": ParamSpec((dI,), ("inner",), init="zeros"),
+        "x_proj": ParamSpec((dI, R + 2 * N), ("inner", None)),
+        "dt_w": ParamSpec((R, dI), (None, "inner")),
+        "dt_b": ParamSpec((dI,), ("inner",), init="const", scale=-4.6),  # softplus^-1(0.01)
+        "A_log": ParamSpec((dI, N), ("inner", "state"), init="mamba_a",
+                           dtype=jnp.float32),
+        "D": ParamSpec((dI,), ("inner",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamSpec((dI, E), ("inner", "embed"), init="scaled", scale=1.0),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over time. x: (B, T, dI); w: (dC, dI)."""
+    dC = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (dC - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(dC))
+    return out + b
+
+
+def _ssm_chunked(dA: jax.Array, dBx: jax.Array, h0: jax.Array,
+                 chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """Run h_t = dA_t*h_{t-1} + dBx_t. dA/dBx: (B, T, dI, N) f32 (chunk-built
+    lazily by the caller via scan); here inputs are already per-chunk.
+
+    Returns (h_all (B, T, dI, N), h_final)."""
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, a2 * b1 + b2
+
+    a, bb = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = a * h0[:, None] + bb
+    return h, h[:, -1]
+
+
+def mamba_apply(
+    params: Dict[str, jax.Array],
+    x: jax.Array,                            # (B, T, E)
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    mode: str = "train",
+    chunk: int = 128,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, T, E = x.shape
+    dI, N, dC, R = _dims(cfg)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (dI, N)
+
+    if mode == "decode":
+        assert cache is not None and T == 1
+        xz = x @ params["in_proj"]
+        xin, z = jnp.split(xz, 2, axis=-1)
+        conv_tail = cache["conv"]                               # (B, dC-1, dI)
+        xc = _causal_conv(xin, params["conv_w"], params["conv_b"], tail=conv_tail)
+        new_tail = jnp.concatenate([conv_tail[:, 1:], xin], axis=1)
+        xc = jax.nn.silu(xc)
+        dt, Bc, Cc = _project(params, xc, R, N)                 # (B,1,*)
+        dA = jnp.exp(dt[..., None] * A)                         # (B,1,dI,N)
+        dBx = (dt * xc)[..., None] * Bc[:, :, None, :]
+        h = dA[:, 0] * cache["h"] + dBx[:, 0]                   # (B,dI,N)
+        y = (h * Cc[:, 0, None, :]).sum(-1) + params["D"] * xc[:, 0]
+        y = (y[:, None] * jax.nn.silu(z)).astype(x.dtype)
+        out = y @ params["out_proj"]
+        return out, {"h": h, "conv": new_tail}
+
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xin, params["conv_w"], params["conv_b"]))
+    # SP boundary: the chunked scan slices the time dim; keep it gathered
+    # here (d_inner carries the model sharding) or GSPMD emits collectives
+    # inside every chunk step.
+    from ..sharding.rules import constrain
+
+    xc = constrain(xc, ("batch", None, "inner"))
+    z = constrain(z, ("batch", None, "inner"))
+    q = min(chunk, T)
+    pad = -T % q
+    if pad:
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p = xc
+    n_chunks = xc_p.shape[1] // q
+
+    def chunk_step(h0, xc_c):                                   # xc_c: (B,q,dI)
+        dt, Bc, Cc = _project(params, xc_c, R, N)
+        dA = jnp.exp(dt[..., None] * A)
+        dBx = (dt * xc_c)[..., None] * Bc[:, :, None, :]
+        h_all, h_last = _ssm_chunked(dA, dBx, h0, q)
+        y = (h_all * Cc[:, :, None, :]).sum(-1) + params["D"] * xc_c
+        return h_last, y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, dI, N), jnp.float32)
+    xs = jnp.moveaxis(xc_p.reshape(B, n_chunks, q, dI), 1, 0)
+    h_last, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n_chunks * q, dI)[:, :T]
+    y = y * jax.nn.silu(z)
+    out = y.astype(x.dtype) @ params["out_proj"]
+
+    new_cache = None
+    if mode == "prefill":
+        # last dC-1 raw conv inputs (zero-padded if T < dC-1)
+        tail = jnp.pad(xin, ((0, 0), (dC - 1, 0), (0, 0)))[:, -(dC - 1):]
+        new_cache = {"h": h_last, "conv": tail}
+    return out, new_cache
+
+
+def _project(params, xc, R, N):
+    x_dbl = (xc @ params["x_proj"]).astype(jnp.float32)
+    dt_low, Bc, Cc = jnp.split(x_dbl, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ params["dt_w"].astype(jnp.float32)
+                         + params["dt_b"].astype(jnp.float32))
+    return dt, Bc, Cc
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    dI, N, dC, _ = _dims(cfg)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, dI, N), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, dC - 1, dI), jnp.dtype(cfg.dtype)),
+    }

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded dispatch.
+
+Dispatch uses gather/scatter (sort-free GShard-style slots) instead of the
+classic (tokens, experts, capacity) one-hot einsum: the one-hot form adds
+O(T*E*C*d) dispatch flops (it *doubles* MoE compute for fine-grained
+configs like deepseek-64e); gathers add none. Tokens are processed in
+groups (scan) to bound the (experts, capacity, d_model) working set.
+
+Expert weights carry the "experts" logical axis -> sharded over the
+"model" mesh axis (expert parallelism). Under GSPMD the gathers lower to
+all-to-all-ish collectives; the explicit shard_map EP path in
+repro.comm is the §Perf alternative.
+
+Shared experts (deepseek) are a dense MLP added to every token's output.
+Aux losses: switch load-balance + router z-loss, returned for logging.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import ParamSpec, activation
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    m = cfg.moe
+    E, F = cfg.d_model, m.d_expert
+    Ne = cfg.padded_n_experts       # dead pad experts: router masks them
+    specs = {
+        "router": ParamSpec((E, Ne), ("embed", "experts"), dtype=jnp.float32),
+        "wg": ParamSpec((Ne, E, F), ("experts", "embed", "expert_mlp")),
+        "wi": ParamSpec((Ne, E, F), ("experts", "embed", "expert_mlp")),
+        "wo": ParamSpec((Ne, F, E), ("experts", "expert_mlp", "embed"),
+                        init="scaled", scale=1.0),
+    }
+    if m.n_shared:
+        Fs = F * m.n_shared
+        specs["shared_wg"] = ParamSpec((E, Fs), ("embed", "mlp"))
+        specs["shared_wi"] = ParamSpec((E, Fs), ("embed", "mlp"))
+        specs["shared_wo"] = ParamSpec((Fs, E), ("mlp", "embed"),
+                                       init="scaled", scale=1.0)
+    return specs
+
+
+def _route(logits: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """(gates, indices): softmax over the selected top-k (renormalized)."""
+    vals, idx = jax.lax.top_k(logits, top_k)          # (T, k)
+    gates = jax.nn.softmax(vals, axis=-1)
+    return gates, idx
+
+
+def _group_capacity(group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = math.ceil(group * m.top_k / m.n_experts * m.capacity_factor)
+    return max(m.top_k, min(group, -(-c // 4) * 4))   # mult of 4, sane bounds
+
+
+def moe_apply(
+    params: Dict[str, jax.Array],
+    x: jax.Array,                                     # (B, T, E)
+    cfg: ModelConfig,
+    token_group: int = 4096,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    m = cfg.moe
+    act = activation(cfg.act)
+    B, T, E = x.shape
+    Ne, k = cfg.padded_n_experts, m.top_k
+    n_real = m.n_experts
+    # SP boundary: token grouping slices the (batch*time) dim, so the
+    # sequence must be gathered here (expert dim carries the model axis)
+    from ..sharding.rules import constrain
+
+    x = constrain(x, ("batch", None, None))
+    flat = x.reshape(B * T, E)
+    n_tok = flat.shape[0]
+    group = min(token_group, n_tok)
+    pad = -n_tok % group
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    n_groups = flat.shape[0] // group
+    C = _group_capacity(group, cfg)
+    xg = flat.reshape(n_groups, group, E)
+
+    def one_group(carry, xt):                         # xt: (group, E)
+        logits = (xt.astype(jnp.float32) @ params["router"])   # (g, Ne)
+        if Ne != n_real:
+            logits = jnp.where(jnp.arange(Ne) < n_real, logits, -1e30)
+        gates, idx = _route(logits, k)                # (g, k)
+        # position of each (token, choice) inside its expert
+        onehot = jax.nn.one_hot(idx, Ne, dtype=jnp.int32)       # (g, k, Ne)
+        flat_oh = onehot.reshape(group * k, Ne)
+        pos = jnp.cumsum(flat_oh, axis=0) - flat_oh             # exclusive
+        pos = (pos * flat_oh).sum(-1).reshape(group, k)         # (g, k)
+        keep = pos < C
+        # scatter token ids into (Ne, C) slots; empty slots point to a
+        # zero row (index `group`, provided by padding xt below)
+        slot_tok = jnp.full((Ne, C), group, jnp.int32)
+        e_idx = idx.reshape(-1)
+        c_idx = jnp.where(keep, pos, C).reshape(-1)   # dropped -> col C (oob)
+        tok_id = jnp.tile(jnp.arange(group)[:, None], (1, k)).reshape(-1)
+        slot_tok = slot_tok.at[e_idx, jnp.minimum(c_idx, C - 1)].set(
+            jnp.where(c_idx < C, tok_id, group), mode="drop"
+        )
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, E), xt.dtype)], 0)
+        xe = xt_pad[slot_tok]                          # (Ne, C, E)
+        h = act(jnp.einsum("ecd,edf->ecf", xe, params["wg"])) * jnp.einsum(
+            "ecd,edf->ecf", xe, params["wi"]
+        )
+        ye = jnp.einsum("ecf,efd->ecd", h, params["wo"])        # (Ne, C, E)
+        # gather back per (token, choice)
+        safe_pos = jnp.minimum(pos, C - 1)
+        out_pair = ye[idx, safe_pos]                   # (g, k, E)
+        w = (gates * keep).astype(ye.dtype)
+        yt = jnp.einsum("gk,gke->ge", w, out_pair)
+        # aux stats
+        frac_tokens = flat_oh.reshape(group, k, Ne).sum((0, 1)) / (group * k)
+        probs = jax.nn.softmax(logits, axis=-1).mean(0)
+        lb = (frac_tokens * probs).sum() * n_real
+        z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        dropped = 1.0 - keep.mean()
+        return carry, (yt, jnp.stack([lb, z, dropped]))
+
+    _, (y, stats) = jax.lax.scan(one_group, None, xg)
+    y = y.reshape(-1, E)[:n_tok].reshape(B, T, E)
+    lb, z, dropped = jnp.mean(stats, axis=0)
+    if m.n_shared:
+        hs = act(flat[:n_tok] @ params["shared_wg"]) * (
+            flat[:n_tok] @ params["shared_wi"]
+        )
+        y = y + (hs @ params["shared_wo"]).reshape(B, T, E)
+    aux = {
+        "moe_load_balance": lb,
+        "moe_router_z": z,
+        "moe_dropped_frac": dropped,
+        "moe_aux_loss": m.router_aux_weight * lb + m.router_z_weight * z,
+    }
+    return y, aux

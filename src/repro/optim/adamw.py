@@ -1,0 +1,119 @@
+"""AdamW with decoupled weight decay, global-norm clipping and schedules.
+
+Optimizer state (m, v) is f32 and carries the same sharding as the
+parameters (FSDP over "data" + TP over "model"), so per-chip state is
+bounded regardless of model size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"           # constant | cosine | wsd (minicpm)
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    decay_frac: float = 0.1            # wsd: final fraction of steps decaying
+    min_lr_ratio: float = 0.1
+
+
+def schedule_fn(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, step / max(1, cfg.warmup_steps))
+        if cfg.schedule == "constant":
+            return cfg.lr * warm
+        if cfg.schedule == "wsd":
+            # Warmup-Stable-Decay (MiniCPM): constant plateau then a short
+            # (decay_frac) 1-sqrt decay to min_lr_ratio.
+            decay_steps = cfg.total_steps * cfg.decay_frac
+            start = cfg.total_steps - decay_steps
+            frac = jnp.clip((step - start) / jnp.maximum(decay_steps, 1), 0, 1)
+            decay = 1.0 - (1.0 - cfg.min_lr_ratio) * jnp.sqrt(frac)
+            return cfg.lr * warm * decay
+        # cosine
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+        cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return cfg.lr * warm * cos
+
+    return fn
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _decay_mask(path) -> bool:
+    """True if weight decay applies (matrices; not norms/biases/scalars)."""
+    name = str(path[-1].key) if path else ""
+    if name in ("A_log", "D", "dt_b", "b_if", "b_gates", "gate", "skip"):
+        return False
+    return "norm" not in name
+
+
+def apply_updates(
+    params: Dict[str, Any],
+    grads: Dict[str, Any],
+    state: Dict[str, Any],
+    cfg: AdamWConfig,
+) -> Tuple[Dict[str, Any], Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = schedule_fn(cfg)(step)
+    gnorm = _global_norm(grads)
+    scale = jnp.where(
+        (cfg.clip_norm is not None) & (gnorm > (cfg.clip_norm or 1.0)),
+        (cfg.clip_norm or 1.0) / jnp.maximum(gnorm, 1e-12),
+        1.0,
+    ) if cfg.clip_norm is not None else jnp.float32(1.0)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m, v
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, state["m"], state["v"])
+    # unzip the (p, m, v) tuples
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,100 @@
+"""jit-able step functions: train, prefill, decode (serve)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+from ..optim import adamw
+from .losses import chunked_ce_loss
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    microbatches: int = 1):
+    """Training step; ``microbatches > 1`` runs gradient accumulation via
+    a scan over batch slices, dividing peak activation memory by N (the
+    grads/optimizer update happen once, in f32, fully sharded)."""
+
+    def loss_fn(p, batch):
+        hidden, aux, _ = M.forward(p, batch, cfg, mode="train")
+        lm_head = p["lm_head"].astype(jnp.dtype(cfg.dtype))
+        loss, metrics = chunked_ce_loss(hidden, lm_head, batch["labels"], cfg)
+        total = loss + aux[0]
+        metrics = dict(metrics)
+        metrics["moe_aux"] = aux[0]
+        metrics["moe_load_balance"] = aux[1]
+        return total, metrics
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            from ..sharding.rules import constrain
+
+            def split(x):
+                y = x.reshape((microbatches, x.shape[0] // microbatches)
+                              + x.shape[1:])
+                return constrain(y, (None, "batch") + (None,) * (y.ndim - 2))
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def one(carry, mb):
+                gsum, loss_sum = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, loss_sum + loss), metrics
+
+            (gsum, loss_sum), metrics_all = jax.lax.scan(
+                one, (zeros, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        hidden, aux, _ = M.forward(params, batch, cfg, mode="train")
+        lm_head = params["lm_head"].astype(jnp.dtype(cfg.dtype))
+        loss, metrics = chunked_ce_loss(hidden, lm_head, batch["labels"], cfg)
+        metrics["loss"] = loss + aux[0]
+        return metrics
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        hidden, _aux, caches = M.forward(params, batch, cfg, mode="prefill")
+        lm_head = params["lm_head"].astype(jnp.dtype(cfg.dtype))
+        last = hidden[:, -1]
+        logits = (last @ lm_head).astype(jnp.float32)
+        B = logits.shape[0]
+        logits = logits.reshape(B, cfg.n_codebooks, cfg.padded_vocab_size)
+        return M.mask_pad_logits(logits, cfg), caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, sample: str = "greedy"):
+    def decode_step(params, caches, batch, pos):
+        logits, new_caches = M.decode_step(params, caches, batch, pos, cfg)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, ncb)
+        return logits, next_token, new_caches
+
+    return decode_step

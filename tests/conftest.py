@@ -1,0 +1,27 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet with N forced host devices (the parent process
+    keeps its single device, per the dry-run isolation rule)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + ":" + REPO
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout, cwd=REPO)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:{out.stdout[-3000:]}\n"
+            f"STDERR:{out.stderr[-3000:]}")
+    return out.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_in_subprocess

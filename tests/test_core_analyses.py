@@ -1,0 +1,75 @@
+"""Automated timeline analyses: each detector on synthetic traces, plus
+the contention property (overlap <-> finding) under hypothesis."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import analyses
+from repro.core.events import Event
+
+
+def ev(name, t0, t1, tid=0, pid=0, cat="app"):
+    return Event(name, (name,), cat, t0, t1, pid=pid, tid=tid)
+
+
+def test_large_waits():
+    base = [ev("MPI_Barrier", i * 100, i * 100 + 10, cat="collective")
+            for i in range(10)]
+    outlier = ev("MPI_Barrier", 2000, 2500, cat="collective")
+    out = analyses.large_waits(base + [outlier], factor=3.0)
+    assert len(out) == 1
+    assert out[0].events[0] is outlier
+
+
+def test_contention_pairwise():
+    a = ev("lock", 0, 100, tid=0)
+    b = ev("lock", 50, 150, tid=1)     # overlaps on another thread
+    c = ev("lock", 200, 300, tid=1)    # disjoint
+    out = analyses.contention([a, b, c])
+    assert len(out) == 1
+    assert out[0].severity == 50e-9
+
+
+def test_contention_same_thread_not_flagged():
+    a = ev("lock", 0, 100, tid=0)
+    b = ev("lock", 50, 150, tid=0)     # nested/same thread: no contention
+    assert analyses.contention([a, b]) == []
+
+
+def test_irregular():
+    evs = [ev("step", i * 100, i * 100 + 10) for i in range(8)]
+    evs.append(ev("step", 1000, 1100))
+    out = analyses.irregular(evs, factor=3.0)
+    assert len(out) == 1
+
+
+def test_gaps():
+    evs = [ev("a", 0, 10), ev("b", 5_000_000, 5_000_010)]
+    out = analyses.gaps(evs, min_gap_ns=1_000_000)
+    assert len(out) == 1
+    assert "gap" in str(out[0])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=1000),
+    st.integers(min_value=1, max_value=1000),
+    st.integers(min_value=0, max_value=1000),
+    st.integers(min_value=1, max_value=1000),
+)
+def test_contention_iff_overlap(s1, d1, s2, d2):
+    a = ev("lock", s1, s1 + d1, tid=0)
+    b = ev("lock", s2, s2 + d2, tid=1)
+    out = analyses.contention([a, b])
+    overlap = max(0, min(a.t_end, b.t_end) - max(a.t_start, b.t_start))
+    if overlap > 0:
+        assert len(out) == 1
+        assert abs(out[0].severity - overlap * 1e-9) < 1e-15
+    else:
+        assert out == []
+
+
+def test_analyze_all_smoke():
+    evs = [ev("x", 0, 10), ev("x", 20, 30), ev("x", 40, 5000)]
+    out = analyses.analyze_all(evs, min_gap_ns=10**9)
+    assert isinstance(out, list)
+    assert analyses.report(out)

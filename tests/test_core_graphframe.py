@@ -1,0 +1,113 @@
+"""GraphFrame properties (hypothesis) + Hatchet-style behaviors."""
+import math
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.events import Event
+from repro.core.graphframe import GraphFrame
+
+names = st.sampled_from(["a", "b", "c", "d", "e"])
+paths = st.lists(names, min_size=1, max_size=4).map(tuple)
+durations = st.integers(min_value=1, max_value=10**9)
+
+
+def make_events(path_durs):
+    evs = []
+    t = 0
+    for path, dur in path_durs:
+        evs.append(Event(name=path[-1], path=path, category="app",
+                         t_start=t, t_end=t + dur))
+        t += dur
+    return evs
+
+
+events_strategy = st.lists(st.tuples(paths, durations), min_size=1,
+                           max_size=40)
+
+
+@settings(max_examples=60, deadline=None)
+@given(events_strategy)
+def test_ratio_of_self_is_one(path_durs):
+    gf = GraphFrame.from_events(make_events(path_durs))
+    ratio = gf.div(gf, metric="mean")
+    for path, node in ratio.walk():
+        if math.isnan(gf.value(path, "mean")):
+            continue                      # intermediate node, no recordings
+        v = node.metric("value")
+        assert math.isclose(v, 1.0, rel_tol=1e-9), (path, v)
+
+
+@settings(max_examples=60, deadline=None)
+@given(events_strategy)
+def test_mean_between_min_and_max(path_durs):
+    gf = GraphFrame.from_events(make_events(path_durs))
+    for path, node in gf.walk():
+        if node.metrics.get("count", 0):
+            assert node.metrics["min"] - 1e-12 <= node.mean
+            assert node.mean <= node.metrics["max"] + 1e-12
+            assert node.var >= -1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(events_strategy)
+def test_json_roundtrip(path_durs):
+    gf = GraphFrame.from_events(make_events(path_durs))
+    gf2 = GraphFrame.from_json(gf.to_json())
+    assert set(gf.paths()) == set(gf2.paths())
+    for path in gf.paths():
+        a, b = gf.value(path, "mean"), gf2.value(path, "mean")
+        if math.isnan(a):
+            assert math.isnan(b)
+            continue
+        assert math.isclose(a, b, rel_tol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(events_strategy, events_strategy)
+def test_sub_add_roundtrip(pd1, pd2):
+    g1 = GraphFrame.from_events(make_events(pd1))
+    g2 = GraphFrame.from_events(make_events(pd2))
+    common = set(g1.paths()) & set(g2.paths())
+    diff = g1.sub(g2, metric="mean")
+    for path in common:
+        a, b = g1.value(path, "mean"), g2.value(path, "mean")
+        if math.isnan(a) or math.isnan(b):
+            continue                      # intermediate nodes
+        v = diff.value(path, "value") + b
+        assert math.isclose(v, a, rel_tol=1e-9, abs_tol=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(events_strategy, min_size=2, max_size=5))
+def test_aggregate_mean_bounded_by_runs(runs):
+    frames = [GraphFrame.from_events(make_events(r)) for r in runs]
+    agg = GraphFrame.aggregate(frames, metric="mean", how="mean")
+    for path, node in agg.walk():
+        per_run = [f.value(path, "mean") for f in frames
+                   if not math.isnan(f.value(path, "mean"))]
+        if not per_run:
+            continue                      # intermediate node in every run
+        assert min(per_run) - 1e-9 <= node.metric("value") <= max(per_run) + 1e-9
+
+
+def test_hotspots_ordering():
+    evs = make_events([(("root", "slow"), 100), (("root", "fast"), 1)])
+    gf = GraphFrame.from_events(evs)
+    ratio = gf.div(gf)                       # all ones
+    hot = gf.hotspots(n=3, metric="mean", ascending=True, leaf_only=True)
+    assert hot[0][0] == ("root", "fast")
+    hot_desc = gf.hotspots(n=3, metric="mean", ascending=False,
+                           leaf_only=True)
+    assert hot_desc[0][0] == ("root", "slow")
+
+
+def test_tree_render_matches_paper_shape():
+    evs = make_events([
+        (("bench_comm", "post-send", "MPI_Isend"), 10),
+        (("bench_comm", "wait-recv", "MPI_Waitany"), 20),
+    ])
+    gf = GraphFrame.from_events(evs)
+    text = gf.tree(metric="mean", fmt="{:.1f}")
+    assert "bench_comm" in text and "MPI_Isend" in text
+    assert "└─" in text or "├─" in text

@@ -1,0 +1,86 @@
+"""Region annotation + collector: nesting, categories, thread safety."""
+import threading
+import time
+
+from repro.core import annotate, configure, regions
+from repro.core.collector import Collector, reset_global_collector
+
+
+def setup_function(_fn):
+    configure(categories=None)
+    reset_global_collector()
+
+
+def test_nesting_paths():
+    col = reset_global_collector()
+    with annotate("a"):
+        with annotate("b"):
+            with annotate("c", category="api"):
+                pass
+        with annotate("d"):
+            pass
+    evs = col.drain()
+    paths = sorted(e.key for e in evs)
+    assert paths == ["a", "a/b", "a/b/c", "a/d"]
+    inner = [e for e in evs if e.name == "c"][0]
+    outer = [e for e in evs if e.name == "a"][0]
+    assert inner.t_start >= outer.t_start
+    assert inner.t_end <= outer.t_end
+    assert inner.category == "api"
+
+
+def test_category_toggle_runtime():
+    col = reset_global_collector()
+    configure(categories={"api"})
+    with annotate("app_region", category="app"):
+        with annotate("api_region", category="api"):
+            pass
+    configure(categories=None)
+    evs = col.drain()
+    names = [e.name for e in evs]
+    assert "api_region" in names and "app_region" not in names
+    # disabled parents do not appear in child paths
+    assert [e for e in evs if e.name == "api_region"][0].path == ("api_region",)
+
+
+def test_decorator():
+    col = reset_global_collector()
+
+    @regions.profiled(category="runtime")
+    def work():
+        return 41 + 1
+
+    assert work() == 42
+    evs = col.drain()
+    assert evs[0].name == "work" and evs[0].category == "runtime"
+
+
+def test_thread_safety_and_tids():
+    col = reset_global_collector()
+    n_threads, n_events = 8, 200
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i):
+        barrier.wait()
+        for k in range(n_events):
+            with annotate(f"t{i}", category="app"):
+                pass
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    evs = col.drain()
+    assert len(evs) == n_threads * n_events
+    tids = {e.tid for e in evs}
+    assert len(tids) == n_threads
+
+
+def test_durations_are_positive_and_ordered():
+    col = reset_global_collector()
+    with annotate("outer"):
+        time.sleep(0.01)
+    ev = col.drain()[0]
+    assert ev.duration >= 10_000_000  # >= 10ms in ns

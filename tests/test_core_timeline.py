@@ -1,0 +1,63 @@
+"""Chrome trace round-trip (hypothesis) + merge semantics."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.events import Event
+from repro.core import timeline as tl
+
+ev_strategy = st.builds(
+    Event,
+    name=st.sampled_from(["a", "b", "c"]),
+    path=st.lists(st.sampled_from(["a", "b", "c"]), min_size=1,
+                  max_size=3).map(tuple),
+    category=st.sampled_from(["app", "api", "collective"]),
+    t_start=st.integers(min_value=0, max_value=10**12).map(
+        lambda x: x * 1000),          # chrome json stores microseconds
+    t_end=st.just(0),
+    pid=st.integers(min_value=0, max_value=4),
+    tid=st.integers(min_value=0, max_value=4),
+).map(lambda e: Event(e.name, e.path, e.category, e.t_start,
+                      e.t_start + 5_000_000, e.pid, e.tid))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(ev_strategy, min_size=1, max_size=30))
+def test_chrome_roundtrip(events):
+    # name must equal last path element for exact roundtrip
+    events = [Event(e.path[-1], e.path, e.category, e.t_start, e.t_end,
+                    e.pid, e.tid) for e in events]
+    trace = tl.to_chrome_trace(events)
+    back = tl.from_chrome_trace(trace)
+    assert len(back) == len(events)
+    orig = sorted((e.key, e.t_start, e.t_end, e.pid, e.tid, e.category)
+                  for e in events)
+    rt = sorted((e.key, e.t_start, e.t_end, e.pid, e.tid, e.category)
+                for e in back)
+    assert orig == rt
+
+
+def test_merge_keeps_pid_lanes():
+    e0 = Event("x", ("x",), "app", 0, 1000, pid=0)
+    e1 = Event("y", ("y",), "app", 0, 1000, pid=1)
+    t0 = tl.to_chrome_trace([e0])
+    t1 = tl.to_chrome_trace([e1])
+    merged = tl.merge_traces([t0, t1])
+    pids = {r["pid"] for r in merged["traceEvents"] if r.get("ph") == "X"}
+    assert pids == {0, 1}
+
+
+def test_metadata_records_present():
+    e0 = Event("x", ("x",), "app", 0, 1000, pid=3, tid=1)
+    trace = tl.to_chrome_trace([e0], thread_names={1: "progress thread"})
+    meta = [r for r in trace["traceEvents"] if r.get("ph") == "M"]
+    assert any(r["name"] == "process_name" for r in meta)
+    assert any(r["args"]["name"] == "progress thread" for r in meta
+               if r["name"] == "thread_name")
+
+
+def test_save_load(tmp_path):
+    e0 = Event("x", ("x",), "app", 0, 1000)
+    trace = tl.to_chrome_trace([e0])
+    p = str(tmp_path / "t.json.gz")
+    tl.save_trace(trace, p)
+    assert tl.load_trace(p) == trace
