@@ -1,0 +1,18 @@
+PYTHON ?= python
+
+.PHONY: verify test bench-match tour-timeline tour-match
+
+verify:
+	./scripts/verify.sh
+
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+bench-match:
+	PYTHONPATH=src $(PYTHON) benchmarks/matching_sweep.py
+
+tour-timeline:
+	PYTHONPATH=src:. $(PYTHON) examples/timeline_tour.py
+
+tour-match:
+	PYTHONPATH=src:. $(PYTHON) examples/matching_tour.py

@@ -40,8 +40,8 @@ def main():
     backend = get_backend(args.backend)
     n = args.devices
     dims = {8: (2, 2, 2), 4: (2, 2, 1), 2: (2, 1, 1), 1: (1, 1, 1)}[n]
-    mesh = jax.make_mesh(dims, ("x", "y", "z"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.core.compat import make_mesh
+    mesh = make_mesh(dims, ("x", "y", "z"))
     edge = args.box
     global_shape = (dims[0] * edge, dims[1] * edge, dims[2] * edge)
     sharding = NamedSharding(mesh, P("x", "y", "z"))

@@ -1,0 +1,145 @@
+"""Matching-engine sweep: the paper's second profiling method, end to end.
+
+    PYTHONPATH=src:. python benchmarks/matching_sweep.py
+
+Reproduces the queue-depth-vs-message-count figures: for each engine mode
+(fixed ``binned``, seeded-defect ``linear`` and ``leaky_umq``),
+
+1. sweeps the number of outstanding posted receives and records the mean
+   posted-receive-queue (PRQ) traversal depth per arrival — the curve
+   that is flat for a binned engine and linear for the defective one;
+2. drives the comm layer's collective decompositions through a
+   :class:`repro.match.Fabric` (ring all-reduce / all-gather, all-to-all,
+   halo-style permutes) to generate a realistic expected/unexpected mix;
+3. snapshots the counters into Event records and runs
+   ``core.analyses.analyze_all`` — the defect modes must be flagged
+   (``long_traversal`` / ``umq_flood``), the fixed mode must be clean.
+
+Exit status is non-zero if the acceptance conditions fail, so this file
+doubles as a regression gate. Results are saved under results/bench/.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import json
+from typing import Dict, List
+
+from repro.core import analyses
+from repro.core.counters import CounterRegistry
+from repro.match import Fabric, MatchEngine
+
+OUTSTANDING = (64, 256, 1024, 2048)
+DEFECT_KINDS = ("long_traversal", "umq_flood")
+
+
+def prq_depth_sweep(mode: str) -> List[Dict[str, float]]:
+    """Mean PRQ traversal depth vs number of outstanding receives.
+
+    Receives are posted for distinct tags, then arrivals are delivered in
+    reverse tag order — the adversarial (but legal) order for a linear
+    queue, and a non-event for a binned one."""
+    rows = []
+    for k in OUTSTANDING:
+        reg = CounterRegistry()
+        eng = MatchEngine(mode=mode, registry=reg)
+        for t in range(k):
+            eng.post_recv(src=t % 7, tag=t)
+        for t in reversed(range(k)):
+            eng.arrive(src=t % 7, tag=t)
+        depth = reg.drain()["match.prq.traversal_depth"]
+        rows.append({"outstanding": k, "mean_depth": depth.mean,
+                     "max_depth": depth.vmax})
+    return rows
+
+
+def fabric_workload(mode: str, rounds: int = 30) -> CounterRegistry:
+    """Collective traffic through the p2p decomposition, plus one
+    many-outstanding-receives burst per round (the paper's growing
+    pending-request load, Fig. 10)."""
+    reg = CounterRegistry()
+    fab = Fabric(mode=mode, registry=reg)
+    for r in range(rounds):
+        fab.all_reduce(16, nbytes=1 << 20)
+        fab.all_gather(16, nbytes=1 << 19)
+        fab.all_to_all(8, nbytes=1 << 18)
+        fab.ppermute([(i, (i + 1) % 8) for i in range(8)],
+                     nbytes=1 << 16, tag=r)
+        # burst: rank 0 posts a pile of receives, arrivals drain in reverse
+        eng = fab.engine(0)
+        burst = 256
+        for t in range(burst):
+            eng.post_recv(src=1, tag=10_000 + t)
+        for t in reversed(range(burst)):
+            eng.arrive(src=1, tag=10_000 + t)
+    return reg
+
+
+def main() -> int:
+    failures: List[str] = []
+    results = {"sweep": {}, "findings": {}}
+
+    print("== PRQ traversal depth vs outstanding receives ==")
+    print("mode,outstanding,mean_depth,max_depth")
+    sweeps = {}
+    for mode in ("linear", "binned"):
+        rows = prq_depth_sweep(mode)
+        sweeps[mode] = {r["outstanding"]: r for r in rows}
+        results["sweep"][mode] = rows
+        for r in rows:
+            print(f"{mode},{r['outstanding']},{r['mean_depth']:.2f},"
+                  f"{r['max_depth']:.0f}")
+
+    for k in (x for x in OUTSTANDING if x >= 1024):
+        lin = sweeps["linear"][k]["mean_depth"]
+        binned = sweeps["binned"][k]["mean_depth"]
+        ratio = binned / lin
+        print(f"depth ratio binned/linear @ {k} outstanding: {ratio:.4f}")
+        if ratio > 0.25:
+            failures.append(
+                f"binned mean depth {binned:.1f} not <= 25% of linear "
+                f"{lin:.1f} at {k} outstanding")
+
+    print("\n== analyze_all over counter snapshots, per engine mode ==")
+    for mode in ("binned", "linear", "leaky_umq"):
+        reg = fabric_workload(mode)
+        events = reg.snapshot_events()
+        findings = analyses.analyze_all(events)
+        defects = [f for f in findings if f.kind in DEFECT_KINDS]
+        results["findings"][mode] = [
+            {"kind": f.kind, "message": f.message, "severity": f.severity}
+            for f in findings]
+        print(f"-- mode={mode}: {len(defects)} defect finding(s)")
+        for f in defects:
+            print("   " + str(f))
+        if mode == "binned" and defects:
+            failures.append(f"fixed engine flagged: {defects[0].message}")
+        if mode == "linear" and not any(
+                f.kind == "long_traversal" for f in defects):
+            failures.append("linear-search defect not flagged")
+        if mode == "leaky_umq" and not any(
+                f.kind == "umq_flood" for f in defects):
+            failures.append("leaky-UMQ defect not flagged")
+
+    try:
+        from benchmarks.common import save_json
+        path = save_json("matching_sweep.json", results)
+        print(f"\nresults saved: {path}")
+    except Exception as e:                      # results dir is best-effort
+        print(f"\n(results not saved: {e})")
+
+    if failures:
+        print("\nFAILED acceptance checks:")
+        for f in failures:
+            print(" - " + f)
+        return 1
+    print("\nall matching-sweep acceptance checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

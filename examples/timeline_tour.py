@@ -75,14 +75,14 @@ def main():
     print("\n== modeled device timeline from compiled HLO (TPU adaptation) ==")
     from repro.core import device_timeline as DT
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((1,), ("model",))
 
     def tp_layer(x, w):
         y = jnp.einsum("bd,df->bf", x, w)
         return jax.lax.psum(y, "model")
 
-    from jax import shard_map
+    from repro.core.compat import shard_map
     f = shard_map(tp_layer, mesh=mesh,
                   in_specs=(P(None, None), P(None, "model")),
                   out_specs=P(None, None))

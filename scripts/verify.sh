@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the exact command ROADMAP.md names, plus the
+# matching-engine acceptance gate. Run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== matching-engine acceptance gate =="
+python benchmarks/matching_sweep.py

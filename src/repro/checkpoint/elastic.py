@@ -15,6 +15,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from ..configs.base import ModelConfig
+from ..core.compat import mesh_from_devices
 from ..models import model as M
 from ..sharding import rules as R
 
@@ -34,9 +35,8 @@ def make_elastic_mesh(devices: Optional[list] = None,
     devices = devices if devices is not None else jax.devices()
     n = len(devices)
     data, model = viable_meshes(n, prefer_model)[0]
-    return Mesh(
-        np.asarray(devices).reshape(data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return mesh_from_devices(
+        np.asarray(devices).reshape(data, model), ("data", "model"))
 
 
 def reshard_state(

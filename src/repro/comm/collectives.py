@@ -5,17 +5,37 @@ with a profiling region (category="collective") carrying logical byte
 counts — the host-side analog of Caliper-instrumented MPI entry points.
 jax.named_scope mirrors the region into HLO metadata so host regions can
 be correlated with compiled collectives.
+
+When a matching fabric is configured (:func:`configure_matching`), every
+wrapper additionally routes its *point-to-point decomposition* through
+the message-matching engine (:mod:`repro.match`) — the paper's second
+profiling method: collectives become the send/recv streams an
+implementation like ExaMPI issues, and the engine's counters record
+queue depths, match latency and unexpected-message counts for them.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple, Union
+from typing import Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from ..core import regions
+from ..core import compat, regions
 
 AxisName = Union[str, Tuple[str, ...]]
+
+_FABRIC = None                       # Optional[repro.match.Fabric]
+
+
+def configure_matching(fabric) -> None:
+    """Install (or, with None, remove) the matching fabric every comm-layer
+    dispatch is decomposed into. Runtime-toggleable like region categories."""
+    global _FABRIC
+    _FABRIC = fabric
+
+
+def matching_fabric():
+    return _FABRIC
 
 
 def _nbytes(x) -> int:
@@ -25,6 +45,8 @@ def _nbytes(x) -> int:
 def psum(x: jax.Array, axis_name: AxisName) -> jax.Array:
     with regions.annotate(f"psum({axis_name})", category="collective",
                           bytes=_nbytes(x)):
+        if _FABRIC is not None:
+            _FABRIC.all_reduce(compat.axis_size(axis_name), nbytes=_nbytes(x))
         with jax.named_scope(f"comm_psum_{axis_name}"):
             return jax.lax.psum(x, axis_name)
 
@@ -33,6 +55,8 @@ def all_gather(x: jax.Array, axis_name: AxisName, axis: int = 0,
                tiled: bool = True) -> jax.Array:
     with regions.annotate(f"all_gather({axis_name})", category="collective",
                           bytes=_nbytes(x)):
+        if _FABRIC is not None:
+            _FABRIC.all_gather(compat.axis_size(axis_name), nbytes=_nbytes(x))
         with jax.named_scope(f"comm_all_gather_{axis_name}"):
             return jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
 
@@ -41,6 +65,9 @@ def reduce_scatter(x: jax.Array, axis_name: AxisName,
                    scatter_dimension: int = 0) -> jax.Array:
     with regions.annotate(f"reduce_scatter({axis_name})",
                           category="collective", bytes=_nbytes(x)):
+        if _FABRIC is not None:
+            _FABRIC.reduce_scatter(compat.axis_size(axis_name),
+                                   nbytes=_nbytes(x))
         with jax.named_scope(f"comm_reduce_scatter_{axis_name}"):
             return jax.lax.psum_scatter(
                 x, axis_name, scatter_dimension=scatter_dimension, tiled=True)
@@ -50,6 +77,8 @@ def all_to_all(x: jax.Array, axis_name: AxisName, split_axis: int,
                concat_axis: int) -> jax.Array:
     with regions.annotate(f"all_to_all({axis_name})", category="collective",
                           bytes=_nbytes(x)):
+        if _FABRIC is not None:
+            _FABRIC.all_to_all(compat.axis_size(axis_name), nbytes=_nbytes(x))
         with jax.named_scope(f"comm_all_to_all_{axis_name}"):
             return jax.lax.all_to_all(
                 x, axis_name, split_axis=split_axis, concat_axis=concat_axis,
@@ -57,9 +86,14 @@ def all_to_all(x: jax.Array, axis_name: AxisName, split_axis: int,
 
 
 def ppermute(x: jax.Array, axis_name: AxisName,
-             perm: Sequence[Tuple[int, int]]) -> jax.Array:
+             perm: Sequence[Tuple[int, int]],
+             tag: int = 0) -> jax.Array:
+    """``tag`` distinguishes envelopes of back-to-back permutes with the
+    same pattern (ring steps, halo faces) in the matching engine."""
     with regions.annotate(f"ppermute({axis_name})", category="collective",
                           bytes=_nbytes(x)):
+        if _FABRIC is not None:
+            _FABRIC.ppermute(perm, nbytes=_nbytes(x), tag=tag)
         with jax.named_scope(f"comm_ppermute_{axis_name}"):
             return jax.lax.ppermute(x, axis_name, perm)
 
@@ -69,4 +103,4 @@ def axis_index(axis_name: AxisName) -> jax.Array:
 
 
 def axis_size(axis_name: AxisName) -> int:
-    return jax.lax.axis_size(axis_name)
+    return compat.axis_size(axis_name)

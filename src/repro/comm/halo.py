@@ -22,16 +22,19 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
-from ..core import regions
+from ..core import compat, regions
+from ..core.compat import shard_map
 from .collectives import ppermute
 
 
-def _shift(x: jax.Array, axis_name: str, direction: int) -> jax.Array:
-    n = jax.lax.axis_size(axis_name)
+def _shift(x: jax.Array, axis_name: str, direction: int,
+           ax: int = 0) -> jax.Array:
+    n = compat.axis_size(axis_name)
     perm = [(i, (i + direction) % n) for i in range(n)]
-    return ppermute(x, axis_name, perm)
+    # envelope tag per (mesh axis position, direction) so the matching
+    # engine sees each halo face as a distinct message stream
+    return ppermute(x, axis_name, perm, tag=2 * ax + (direction > 0))
 
 
 def stencil_interior(u: jax.Array) -> jax.Array:
@@ -88,12 +91,12 @@ def halo_step(u: jax.Array, axis_names=("x", "y", "z"), width: int = 1,
                 faces[name] = (u[tuple(idx_lo)], u[tuple(idx_hi)])
 
         with regions.annotate("post-send", category="api"):
-            for name in axis_names:
+            for i, name in enumerate(axis_names):
                 lo_face, hi_face = faces[name]
                 # receive the neighbor's hi face as my lo halo and vice versa
                 halos[name] = (
-                    _shift(hi_face, name, +1),
-                    _shift(lo_face, name, -1),
+                    _shift(hi_face, name, +1, ax=i),
+                    _shift(lo_face, name, -1, ax=i),
                 )
 
         if variant == "blocking":
@@ -170,11 +173,11 @@ class HaloProgram:
 
         def exchange(faces):
             halos = {}
-            for name in axes:
+            for i, name in enumerate(axes):
                 lo_face, hi_face = faces[name]
                 halos[name] = (
-                    _shift(hi_face, name, +1),
-                    _shift(lo_face, name, -1),
+                    _shift(hi_face, name, +1, ax=i),
+                    _shift(lo_face, name, -1, ax=i),
                 )
             return halos
 

@@ -23,7 +23,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import regions
+from ..core import compat, regions
 from .collectives import ppermute
 
 
@@ -38,7 +38,7 @@ def ring_all_gather(
 ) -> jax.Array:
     """All-gather x (local shard) along axis_name via a ppermute ring.
     Returns (n * x.shape[0], ...) with shard i at block i."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = _ring_perm(n)
     out = jnp.zeros((n,) + x.shape, x.dtype)
@@ -47,7 +47,7 @@ def ring_all_gather(
     with regions.annotate(f"ring_all_gather({axis_name})",
                           category="collective", schedule=schedule):
         for step in range(1, n):
-            nxt = ppermute(cur, axis_name, perm)
+            nxt = ppermute(cur, axis_name, perm, tag=step)
             if schedule == "serial":
                 # one queue: chain the send behind the consumer's update
                 # (optimization_barrier pins the order, like holding the
@@ -63,7 +63,7 @@ def ring_all_reduce(
     x: jax.Array, axis_name: str, schedule: str = "overlap"
 ) -> jax.Array:
     """reduce-scatter + all-gather ring all-reduce by chunks."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis_name)
@@ -80,7 +80,7 @@ def ring_all_reduce(
         acc = jax.lax.dynamic_index_in_dim(chunks, (idx + 1) % n, 0,
                                            keepdims=False)
         for step in range(1, n):
-            moved = ppermute(acc, axis_name, perm)
+            moved = ppermute(acc, axis_name, perm, tag=step)
             take = (idx + 1 + step) % n
             mine = jax.lax.dynamic_index_in_dim(chunks, take, 0,
                                                 keepdims=False)
@@ -93,7 +93,7 @@ def ring_all_reduce(
         out = jax.lax.dynamic_update_index_in_dim(out, acc, own, 0)
         cur = acc
         for step in range(1, n):
-            cur = ppermute(cur, axis_name, perm)
+            cur = ppermute(cur, axis_name, perm, tag=n + step)
             src = (idx + step) % n
             if schedule == "serial":
                 cur, out = jax.lax.optimization_barrier((cur, out))
@@ -114,7 +114,7 @@ def overlap_matmul_allgather(
     step k multiplies the chunk that just arrived while the next chunk is
     on the wire. The serial schedule gathers everything first (fully
     exposed wire time); the overlap schedule is the paper's fix."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = _ring_perm(n)
     rows = x_shard.shape[0]
@@ -130,7 +130,7 @@ def overlap_matmul_allgather(
         for step in range(n):
             src = (idx - step) % n
             if step < n - 1:
-                nxt = ppermute(cur, axis_name, perm)   # in flight (queue #2)
+                nxt = ppermute(cur, axis_name, perm, tag=step)  # in flight (queue #2)
             y = cur @ w                                # compute (queue #1)
             out = jax.lax.dynamic_update_index_in_dim(out, y, src, 0)
             if step < n - 1:
@@ -147,7 +147,7 @@ def reduce_scatter_matmul(
 ) -> jax.Array:
     """y = reduce_scatter(x @ w, rows) — row-chunked so each chunk's ring
     reduction rides the wire while the next chunk is on the MXU."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     partial = x @ w_shard
     if n == 1:
         return partial

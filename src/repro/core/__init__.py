@@ -4,8 +4,11 @@
 # chrome-trace timelines + automated analyses (method 2), and the TPU
 # adaptation: HLO collective parsing, trip-count-correct cost attribution,
 # roofline terms and modeled device timelines.
-from . import analyses, comparison, graphframe, hlo, hlo_cost, regions, timeline
+from . import (analyses, comparison, compat, counters, graphframe, hlo,
+               hlo_cost, regions, timeline)
 from .collector import Collector, global_collector, reset_global_collector
+from .counters import (CounterRegistry, CounterStat, counter_stats,
+                       global_registry, reset_global_registry)
 from .comparison import ComparisonResult, compare, compare_frames, profile_runs
 from .events import Event
 from .graphframe import GraphFrame
@@ -13,8 +16,10 @@ from .regions import annotate, annotate_jax, configure, profiled
 from .roofline import HW, Roofline
 
 __all__ = [
-    "analyses", "comparison", "graphframe", "hlo", "hlo_cost", "regions",
-    "timeline", "Collector", "global_collector", "reset_global_collector",
+    "analyses", "comparison", "compat", "counters", "graphframe", "hlo",
+    "hlo_cost", "regions", "timeline", "Collector", "global_collector",
+    "reset_global_collector", "CounterRegistry", "CounterStat",
+    "counter_stats", "global_registry", "reset_global_registry",
     "ComparisonResult", "compare", "compare_frames", "profile_runs", "Event",
     "GraphFrame", "annotate", "annotate_jax", "configure", "profiled",
     "HW", "Roofline",

@@ -1,4 +1,4 @@
-"""Automated timeline analyses (paper §4.1).
+"""Automated analyses over profiling data (paper §4.1 and method 2).
 
 The paper suggests four activities when reading a timeline; each is
 implemented as a detector over a list of events:
@@ -8,9 +8,17 @@ implemented as a detector over a list of events:
   * irregular durations of one region       -> :func:`irregular`
   * large gaps between profiled regions     -> :func:`gaps`
 
+Counter snapshots from the message-matching engine (method 2, serialized
+as zero-duration ``category="counter"`` events) get two more detectors:
+
+  * deep posted-receive-queue traversals    -> :func:`long_traversal`
+  * runaway unexpected-message queue        -> :func:`umq_flood`
+
 Each returns a list of :class:`Finding`. ``analyze_all`` runs the suite —
 this is what found the BlockingProgress-lock contention analog in our
-serialized communication schedule (see benchmarks/fig_timeline.py).
+serialized communication schedule (see benchmarks/fig_timeline.py), and
+what flags the seeded matching-engine defects in
+benchmarks/matching_sweep.py.
 """
 from __future__ import annotations
 
@@ -19,12 +27,14 @@ import statistics
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .counters import COUNTER_CATEGORY, counter_stats
 from .events import Event
 
 
 @dataclasses.dataclass
 class Finding:
-    kind: str                 # "large_wait" | "contention" | "irregular" | "gap"
+    kind: str                 # "large_wait" | "contention" | "irregular" |
+                              # "gap" | "long_traversal" | "umq_flood"
     message: str
     severity: float           # seconds of suspect time
     events: List[Event] = dataclasses.field(default_factory=list)
@@ -155,6 +165,8 @@ def gaps(
     out: List[Finding] = []
     lanes: Dict[Tuple[int, int], List[Event]] = defaultdict(list)
     for ev in events:
+        if ev.category == COUNTER_CATEGORY:
+            continue              # instant counter samples are not regions
         lanes[(ev.pid, ev.tid)].append(ev)
     for (pid, tid), evs in lanes.items():
         if leaf_only:
@@ -186,12 +198,104 @@ def gaps(
     return out
 
 
+def _counter_events_by_pid(
+    events: Sequence[Event],
+) -> Dict[int, List[Event]]:
+    per_pid: Dict[int, List[Event]] = defaultdict(list)
+    for ev in events:
+        if ev.category == COUNTER_CATEGORY:
+            per_pid[ev.pid].append(ev)
+    return per_pid
+
+
+# Nominal cost of touching one queue entry, used to turn excess traversal
+# depth into suspect seconds when no measured search time is available.
+_NS_PER_QUEUE_ENTRY = 100.0
+
+
+def long_traversal(
+    events: Sequence[Event],
+    mean_depth: float = 8.0,
+    min_samples: int = 32,
+) -> List[Finding]:
+    """Posted-receive-queue traversals far deeper than a binned engine's
+    O(1) — the linear-search defect (method 2). Reads the
+    ``match.prq.traversal_depth`` histogram out of counter snapshots."""
+    out: List[Finding] = []
+    for pid, evs in _counter_events_by_pid(events).items():
+        stats = counter_stats(evs)
+        depth = stats.get("match.prq.traversal_depth")
+        if depth is None or depth.count < min_samples:
+            continue
+        if depth.mean < mean_depth:
+            continue
+        search = stats.get("match.prq.search_ns")
+        suspect_ns = (search.total if search is not None
+                      else (depth.total - depth.count) * _NS_PER_QUEUE_ENTRY)
+        out.append(
+            Finding(
+                kind="long_traversal",
+                message=(
+                    f"PRQ traversal depth mean {depth.mean:.1f} "
+                    f"(max {depth.vmax:.0f}) over {depth.count} matches on "
+                    f"pid {pid} — posted-receive queue is searched linearly"
+                ),
+                severity=suspect_ns / 1e9,
+                events=[e for e in evs
+                        if e.name == "counter/match.prq.traversal_depth"],
+            )
+        )
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def umq_flood(
+    events: Sequence[Event],
+    max_length: float = 64.0,
+    mean_length: float = 8.0,
+) -> List[Finding]:
+    """Unexpected-message queue that grows without bound — the
+    never-garbage-collected-UMQ defect (method 2). Reads the
+    ``match.umq.length`` histogram out of counter snapshots."""
+    out: List[Finding] = []
+    for pid, evs in _counter_events_by_pid(events).items():
+        stats = counter_stats(evs)
+        length = stats.get("match.umq.length")
+        if length is None or length.count == 0:
+            continue
+        if length.vmax < max_length or length.mean < mean_length:
+            continue
+        leaked = stats.get("match.umq.leaked")
+        search = stats.get("match.umq.search_ns")
+        suspect_ns = (search.total if search is not None
+                      else length.total * _NS_PER_QUEUE_ENTRY)
+        detail = (f", {leaked.total:.0f} entries leaked"
+                  if leaked is not None and leaked.total else "")
+        out.append(
+            Finding(
+                kind="umq_flood",
+                message=(
+                    f"UMQ length mean {length.mean:.1f} grew to "
+                    f"{length.vmax:.0f} on pid {pid} — unexpected-message "
+                    f"queue is not reclaimed{detail}"
+                ),
+                severity=suspect_ns / 1e9,
+                events=[e for e in evs
+                        if e.name == "counter/match.umq.length"],
+            )
+        )
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
 def analyze_all(events: Sequence[Event], **kwargs) -> List[Finding]:
     out: List[Finding] = []
     out.extend(large_waits(events))
     out.extend(contention(events))
     out.extend(irregular(events))
     out.extend(gaps(events, min_gap_ns=kwargs.get("min_gap_ns", 1_000_000)))
+    out.extend(long_traversal(events))
+    out.extend(umq_flood(events))
     out.sort(key=lambda f: -f.severity)
     return out
 

@@ -1,0 +1,233 @@
+"""Counter/histogram registry — the data substrate of profiling method 2.
+
+The paper's second method instruments the MPI implementation's *message-
+matching engine* with lightweight counters (queue depth traversed, queue
+length, unexpected-message counts) instead of timeline regions. This
+registry is the hot-path sink for those counters, built in the same
+second-queue style as :class:`repro.core.collector.Collector`: producer
+threads append ``(name, value)`` deltas to **thread-local** buffers (list
+appends are atomic in CPython — no shared lock on the hot path); the
+reader swaps out each buffer and merges into aggregate statistics on its
+own time. Producers never contend with the consumer, so instrumenting the
+matching engine does not perturb the matching engine — the property the
+paper calls out as essential for counters inside the critical path.
+
+Snapshots serialize into :class:`repro.core.events.Event`-compatible
+records (category ``"counter"``, zero duration, stats in ``attrs``) so the
+existing timeline export, GraphFrame aggregation and automated analyses
+all work on counter data unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .events import Event
+
+COUNTER_CATEGORY = "counter"
+COUNTER_PREFIX = "counter/"
+
+# (name, value, is_observation) delta records; counters accumulate value,
+# observations additionally feed min/max and the power-of-two histogram.
+_Delta = Tuple[str, float, bool]
+
+
+def _pow2_bin(value: float) -> int:
+    """Lower bound of the power-of-two bucket holding ``value``
+    (0 -> 0, 1 -> 1, 2..3 -> 2, 4..7 -> 4, ...)."""
+    v = int(value)
+    if v <= 0:
+        return 0
+    return 1 << (v.bit_length() - 1)
+
+
+@dataclasses.dataclass
+class CounterStat:
+    """Merged statistics for one named counter or histogram."""
+
+    name: str
+    kind: str = "counter"            # "counter" | "histogram"
+    count: int = 0                   # number of increments / observations
+    total: float = 0.0               # sum of values
+    vmin: float = math.inf
+    vmax: float = -math.inf
+    bins: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else float("nan")
+
+    def add(self, value: float, observation: bool) -> None:
+        self.count += 1
+        self.total += value
+        if observation:
+            self.kind = "histogram"
+            self.vmin = min(self.vmin, value)
+            self.vmax = max(self.vmax, value)
+            b = _pow2_bin(value)
+            self.bins[b] = self.bins.get(b, 0) + 1
+
+    def merge(self, other: "CounterStat") -> None:
+        self.count += other.count
+        self.total += other.total
+        if other.kind == "histogram":
+            self.kind = "histogram"
+            self.vmin = min(self.vmin, other.vmin)
+            self.vmax = max(self.vmax, other.vmax)
+            for b, c in other.bins.items():
+                self.bins[b] = self.bins.get(b, 0) + c
+
+    def to_attrs(self) -> Dict[str, object]:
+        """JSON-serializable attrs payload for an Event record."""
+        out: Dict[str, object] = {
+            "counter": self.name,
+            "kind": self.kind,
+            "count": self.count,
+            "total": self.total,
+            "mean": self.mean if self.count else 0.0,
+        }
+        if self.kind == "histogram" and self.count:
+            out["min"] = self.vmin
+            out["max"] = self.vmax
+            out["bins"] = {str(b): c for b, c in sorted(self.bins.items())}
+        return out
+
+    @staticmethod
+    def from_attrs(attrs: Dict[str, object]) -> "CounterStat":
+        st = CounterStat(name=str(attrs["counter"]),
+                         kind=str(attrs.get("kind", "counter")),
+                         count=int(attrs.get("count", 0)),
+                         total=float(attrs.get("total", 0.0)))
+        if "min" in attrs:
+            st.vmin = float(attrs["min"])          # type: ignore[arg-type]
+        if "max" in attrs:
+            st.vmax = float(attrs["max"])          # type: ignore[arg-type]
+        for b, c in (attrs.get("bins") or {}).items():  # type: ignore[union-attr]
+            st.bins[int(b)] = int(c)
+        return st
+
+
+class CounterRegistry:
+    """Thread-safe, low-overhead counter sink (drain-on-read)."""
+
+    def __init__(self, pid: int = 0):
+        self.pid = pid
+        self._registry_lock = threading.Lock()   # cold path only
+        self._buffers: Dict[int, List[_Delta]] = {}
+        self._merged: Dict[str, CounterStat] = {}
+        self.enabled = True
+
+    # -- producer side (hot path, lock-free after first call per thread) --
+
+    def _buffer_for_current_thread(self) -> List[_Delta]:
+        ident = threading.get_ident()
+        buf = self._buffers.get(ident)
+        if buf is None:
+            with self._registry_lock:
+                buf = self._buffers.setdefault(ident, [])
+        return buf
+
+    def count(self, name: str, value: float = 1) -> None:
+        """Monotonic counter increment."""
+        if self.enabled:
+            self._buffer_for_current_thread().append((name, value, False))
+
+    def observe(self, name: str, value: float) -> None:
+        """Histogram observation (feeds min/max and power-of-two bins)."""
+        if self.enabled:
+            self._buffer_for_current_thread().append((name, value, True))
+
+    # -- consumer side --
+
+    def drain(self) -> Dict[str, CounterStat]:
+        """Merge all buffered deltas into the aggregate stats and return
+        the full aggregate (same snapshot-and-clear idiom as Collector)."""
+        with self._registry_lock:
+            idents = list(self._buffers.keys())
+        for ident in idents:
+            buf = self._buffers[ident]
+            n = len(buf)
+            for name, value, obs in buf[:n]:
+                st = self._merged.get(name)
+                if st is None:
+                    st = self._merged[name] = CounterStat(name=name)
+                st.add(value, obs)
+            del buf[:n]
+        return dict(self._merged)
+
+    def value(self, name: str) -> float:
+        """Total of one counter (drains first)."""
+        st = self.drain().get(name)
+        return st.total if st else 0.0
+
+    def clear(self) -> None:
+        with self._registry_lock:
+            for buf in self._buffers.values():
+                del buf[:]
+            self._merged.clear()
+
+    # -- Event bridge ------------------------------------------------------
+
+    def snapshot_events(self, t_ns: Optional[int] = None,
+                        path_root: str = "counters") -> List[Event]:
+        """Serialize everything since the previous snapshot as zero-duration
+        Events so the timeline/graphframe/analyses machinery can consume
+        counter data. Snapshot-and-clear: each call emits a *delta*, so
+        periodic snapshots of one registry merge additively in
+        :func:`counter_stats` without double-counting (same reason the
+        paper's counters are drained, not read, per interval)."""
+        t = t_ns if t_ns is not None else time.perf_counter_ns()
+        out: List[Event] = []
+        stats = self.drain()
+        with self._registry_lock:
+            self._merged = {}
+        for name, st in sorted(stats.items()):
+            out.append(Event(
+                name=COUNTER_PREFIX + name,
+                path=(path_root,) + tuple(name.split(".")),
+                category=COUNTER_CATEGORY,
+                t_start=t,
+                t_end=t,
+                pid=self.pid,
+                tid=0,
+                attrs=st.to_attrs(),
+            ))
+        return out
+
+
+def counter_stats(events: Iterable[Event]) -> Dict[str, CounterStat]:
+    """Inverse of :meth:`CounterRegistry.snapshot_events`: collect counter
+    Events (merging multiple snapshots of the same name) back into stats."""
+    out: Dict[str, CounterStat] = {}
+    for ev in events:
+        if ev.category != COUNTER_CATEGORY or not ev.attrs:
+            continue
+        st = CounterStat.from_attrs(ev.attrs)
+        if st.name in out:
+            out[st.name].merge(st)
+        else:
+            out[st.name] = st
+    return out
+
+
+_GLOBAL: Optional[CounterRegistry] = None
+_GLOBAL_LOCK = threading.Lock()
+
+
+def global_registry() -> CounterRegistry:
+    global _GLOBAL
+    if _GLOBAL is None:
+        with _GLOBAL_LOCK:
+            if _GLOBAL is None:
+                _GLOBAL = CounterRegistry()
+    return _GLOBAL
+
+
+def reset_global_registry(pid: int = 0) -> CounterRegistry:
+    global _GLOBAL
+    with _GLOBAL_LOCK:
+        _GLOBAL = CounterRegistry(pid=pid)
+    return _GLOBAL

@@ -7,22 +7,18 @@ import to obtain placeholder devices for these shapes.
 """
 from __future__ import annotations
 
-import jax
+from ..core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: int, model_parallel: int = 1):
     """Best-effort (data, model) mesh over whatever devices exist — used by
     CPU tests (1..8 host devices) and the elastic restart path."""
     assert n_devices % model_parallel == 0, (n_devices, model_parallel)
-    return jax.make_mesh(
-        (n_devices // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n_devices // model_parallel, model_parallel),
+                     ("data", "model"))

@@ -1,0 +1,10 @@
+# Message-matching engine + counters: the paper's second profiling
+# method. A host-level model of the PRQ/UMQ matching path every MPI
+# implementation contains, instrumented with lightweight counters, plus
+# the point-to-point decomposition of the comm layer's collectives and
+# two seeded, switchable defects for the detectors to find.
+from .engine import (ANY_SOURCE, ANY_TAG, MODES, Fabric, MatchEngine,
+                     Message, PostedRecv)
+
+__all__ = ["ANY_SOURCE", "ANY_TAG", "MODES", "Fabric", "MatchEngine",
+           "Message", "PostedRecv"]

@@ -1,0 +1,310 @@
+"""Two-queue message-matching engine (paper method 2).
+
+An MPI implementation matches every incoming message against the *posted-
+receive queue* (PRQ) and parks early arrivals on the *unexpected-message
+queue* (UMQ). The envelope is ``(src, tag, comm)`` with MPI wildcard
+semantics (``ANY_SOURCE`` / ``ANY_TAG``) and the non-overtaking rule:
+among the posted receives that match a message, the *earliest posted*
+wins; among unexpected messages that match a receive, the *earliest
+arrived* wins.
+
+This module is the host-level model of that engine, instrumented with the
+lightweight counters the paper adds to the matching path (queue depth
+traversed, queue length at post time, match latency, unexpected counts)
+via :class:`repro.core.counters.CounterRegistry`. Counter writes are
+thread-local appends, so instrumentation does not perturb the engine.
+
+Engine modes (see :mod:`repro.match.defects` for the seeded defects):
+
+  * ``"binned"``    — the fixed design: the PRQ is binned by envelope
+    (specific / any-source / any-tag / any-any), so a match examines at
+    most four queue heads; the UMQ is garbage-collected on every match.
+  * ``"linear"``    — seeded defect 1: one flat PRQ searched linearly.
+  * ``"leaky_umq"`` — seeded defect 2: UMQ entries consumed via wildcard
+    receives are tombstoned, never reclaimed.
+
+:class:`Fabric` models a set of ranks (one engine each) and decomposes
+collectives into the point-to-point messages an implementation like
+ExaMPI issues, with a deterministic interleave that produces both
+expected and unexpected arrivals and occasional wildcard receives — the
+traffic mix the paper's histograms are drawn from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from ..core.counters import CounterRegistry, global_registry
+
+ANY_SOURCE = -1
+ANY_TAG = -1
+
+MODES = ("binned", "linear", "leaky_umq")
+
+
+@dataclasses.dataclass(slots=True)
+class Message:
+    """An arrived message's envelope (plus payload size)."""
+
+    src: int
+    tag: int
+    comm: int = 0
+    nbytes: int = 0
+    seq: int = 0                  # arrival order
+    matched: bool = False         # tombstone flag (leaky UMQ defect)
+
+
+@dataclasses.dataclass(slots=True)
+class PostedRecv:
+    """A posted receive; completed once a message is matched to it."""
+
+    src: int
+    tag: int
+    comm: int = 0
+    seq: int = 0                  # post order
+    message: Optional[Message] = None
+
+    @property
+    def completed(self) -> bool:
+        return self.message is not None
+
+    @property
+    def wildcard(self) -> bool:
+        return self.src == ANY_SOURCE or self.tag == ANY_TAG
+
+    def accepts(self, msg: Message) -> bool:
+        return (self.comm == msg.comm
+                and self.src in (ANY_SOURCE, msg.src)
+                and self.tag in (ANY_TAG, msg.tag))
+
+
+class BinnedPRQ:
+    """Fixed posted-receive queue: binned by envelope shape so matching an
+    arrival examines at most four queue heads (specific, any-source,
+    any-tag, any-any), while seq numbers preserve MPI post order."""
+
+    def __init__(self) -> None:
+        self._specific: Dict[Tuple[int, int, int], Deque[PostedRecv]] = {}
+        self._any_src: Dict[Tuple[int, int], Deque[PostedRecv]] = {}
+        self._any_tag: Dict[Tuple[int, int], Deque[PostedRecv]] = {}
+        self._any_any: Dict[int, Deque[PostedRecv]] = {}     # keyed by comm
+        self._len = 0
+
+    def __len__(self) -> int:
+        return self._len
+
+    def post(self, recv: PostedRecv) -> None:
+        if recv.src == ANY_SOURCE and recv.tag == ANY_TAG:
+            self._any_any.setdefault(recv.comm, deque()).append(recv)
+        elif recv.src == ANY_SOURCE:
+            self._any_src.setdefault((recv.tag, recv.comm),
+                                     deque()).append(recv)
+        elif recv.tag == ANY_TAG:
+            self._any_tag.setdefault((recv.src, recv.comm),
+                                     deque()).append(recv)
+        else:
+            self._specific.setdefault((recv.src, recv.tag, recv.comm),
+                                      deque()).append(recv)
+        self._len += 1
+
+    def match(self, msg: Message) -> Tuple[Optional[PostedRecv], int]:
+        """(matched recv or None, queue entries traversed)."""
+        depth = 0
+        best: Optional[PostedRecv] = None
+        best_q: Optional[Deque[PostedRecv]] = None
+        queues = (
+            self._specific.get((msg.src, msg.tag, msg.comm)),
+            self._any_src.get((msg.tag, msg.comm)),
+            self._any_tag.get((msg.src, msg.comm)),
+            self._any_any.get(msg.comm),
+        )
+        for q in queues:
+            if not q:
+                continue
+            depth += 1
+            head = q[0]
+            if best is None or head.seq < best.seq:
+                best, best_q = head, q
+        if best is not None and best_q is not None:
+            best_q.popleft()
+            self._len -= 1
+        return best, max(depth, 1)
+
+
+class GCUMQ:
+    """Fixed unexpected-message queue: one arrival-ordered list, matched
+    entries removed immediately (garbage-collected) whatever the receive's
+    envelope shape."""
+
+    def __init__(self) -> None:
+        self._q: List[Message] = []
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def add(self, msg: Message) -> None:
+        self._q.append(msg)
+
+    def match(self, recv: PostedRecv) -> Tuple[Optional[Message], int]:
+        for i, msg in enumerate(self._q):
+            if recv.accepts(msg):
+                del self._q[i]
+                return msg, i + 1
+        return None, len(self._q)
+
+
+class MatchEngine:
+    """One rank's matching engine: PRQ + UMQ + counters.
+
+    ``post_recv`` is the MPI_Irecv analog (search UMQ, else park on PRQ);
+    ``arrive`` is the network-delivery analog (search PRQ, else park on
+    UMQ). Every call records the counters the paper's method 2 plots:
+    traversal depth, queue length, match latency, unexpected counts.
+    """
+
+    def __init__(self, rank: int = 0, mode: str = "binned",
+                 registry: Optional[CounterRegistry] = None):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        from .defects import LeakyUMQ, LinearPRQ
+        self.rank = rank
+        self.mode = mode
+        self.reg = registry if registry is not None else global_registry()
+        self.prq = LinearPRQ() if mode == "linear" else BinnedPRQ()
+        self.umq = LeakyUMQ(self.reg) if mode == "leaky_umq" else GCUMQ()
+        self._seq = itertools.count()
+
+    # -- MPI_Irecv analog --------------------------------------------------
+
+    def post_recv(self, src: int = ANY_SOURCE, tag: int = ANY_TAG,
+                  comm: int = 0) -> PostedRecv:
+        recv = PostedRecv(src=src, tag=tag, comm=comm, seq=next(self._seq))
+        t0 = time.perf_counter_ns()
+        self.reg.observe("match.umq.length", len(self.umq))
+        msg, depth = self.umq.match(recv)
+        self.reg.observe("match.umq.traversal_depth", depth)
+        if msg is not None:
+            recv.message = msg
+            self.reg.count("match.umq.hit")
+        else:
+            self.reg.observe("match.prq.length", len(self.prq))
+            self.prq.post(recv)
+        self.reg.observe("match.umq.search_ns", time.perf_counter_ns() - t0)
+        return recv
+
+    # -- network delivery analog ------------------------------------------
+
+    def arrive(self, src: int, tag: int, comm: int = 0,
+               nbytes: int = 0) -> Optional[PostedRecv]:
+        msg = Message(src=src, tag=tag, comm=comm, nbytes=nbytes,
+                      seq=next(self._seq))
+        t0 = time.perf_counter_ns()
+        recv, depth = self.prq.match(msg)
+        self.reg.observe("match.prq.traversal_depth", depth)
+        self.reg.observe("match.prq.search_ns", time.perf_counter_ns() - t0)
+        if recv is not None:
+            recv.message = msg
+            self.reg.count("match.expected")
+            return recv
+        self.umq.add(msg)
+        self.reg.count("match.unexpected")
+        self.reg.observe("match.umq.length", len(self.umq))
+        return None
+
+    # -- introspection -----------------------------------------------------
+
+    def outstanding(self) -> Tuple[int, int]:
+        """(posted receives pending, unexpected messages pending)."""
+        return len(self.prq), len(self.umq)
+
+
+class Fabric:
+    """A set of ranks (one :class:`MatchEngine` each) plus the point-to-
+    point decomposition of the collectives the comm layer dispatches.
+
+    The interleave is deterministic: every ``unexpected_every``-th message
+    arrives before its receive is posted (exercising the UMQ) and every
+    ``wildcard_every``-th receive is posted with ``ANY_SOURCE``
+    (exercising wildcard matching — and defect 2's leak path).
+    """
+
+    def __init__(self, mode: str = "binned",
+                 registry: Optional[CounterRegistry] = None,
+                 unexpected_every: int = 3, wildcard_every: int = 4):
+        self.mode = mode
+        self.reg = registry if registry is not None else global_registry()
+        self.unexpected_every = unexpected_every
+        self.wildcard_every = wildcard_every
+        self._engines: Dict[int, MatchEngine] = {}
+        self._tick = itertools.count(1)
+
+    def engine(self, rank: int) -> MatchEngine:
+        eng = self._engines.get(rank)
+        if eng is None:
+            eng = self._engines[rank] = MatchEngine(
+                rank=rank, mode=self.mode, registry=self.reg)
+        return eng
+
+    def engines(self) -> List[MatchEngine]:
+        return [self._engines[r] for r in sorted(self._engines)]
+
+    # -- one communication phase ------------------------------------------
+
+    def exchange(self, pairs, tag: int = 0, nbytes: int = 0,
+                 comm: int = 0) -> None:
+        """Deliver one phase of point-to-point traffic: each (src, dst)
+        pair is one message. Receives post first except for the
+        deterministic 'unexpected' fraction, which post after delivery."""
+        late: List[Tuple[int, int, int]] = []
+        for src, dst in pairs:
+            k = next(self._tick)
+            rsrc = (ANY_SOURCE
+                    if self.wildcard_every and k % self.wildcard_every == 0
+                    else src)
+            if self.unexpected_every and k % self.unexpected_every == 0:
+                late.append((rsrc, dst, tag))
+            else:
+                self.engine(dst).post_recv(rsrc, tag, comm)
+        for src, dst in pairs:
+            self.engine(dst).arrive(src, tag, comm, nbytes)
+        for rsrc, dst, rtag in late:
+            self.engine(dst).post_recv(rsrc, rtag, comm)
+
+    # -- collective decompositions (paper: ExaMPI's p2p collectives) -------
+
+    @staticmethod
+    def _ring(n: int, step: int = 1) -> List[Tuple[int, int]]:
+        return [(i, (i + step) % n) for i in range(n)]
+
+    def ppermute(self, perm, nbytes: int = 0, tag: int = 0,
+                 comm: int = 0) -> None:
+        self.exchange(list(perm), tag=tag, nbytes=nbytes, comm=comm)
+
+    def all_gather(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
+        for step in range(1, n):
+            self.exchange(self._ring(n), tag=step, nbytes=nbytes // max(n, 1),
+                          comm=comm)
+
+    def reduce_scatter(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
+        for step in range(1, n):
+            self.exchange(self._ring(n, -1), tag=step,
+                          nbytes=nbytes // max(n, 1), comm=comm)
+
+    def all_reduce(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
+        # ring all-reduce = reduce-scatter phase + all-gather phase
+        self.reduce_scatter(n, nbytes=nbytes, comm=comm)
+        self.all_gather(n, nbytes=nbytes, comm=comm)
+
+    def all_to_all(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
+        pairs = [(i, j) for i in range(n) for j in range(n) if i != j]
+        self.exchange(pairs, tag=0, nbytes=nbytes // max(n, 1), comm=comm)
+
+    # -- introspection -----------------------------------------------------
+
+    def outstanding(self) -> Tuple[int, int]:
+        prq = sum(len(e.prq) for e in self._engines.values())
+        umq = sum(len(e.umq) for e in self._engines.values())
+        return prq, umq

@@ -134,8 +134,9 @@ def embed_tokens(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
         return jnp.take(table, tokens, axis=0).astype(
             jnp.dtype(cfg.dtype)) * scale
     mesh, rules = ctx
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..core.compat import shard_map
 
     v_shard = Vp // model_size
     scatter_seq = rules.get("act_seq") == "model" and T % model_size == 0

@@ -304,6 +304,7 @@ def _shardmapped_scan(run_scan, wx, r_gates, state):
     over "data" *per time step* — measured 24.7k collectives/step on
     xlstm train_4k. Inside shard_map the per-shard cotangents accumulate
     locally and a single psum fires at the boundary."""
+    from ..core.compat import shard_map
     from ..sharding.rules import _CTX
     from jax.sharding import PartitionSpec as P
 
@@ -324,10 +325,11 @@ def _shardmapped_scan(run_scan, wx, r_gates, state):
         # once at the pvary boundary (outside the loop) instead of
         # per-step (jax emits psum_invariant inside the while body for
         # invariant inputs — measured 24.6k in-loop all-reduces).
-        r_in = jax.lax.pvary(r_in, axes_flat)
+        if hasattr(jax.lax, "pvary"):
+            r_in = jax.lax.pvary(r_in, axes_flat)
         return run_scan(wx_in, r_in, st0)
 
-    return jax.shard_map(
+    return shard_map(
         wrapped, mesh=mesh,
         in_specs=(bspec3, P(), (sspec, sspec, sspec, sspec)),
         out_specs=((sspec, sspec, sspec, sspec),

@@ -15,11 +15,10 @@ def test_ring_collectives_match_lax(subproc):
     out = subproc(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.core.compat import make_mesh, shard_map
         from repro.comm import ring
 
-        mesh = jax.make_mesh((8,), ("r",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("r",))
         x = jnp.arange(8 * 16 * 4, dtype=jnp.float32).reshape(8 * 16, 4)
 
         for schedule in ("serial", "overlap"):
@@ -68,8 +67,8 @@ def test_halo_explicit_matches_gspmd(subproc):
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.comm.halo import HaloProgram
-        mesh = jax.make_mesh((2, 2, 2), ("x", "y", "z"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((2, 2, 2), ("x", "y", "z"))
         sh = NamedSharding(mesh, P("x", "y", "z"))
         u = jax.device_put(jnp.asarray(
             np.random.default_rng(0).standard_normal((8, 8, 8)), jnp.float32), sh)

@@ -85,8 +85,8 @@ def test_real_sharded_module(subproc):
     out = subproc(textwrap.dedent("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         def f(x, w):
             y = jnp.einsum('bd,df->bf', x, w)
             return jnp.einsum('bf,df->bd', y, w)

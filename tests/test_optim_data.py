@@ -74,10 +74,9 @@ def test_compression_error_feedback_contracts(values):
 
 def test_compressed_psum_single_device():
     # axis size 1: compressed psum == identity up to quantization
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("d",))
     g = {"w": jnp.array([1.0, -2.0, 3.0])}
     e = compress.init_error(g)
     out, _ = jax.jit(shard_map(

@@ -77,8 +77,8 @@ def test_reduced_dryrun_8dev(subproc):
         from repro.train.step import make_train_step, make_decode_step
         from repro.core import hlo_cost
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         for arch in ("yi-6b", "deepseek-moe-16b"):
             cfg = get_config(arch, "smoke")
             shape = ShapeConfig("t", seq_len=64, global_batch=4, kind="train")
