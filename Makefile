@@ -1,6 +1,7 @@
 PYTHON ?= python
 
-.PHONY: verify test bench-match tour-timeline tour-match
+.PHONY: verify test bench-match bench-replay replay-smoke tour-timeline \
+	tour-match tour-replay
 
 verify:
 	./scripts/verify.sh
@@ -11,8 +12,17 @@ test:
 bench-match:
 	PYTHONPATH=src $(PYTHON) benchmarks/matching_sweep.py
 
+bench-replay:
+	PYTHONPATH=src $(PYTHON) benchmarks/replay_sweep.py
+
+replay-smoke:
+	PYTHONPATH=src $(PYTHON) benchmarks/replay_sweep.py --smoke
+
 tour-timeline:
 	PYTHONPATH=src:. $(PYTHON) examples/timeline_tour.py
 
 tour-match:
 	PYTHONPATH=src:. $(PYTHON) examples/matching_tour.py
+
+tour-replay:
+	PYTHONPATH=src:. $(PYTHON) examples/replay_tour.py

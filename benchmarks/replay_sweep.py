@@ -1,0 +1,176 @@
+"""Record once, replay everywhere: the trace subsystem's acceptance gate.
+
+    PYTHONPATH=src python benchmarks/replay_sweep.py [--smoke]
+
+1. **Record** one defect-seeded run (engine mode ``linear``) of a mixed
+   collective + many-outstanding-receives workload through a traced
+   :class:`repro.match.Fabric` — one JSONL trace, written once.
+2. **Replay** that trace under the ``fifo`` (binned), ``linear`` and
+   ``leaky_umq`` engine modes — offline, without re-executing the
+   workload — and run the live detectors (``analyze_all``) on each
+   replay's counter events: the defective modes must be flagged, the
+   fixed mode must be clean.
+3. **Diff** each replay against the healthy baseline with the trace
+   differ: ``linear`` must show a ``long_traversal`` delta, ``leaky_umq``
+   a ``umq_flood`` delta, and a second healthy replay must diff clean.
+4. **Determinism**: every replay must reproduce the recorded match order
+   exactly (no divergences) — the engine-mode equivalence property that
+   makes what-if replay sound.
+
+Exit status is non-zero if any acceptance condition fails, so this file
+doubles as a regression gate (``make replay-smoke``). Results are saved
+under results/bench/.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.core import analyses
+from repro.core.counters import CounterRegistry
+from repro.core.roofline import match_seconds
+from repro.trace import diff, read_trace, record_fabric, replay
+
+DEFECT_KINDS = ("long_traversal", "umq_flood")
+REPLAY_MODES = ("fifo", "linear", "leaky_umq")
+
+
+def record_run(path: str, rounds: int) -> CounterRegistry:
+    """One seeded-defect (linear PRQ) run: ring collectives through the
+    fabric's p2p decomposition plus a many-outstanding-receives burst per
+    round (the paper's growing pending-request load, Fig. 10). A denser
+    unexpected/wildcard mix than the default keeps the UMQ busy so the
+    leaky_umq what-if replay has garbage to not collect."""
+    reg = CounterRegistry()
+    with record_fabric(path, mode="linear", registry=reg,
+                       unexpected_every=2, wildcard_every=3) as fab:
+        for r in range(rounds):
+            fab.all_reduce(16, nbytes=1 << 20)
+            fab.all_gather(16, nbytes=1 << 19)
+            fab.all_to_all(8, nbytes=1 << 18)
+            fab.phase("burst", rank=0, outstanding=256)
+            eng = fab.engine(0)
+            for t in range(256):
+                eng.post_recv(src=1, tag=10_000 + t)
+            for t in reversed(range(256)):
+                eng.arrive(src=1, tag=10_000 + t)
+    return reg
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced rounds for CI")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--trace", default=None,
+                    help="trace path (default results/bench/replay_trace.jsonl)")
+    args = ap.parse_args()
+    rounds = args.rounds or (12 if args.smoke else 20)
+
+    from benchmarks.common import RESULTS
+    os.makedirs(RESULTS, exist_ok=True)
+    trace_path = args.trace or os.path.join(RESULTS, "replay_trace.jsonl")
+
+    failures: List[str] = []
+    results: Dict = {"rounds": rounds, "trace": trace_path,
+                     "modes": {}, "diff_flags": {}}
+
+    print(f"== record once (mode=linear, {rounds} rounds) ==")
+    record_run(trace_path, rounds)
+    header, records = read_trace(trace_path)
+    n_ops = sum(1 for r in records if r["t"] in ("post", "arr"))
+    n_phases = sum(1 for r in records if r["t"] == "phase")
+    print(f"trace: {trace_path}")
+    print(f"  schema v{header['schema']}, recorded mode={header['mode']}, "
+          f"{n_ops} engine ops, {n_phases} phases")
+
+    print("\n== replay everywhere (no workload re-execution) ==")
+    replays = {}
+    for mode in REPLAY_MODES:
+        res = replay((header, records), mode=mode)
+        replays[mode] = res
+        findings = analyses.analyze_all(res.events)
+        defects = sorted({f.kind for f in findings
+                          if f.kind in DEFECT_KINDS})
+        tot = res.totals()
+        depth = tot.get("match.prq.traversal_depth")
+        umq = tot.get("match.umq.length")
+        row = {
+            "engine_mode": res.mode,
+            "divergences": len(res.divergences),
+            "depth_mean": depth.mean if depth else 0.0,
+            "umq_len_max": umq.vmax if umq and umq.count else 0.0,
+            "match_ms": match_seconds(tot) * 1e3,
+            "detector_flags": defects,
+        }
+        results["modes"][mode] = row
+        print(f"mode={mode:10s} (engine {res.mode}): "
+              f"depth_mean={row['depth_mean']:8.2f} "
+              f"umq_max={row['umq_len_max']:6.0f} "
+              f"match={row['match_ms']:8.3f} ms "
+              f"detectors={defects}")
+        if res.divergences:
+            failures.append(
+                f"{mode} replay diverged from the recorded match order "
+                f"({len(res.divergences)} ops)")
+        if mode == "fifo" and defects:
+            failures.append(f"healthy fifo replay flagged: {defects}")
+        if mode == "linear" and "long_traversal" not in defects:
+            failures.append("linear replay not flagged by long_traversal")
+        if mode == "leaky_umq" and "umq_flood" not in defects:
+            failures.append("leaky_umq replay not flagged by umq_flood")
+
+    base = replays["fifo"]
+    for mode in REPLAY_MODES:
+        if replays[mode].matches != base.matches:
+            failures.append(
+                f"{mode} replay produced a different match order than fifo "
+                f"(engine modes must be semantically equivalent)")
+
+    print("\n== trace differ vs the healthy baseline ==")
+    candidates = {
+        "linear": replays["linear"],
+        "leaky_umq": replays["leaky_umq"],
+        # an independent second healthy replay must diff clean
+        "fifo_again": replay((header, records), mode="binned"),
+    }
+    expected = {"linear": "long_traversal", "leaky_umq": "umq_flood",
+                "fifo_again": None}
+    for name, cand in candidates.items():
+        d = diff(base, cand)
+        kinds = sorted({f.kind for f in d.flags()})
+        results["diff_flags"][name] = kinds
+        print(f"diff fifo -> {name:10s}: flags={kinds}")
+        for f in d.flags()[:2]:
+            print("   " + str(f))
+        want = expected[name]
+        if want is None and kinds:
+            failures.append(f"healthy replay diff flagged: {kinds}")
+        if want is not None and want not in kinds:
+            failures.append(f"diff fifo->{name} missing {want} flag")
+
+    try:
+        from benchmarks.common import save_json
+        path = save_json("replay_sweep.json", results)
+        print(f"\nresults saved: {path}")
+    except Exception as e:                      # results dir is best-effort
+        print(f"\n(results not saved: {e})")
+
+    if failures:
+        print("\nFAILED acceptance checks:")
+        for f in failures:
+            print(" - " + f)
+        return 1
+    print("\nall replay-sweep acceptance checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,5 +9,32 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== trace schema version check =="
+python - <<'EOF'
+import tempfile, os
+from repro.core.counters import CounterRegistry
+from repro.trace import (SCHEMA_VERSION, TraceSchemaError, read_trace,
+                         record_fabric, validate_header)
+
+path = os.path.join(tempfile.mkdtemp(), "schema_check.jsonl")
+with record_fabric(path, mode="binned",
+                   registry=CounterRegistry()) as fab:
+    fab.all_reduce(4, nbytes=1 << 10)
+header, records = read_trace(path)
+assert header["schema"] == SCHEMA_VERSION, header
+assert records, "trace has no records"
+try:
+    validate_header(dict(header, schema=SCHEMA_VERSION + 1))
+except TraceSchemaError:
+    pass
+else:
+    raise SystemExit("future-version header was not rejected")
+print(f"trace schema v{SCHEMA_VERSION} round-trips and rejects "
+      f"unknown versions")
+EOF
+
 echo "== matching-engine acceptance gate =="
 python benchmarks/matching_sweep.py
+
+echo "== replay what-if acceptance gate =="
+python benchmarks/replay_sweep.py --smoke

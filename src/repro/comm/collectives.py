@@ -12,9 +12,15 @@ the message-matching engine (:mod:`repro.match`) — the paper's second
 profiling method: collectives become the send/recv streams an
 implementation like ExaMPI issues, and the engine's counters record
 queue depths, match latency and unexpected-message counts for them.
+
+If the fabric carries a trace sink (:mod:`repro.trace`), each dispatch is
+additionally phase-labeled after its call site (``psum(x)``,
+``ring_all_gather(r)``, ...) via :func:`comm_phase`, so recorded traces
+diff per collective phase offline.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Sequence, Tuple, Union
 
 import jax
@@ -38,6 +44,22 @@ def matching_fabric():
     return _FABRIC
 
 
+@contextlib.contextmanager
+def comm_phase(label: str):
+    """Label the fabric phase markers emitted while the body runs, so a
+    recorded trace names phases after the dispatch site (ring schedules
+    and halo faces use this). No-op when no fabric is configured."""
+    fab = _FABRIC
+    if fab is None:
+        yield
+        return
+    prev = fab.set_label(label)
+    try:
+        yield
+    finally:
+        fab.set_label(prev)
+
+
 def _nbytes(x) -> int:
     return int(x.size * x.dtype.itemsize)
 
@@ -46,7 +68,9 @@ def psum(x: jax.Array, axis_name: AxisName) -> jax.Array:
     with regions.annotate(f"psum({axis_name})", category="collective",
                           bytes=_nbytes(x)):
         if _FABRIC is not None:
-            _FABRIC.all_reduce(compat.axis_size(axis_name), nbytes=_nbytes(x))
+            with comm_phase(f"psum({axis_name})"):
+                _FABRIC.all_reduce(compat.axis_size(axis_name),
+                                   nbytes=_nbytes(x))
         with jax.named_scope(f"comm_psum_{axis_name}"):
             return jax.lax.psum(x, axis_name)
 
@@ -56,7 +80,9 @@ def all_gather(x: jax.Array, axis_name: AxisName, axis: int = 0,
     with regions.annotate(f"all_gather({axis_name})", category="collective",
                           bytes=_nbytes(x)):
         if _FABRIC is not None:
-            _FABRIC.all_gather(compat.axis_size(axis_name), nbytes=_nbytes(x))
+            with comm_phase(f"all_gather({axis_name})"):
+                _FABRIC.all_gather(compat.axis_size(axis_name),
+                                   nbytes=_nbytes(x))
         with jax.named_scope(f"comm_all_gather_{axis_name}"):
             return jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
 
@@ -66,8 +92,9 @@ def reduce_scatter(x: jax.Array, axis_name: AxisName,
     with regions.annotate(f"reduce_scatter({axis_name})",
                           category="collective", bytes=_nbytes(x)):
         if _FABRIC is not None:
-            _FABRIC.reduce_scatter(compat.axis_size(axis_name),
-                                   nbytes=_nbytes(x))
+            with comm_phase(f"reduce_scatter({axis_name})"):
+                _FABRIC.reduce_scatter(compat.axis_size(axis_name),
+                                       nbytes=_nbytes(x))
         with jax.named_scope(f"comm_reduce_scatter_{axis_name}"):
             return jax.lax.psum_scatter(
                 x, axis_name, scatter_dimension=scatter_dimension, tiled=True)
@@ -78,7 +105,9 @@ def all_to_all(x: jax.Array, axis_name: AxisName, split_axis: int,
     with regions.annotate(f"all_to_all({axis_name})", category="collective",
                           bytes=_nbytes(x)):
         if _FABRIC is not None:
-            _FABRIC.all_to_all(compat.axis_size(axis_name), nbytes=_nbytes(x))
+            with comm_phase(f"all_to_all({axis_name})"):
+                _FABRIC.all_to_all(compat.axis_size(axis_name),
+                                   nbytes=_nbytes(x))
         with jax.named_scope(f"comm_all_to_all_{axis_name}"):
             return jax.lax.all_to_all(
                 x, axis_name, split_axis=split_axis, concat_axis=concat_axis,

@@ -25,7 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import compat, regions
 from ..core.compat import shard_map
-from .collectives import ppermute
+from .collectives import comm_phase, ppermute
 
 
 def _shift(x: jax.Array, axis_name: str, direction: int,
@@ -90,7 +90,8 @@ def halo_step(u: jax.Array, axis_names=("x", "y", "z"), width: int = 1,
                 idx_hi[ax] = slice(-w, None)
                 faces[name] = (u[tuple(idx_lo)], u[tuple(idx_hi)])
 
-        with regions.annotate("post-send", category="api"):
+        with regions.annotate("post-send", category="api"), \
+                comm_phase("halo_exchange"):
             for i, name in enumerate(axis_names):
                 lo_face, hi_face = faces[name]
                 # receive the neighbor's hi face as my lo halo and vice versa
@@ -173,12 +174,13 @@ class HaloProgram:
 
         def exchange(faces):
             halos = {}
-            for i, name in enumerate(axes):
-                lo_face, hi_face = faces[name]
-                halos[name] = (
-                    _shift(hi_face, name, +1, ax=i),
-                    _shift(lo_face, name, -1, ax=i),
-                )
+            with comm_phase("halo_exchange"):
+                for i, name in enumerate(axes):
+                    lo_face, hi_face = faces[name]
+                    halos[name] = (
+                        _shift(hi_face, name, +1, ax=i),
+                        _shift(lo_face, name, -1, ax=i),
+                    )
             return halos
 
         def interior(u):

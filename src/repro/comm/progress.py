@@ -58,9 +58,17 @@ class Request:
 
 
 class ProgressEngine:
-    def __init__(self, mode: str = "incoming", process_fn=None):
+    """``trace`` is an optional ``emit(dict)`` sink (:mod:`repro.trace`):
+    every submit records its enqueue timestamp and lock wait, every
+    processed request its processing quantum, so the offline replayer can
+    re-model the same request stream under the *other* queue discipline
+    (the shared-queue defect vs the incoming-queue fix) without rerunning
+    any communication."""
+
+    def __init__(self, mode: str = "incoming", process_fn=None, trace=None):
         assert mode in ("shared", "incoming")
         self.mode = mode
+        self.trace = trace
         self._lock = threading.Lock()            # the BlockingProgress lock
         self._queue: Deque[Tuple[Callable, tuple, Request]] = deque()
         self._internal: Deque[Tuple[Callable, tuple, Request]] = deque()
@@ -75,12 +83,19 @@ class ProgressEngine:
     def submit(self, fn: Callable, *args: Any) -> Request:
         """MPI_Isend analog: enqueue a communication request."""
         req = Request()
+        t0 = time.perf_counter_ns()
         with regions.annotate("MPI_Isend", category="api", mode=self.mode):
             with regions.annotate(LOCK_REGION, category="runtime",
                                   lock="request_queue"):
                 with self._lock:
                     self._queue.append((fn, args, req))
             self._wake.set()
+        if self.trace is not None:
+            try:
+                self.trace.emit({"t": "pe", "ev": "submit", "ts": t0,
+                                 "wait": time.perf_counter_ns() - t0})
+            except Exception:
+                pass         # tracing is best-effort; the request is queued
         return req
 
     def shutdown(self):
@@ -115,6 +130,7 @@ class ProgressEngine:
                     self._process(fn, args, req)
 
     def _process(self, fn, args, req: Request):
+        t0 = time.perf_counter_ns()
         with regions.annotate("progress/process", category="runtime"):
             try:
                 result = fn(*args)
@@ -124,3 +140,10 @@ class ProgressEngine:
                 req._fulfill(result)
             except BaseException as e:           # surfaced at wait()
                 req._fulfill(exc=e)
+        if self.trace is not None:
+            try:
+                self.trace.emit({"t": "pe", "ev": "proc", "ts": t0,
+                                 "dur": time.perf_counter_ns() - t0})
+            except Exception:
+                pass         # never take down the progress thread (a dead
+                             # progress thread deadlocks every later wait)

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import compat, regions
-from .collectives import ppermute
+from .collectives import comm_phase, ppermute
 
 
 def _ring_perm(n: int, reverse: bool = False):
@@ -45,7 +45,8 @@ def ring_all_gather(
     out = jax.lax.dynamic_update_index_in_dim(out, x, idx, 0)
     cur = x
     with regions.annotate(f"ring_all_gather({axis_name})",
-                          category="collective", schedule=schedule):
+                          category="collective", schedule=schedule), \
+            comm_phase(f"ring_all_gather({axis_name})"):
         for step in range(1, n):
             nxt = ppermute(cur, axis_name, perm, tag=step)
             if schedule == "serial":
@@ -74,7 +75,8 @@ def ring_all_reduce(
     perm = _ring_perm(n, reverse=True)
 
     with regions.annotate(f"ring_all_reduce({axis_name})",
-                          category="collective", schedule=schedule):
+                          category="collective", schedule=schedule), \
+            comm_phase(f"ring_all_reduce({axis_name})"):
         # reduce-scatter phase: after n-1 steps, device i holds the full
         # sum of chunk (i+1) % n
         acc = jax.lax.dynamic_index_in_dim(chunks, (idx + 1) % n, 0,
@@ -126,7 +128,8 @@ def overlap_matmul_allgather(
 
     cur = x_shard
     with regions.annotate(f"ag_matmul({axis_name})", category="collective",
-                          schedule=schedule):
+                          schedule=schedule), \
+            comm_phase(f"ag_matmul({axis_name})"):
         for step in range(n):
             src = (idx - step) % n
             if step < n - 1:

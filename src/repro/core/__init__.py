@@ -7,8 +7,9 @@
 from . import (analyses, comparison, compat, counters, graphframe, hlo,
                hlo_cost, regions, timeline)
 from .collector import Collector, global_collector, reset_global_collector
-from .counters import (CounterRegistry, CounterStat, counter_stats,
-                       global_registry, reset_global_registry)
+from .counters import (CounterLane, CounterRegistry, CounterStat,
+                       counter_stats, global_registry,
+                       reset_global_registry)
 from .comparison import ComparisonResult, compare, compare_frames, profile_runs
 from .events import Event
 from .graphframe import GraphFrame
@@ -18,7 +19,7 @@ from .roofline import HW, Roofline
 __all__ = [
     "analyses", "comparison", "compat", "counters", "graphframe", "hlo",
     "hlo_cost", "regions", "timeline", "Collector", "global_collector",
-    "reset_global_collector", "CounterRegistry", "CounterStat",
+    "reset_global_collector", "CounterLane", "CounterRegistry", "CounterStat",
     "counter_stats", "global_registry", "reset_global_registry",
     "ComparisonResult", "compare", "compare_frames", "profile_runs", "Event",
     "GraphFrame", "annotate", "annotate_jax", "configure", "profiled",

@@ -14,6 +14,11 @@ as zero-duration ``category="counter"`` events) get two more detectors:
   * deep posted-receive-queue traversals    -> :func:`long_traversal`
   * runaway unexpected-message queue        -> :func:`umq_flood`
 
+Both group counter events by pid before testing thresholds; since a
+:class:`repro.match.Fabric` records one counter lane per rank, the
+``min_samples`` / ``max_length`` defaults apply *per rank* — lower them
+for small multi-rank runs whose per-rank sample counts are tiny.
+
 Each returns a list of :class:`Finding`. ``analyze_all`` runs the suite —
 this is what found the BlockingProgress-lock contention analog in our
 serialized communication schedule (see benchmarks/fig_timeline.py), and
@@ -210,7 +215,7 @@ def _counter_events_by_pid(
 
 # Nominal cost of touching one queue entry, used to turn excess traversal
 # depth into suspect seconds when no measured search time is available.
-_NS_PER_QUEUE_ENTRY = 100.0
+NS_PER_QUEUE_ENTRY = 100.0
 
 
 def long_traversal(
@@ -231,7 +236,7 @@ def long_traversal(
             continue
         search = stats.get("match.prq.search_ns")
         suspect_ns = (search.total if search is not None
-                      else (depth.total - depth.count) * _NS_PER_QUEUE_ENTRY)
+                      else (depth.total - depth.count) * NS_PER_QUEUE_ENTRY)
         out.append(
             Finding(
                 kind="long_traversal",
@@ -268,7 +273,7 @@ def umq_flood(
         leaked = stats.get("match.umq.leaked")
         search = stats.get("match.umq.search_ns")
         suspect_ns = (search.total if search is not None
-                      else length.total * _NS_PER_QUEUE_ENTRY)
+                      else length.total * NS_PER_QUEUE_ENTRY)
         detail = (f", {leaked.total:.0f} entries leaked"
                   if leaked is not None and leaked.total else "")
         out.append(

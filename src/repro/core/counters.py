@@ -16,6 +16,12 @@ Snapshots serialize into :class:`repro.core.events.Event`-compatible
 records (category ``"counter"``, zero duration, stats in ``attrs``) so the
 existing timeline export, GraphFrame aggregation and automated analyses
 all work on counter data unchanged.
+
+One registry can carry multiple *lanes* (:meth:`CounterRegistry.lane`):
+per-pid views sharing the same thread-local buffers and drain machinery,
+so a :class:`repro.match.Fabric` records one lane per rank and snapshots
+render one timeline track per rank while :meth:`CounterRegistry.drain`
+still returns the cross-rank aggregate.
 """
 from __future__ import annotations
 
@@ -30,9 +36,10 @@ from .events import Event
 COUNTER_CATEGORY = "counter"
 COUNTER_PREFIX = "counter/"
 
-# (name, value, is_observation) delta records; counters accumulate value,
-# observations additionally feed min/max and the power-of-two histogram.
-_Delta = Tuple[str, float, bool]
+# (pid, name, value, is_observation) delta records; counters accumulate
+# value, observations additionally feed min/max and the power-of-two
+# histogram. pid tags the lane the delta belongs to.
+_Delta = Tuple[int, str, float, bool]
 
 
 def _pow2_bin(value: float) -> int:
@@ -110,6 +117,32 @@ class CounterStat:
         return st
 
 
+class CounterLane:
+    """Per-pid view of a registry: shares the registry's thread-local
+    buffers (and therefore its lock-free hot path), but tags every delta
+    with this lane's pid so per-rank statistics survive the merge."""
+
+    __slots__ = ("_reg", "pid")
+
+    def __init__(self, registry: "CounterRegistry", pid: int):
+        self._reg = registry
+        self.pid = pid
+
+    @property
+    def enabled(self) -> bool:
+        return self._reg.enabled
+
+    def count(self, name: str, value: float = 1) -> None:
+        if self._reg.enabled:
+            self._reg._buffer_for_current_thread().append(
+                (self.pid, name, value, False))
+
+    def observe(self, name: str, value: float) -> None:
+        if self._reg.enabled:
+            self._reg._buffer_for_current_thread().append(
+                (self.pid, name, value, True))
+
+
 class CounterRegistry:
     """Thread-safe, low-overhead counter sink (drain-on-read)."""
 
@@ -118,6 +151,8 @@ class CounterRegistry:
         self._registry_lock = threading.Lock()   # cold path only
         self._buffers: Dict[int, List[_Delta]] = {}
         self._merged: Dict[str, CounterStat] = {}
+        self._merged_by_pid: Dict[Tuple[int, str], CounterStat] = {}
+        self._lanes: Dict[int, CounterLane] = {}
         self.enabled = True
 
     # -- producer side (hot path, lock-free after first call per thread) --
@@ -133,33 +168,58 @@ class CounterRegistry:
     def count(self, name: str, value: float = 1) -> None:
         """Monotonic counter increment."""
         if self.enabled:
-            self._buffer_for_current_thread().append((name, value, False))
+            self._buffer_for_current_thread().append(
+                (self.pid, name, value, False))
 
     def observe(self, name: str, value: float) -> None:
         """Histogram observation (feeds min/max and power-of-two bins)."""
         if self.enabled:
-            self._buffer_for_current_thread().append((name, value, True))
+            self._buffer_for_current_thread().append(
+                (self.pid, name, value, True))
+
+    def lane(self, pid: int) -> CounterLane:
+        """Per-pid producer view (one lane per rank; cached)."""
+        lane = self._lanes.get(pid)
+        if lane is None:
+            with self._registry_lock:
+                lane = self._lanes.setdefault(pid, CounterLane(self, pid))
+        return lane
 
     # -- consumer side --
 
     def drain(self) -> Dict[str, CounterStat]:
         """Merge all buffered deltas into the aggregate stats and return
-        the full aggregate (same snapshot-and-clear idiom as Collector)."""
+        the full aggregate (same snapshot-and-clear idiom as Collector).
+        Lane structure is preserved in parallel for :meth:`drain_lanes`."""
         with self._registry_lock:
             idents = list(self._buffers.keys())
         for ident in idents:
             buf = self._buffers[ident]
             n = len(buf)
-            for name, value, obs in buf[:n]:
+            for pid, name, value, obs in buf[:n]:
                 st = self._merged.get(name)
                 if st is None:
                     st = self._merged[name] = CounterStat(name=name)
                 st.add(value, obs)
+                pst = self._merged_by_pid.get((pid, name))
+                if pst is None:
+                    pst = self._merged_by_pid[(pid, name)] = (
+                        CounterStat(name=name))
+                pst.add(value, obs)
             del buf[:n]
         return dict(self._merged)
 
+    def drain_lanes(self) -> Dict[int, Dict[str, CounterStat]]:
+        """Per-pid statistics (drains first). The aggregate returned by
+        :meth:`drain` is the merge of these lanes."""
+        self.drain()
+        out: Dict[int, Dict[str, CounterStat]] = {}
+        for (pid, name), st in self._merged_by_pid.items():
+            out.setdefault(pid, {})[name] = st
+        return out
+
     def value(self, name: str) -> float:
-        """Total of one counter (drains first)."""
+        """Total of one counter (drains first, aggregated across lanes)."""
         st = self.drain().get(name)
         return st.total if st else 0.0
 
@@ -168,6 +228,7 @@ class CounterRegistry:
             for buf in self._buffers.values():
                 del buf[:]
             self._merged.clear()
+            self._merged_by_pid.clear()
 
     # -- Event bridge ------------------------------------------------------
 
@@ -178,23 +239,27 @@ class CounterRegistry:
         counter data. Snapshot-and-clear: each call emits a *delta*, so
         periodic snapshots of one registry merge additively in
         :func:`counter_stats` without double-counting (same reason the
-        paper's counters are drained, not read, per interval)."""
+        paper's counters are drained, not read, per interval). Lane deltas
+        keep their pid, so per-rank lanes come out as separate timeline
+        tracks."""
         t = t_ns if t_ns is not None else time.perf_counter_ns()
         out: List[Event] = []
-        stats = self.drain()
+        lanes = self.drain_lanes()
         with self._registry_lock:
             self._merged = {}
-        for name, st in sorted(stats.items()):
-            out.append(Event(
-                name=COUNTER_PREFIX + name,
-                path=(path_root,) + tuple(name.split(".")),
-                category=COUNTER_CATEGORY,
-                t_start=t,
-                t_end=t,
-                pid=self.pid,
-                tid=0,
-                attrs=st.to_attrs(),
-            ))
+            self._merged_by_pid = {}
+        for pid in sorted(lanes):
+            for name, st in sorted(lanes[pid].items()):
+                out.append(Event(
+                    name=COUNTER_PREFIX + name,
+                    path=(path_root,) + tuple(name.split(".")),
+                    category=COUNTER_CATEGORY,
+                    t_start=t,
+                    t_end=t,
+                    pid=pid,
+                    tid=0,
+                    attrs=st.to_attrs(),
+                ))
         return out
 
 

@@ -3,10 +3,14 @@ adapted per DESIGN.md §2: no TPU wall clock exists in this container, so the
 timeline is *reconstructed* from the compiled module — the schedule XLA will
 actually execute — with each op costed by the roofline terms).
 
-Two lanes per device, mirroring the paper's user-thread/progress-thread view:
+Lanes per device, mirroring the paper's user-thread/progress-thread view:
 
     tid 0  "compute stream"  (MXU/VPU time = max(flops, hbm) term per segment)
     tid 1  "ICI stream"      (collective wire time)
+    tid 2  "match engine"    (measured PRQ/UMQ search time projected onto
+                              the modeled collectives — method-2 counters
+                              on the modeled timeline, via
+                              :func:`overlay_match_lane`)
 
 A *serialized* schedule places each collective's cost on the ICI lane while
 the compute lane idles (one queue). An *overlapped* schedule (async
@@ -19,10 +23,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from .counters import CounterStat
 from .events import Event
 from .hlo import parse_collectives
 from .hlo_cost import module_cost, parse_module, _local_cost
-from .roofline import HW
+from .roofline import HW, match_seconds
+
+MATCH_TID = 2
 
 
 @dataclasses.dataclass
@@ -189,3 +196,44 @@ def to_events(segments: List[Segment], pid: int = 0,
                 pid=pid, tid=1,
             ))
     return events
+
+
+def overlay_match_lane(events: List[Event],
+                       stats: Dict[str, CounterStat],
+                       pid: int = 0, tid: int = MATCH_TID) -> List[Event]:
+    """Project measured matching-engine time onto a modeled timeline.
+
+    The method-2 counters measure how long the host-side matching path
+    spent searching the PRQ/UMQ for the whole run; the modeled timeline
+    knows which collectives the compiled step executes and how long each
+    rides the wire. Apportion the measured seconds over the modeled
+    collective events in proportion to their wire time and lay them on a
+    third "match engine" lane, so a defective engine literally widens the
+    matching track under the collective that pays for it.
+
+    Returns the new lane's events (append them to ``events`` before
+    exporting); empty when there are no collectives or no measured time.
+    """
+    total_s = match_seconds(stats)
+    colls = [e for e in events if e.category == "collective"
+             and e.pid == pid]
+    if not colls or total_s <= 0:
+        return []
+    t_wire = sum(e.duration for e in colls) or len(colls)
+    depth = stats.get("match.prq.traversal_depth")
+    umq = stats.get("match.umq.length")
+    out: List[Event] = []
+    for e in colls:
+        share = (e.duration or 1) / t_wire
+        dur = int(total_s * share * 1e9)
+        attrs = {"share": share, "match_s_total": total_s}
+        if depth is not None and depth.count:
+            attrs["prq_depth_mean"] = depth.mean
+        if umq is not None and umq.count:
+            attrs["umq_len_max"] = umq.vmax
+        out.append(Event(
+            name=f"match/{e.name}", path=("step", "match", e.name),
+            category="match", t_start=e.t_start, t_end=e.t_start + dur,
+            pid=pid, tid=tid, attrs=attrs,
+        ))
+    return out

@@ -8,11 +8,19 @@ All inputs are per-device quantities from the SPMD-partitioned module (the
 compiled module *is* the per-device program), which is equivalent to the
 global/(chips * peak) formulation. The dominant term approximates the step
 time lower bound; its fraction of the total is the roofline fraction.
+
+``match_s`` optionally feeds *measured* message-matching overhead (the
+method-2 PRQ/UMQ search counters, via :func:`match_seconds`) into the
+collective term: host-side matching rides the communication critical
+path, so a defective engine shows up as a fatter collective bar on the
+modeled timeline — counters and the model meet in one place.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Optional
+
+from .counters import CounterStat
 
 # TPU v5e, per chip
 HW = {
@@ -32,6 +40,8 @@ class Roofline:
     n_chips: int
     # model facts
     model_flops: Optional[float] = None      # 6*N*D (active params) global
+    # measured matching-engine overhead (method-2 counters), seconds
+    match_s: Optional[float] = None
     hw: Dict[str, float] = dataclasses.field(default_factory=lambda: dict(HW))
 
     @property
@@ -43,8 +53,13 @@ class Roofline:
         return self.hbm_bytes / self.hw["hbm_bw"]
 
     @property
+    def t_match(self) -> float:
+        """Measured PRQ/UMQ search time (0 when no counters were fed)."""
+        return self.match_s or 0.0
+
+    @property
     def t_collective(self) -> float:
-        return self.wire_bytes / self.hw["ici_bw"]
+        return self.wire_bytes / self.hw["ici_bw"] + self.t_match
 
     @property
     def bound(self) -> str:
@@ -97,6 +112,7 @@ class Roofline:
             "model_flops": self.model_flops,
             "t_compute": self.t_compute,
             "t_memory": self.t_memory,
+            "t_match": self.t_match,
             "t_collective": self.t_collective,
             "bound": self.bound,
             "t_bound": self.t_bound,
@@ -105,12 +121,31 @@ class Roofline:
         }
 
     def summary(self) -> str:
+        coll = f"collective {self.t_collective * 1e3:9.3f} ms"
+        if self.t_match:
+            coll += f" (incl. match {self.t_match * 1e3:.3f} ms)"
+        parts = [
+            f"compute {self.t_compute * 1e3:9.3f} ms",
+            f"memory {self.t_memory * 1e3:9.3f} ms",
+            coll,
+            f"bound={self.bound:10s}",
+        ]
         uf = self.useful_flops_fraction
+        if uf is not None:
+            parts.append(f"useful={uf:.3f}")
         mfu = self.mfu_bound
-        return (
-            f"compute {self.t_compute * 1e3:9.3f} ms | "
-            f"memory {self.t_memory * 1e3:9.3f} ms | "
-            f"collective {self.t_collective * 1e3:9.3f} ms | "
-            f"bound={self.bound:10s} | "
-            f"useful={uf:.3f} | " if uf is not None else ""
-        ) + (f"mfu_bound={mfu:.3f}" if mfu is not None else "")
+        if mfu is not None:
+            parts.append(f"mfu_bound={mfu:.3f}")
+        return " | ".join(parts)
+
+
+def match_seconds(stats: Dict[str, CounterStat]) -> float:
+    """Measured matching-engine search time out of method-2 counter stats
+    (from :meth:`CounterRegistry.drain`, :func:`counter_stats` over
+    snapshot events, or a trace replay's ``totals()``)."""
+    total_ns = 0.0
+    for name in ("match.prq.search_ns", "match.umq.search_ns"):
+        st = stats.get(name)
+        if st is not None:
+            total_ns += st.total
+    return total_ns / 1e9

@@ -3,8 +3,8 @@
 # implementation contains, instrumented with lightweight counters, plus
 # the point-to-point decomposition of the comm layer's collectives and
 # two seeded, switchable defects for the detectors to find.
-from .engine import (ANY_SOURCE, ANY_TAG, MODES, Fabric, MatchEngine,
-                     Message, PostedRecv)
+from .engine import (ANY_SOURCE, ANY_TAG, MODE_ALIASES, MODES, Fabric,
+                     MatchEngine, Message, PostedRecv, canonical_mode)
 
-__all__ = ["ANY_SOURCE", "ANY_TAG", "MODES", "Fabric", "MatchEngine",
-           "Message", "PostedRecv"]
+__all__ = ["ANY_SOURCE", "ANY_TAG", "MODE_ALIASES", "MODES", "Fabric",
+           "MatchEngine", "Message", "PostedRecv", "canonical_mode"]

@@ -31,6 +31,7 @@ traffic mix the paper's histograms are drawn from.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import time
@@ -43,6 +44,19 @@ ANY_SOURCE = -1
 ANY_TAG = -1
 
 MODES = ("binned", "linear", "leaky_umq")
+# "fifo" is the flat FIFO-per-envelope view of the fixed design — accepted
+# wherever a mode is taken (benchmarks/replay_sweep.py uses it).
+MODE_ALIASES = {"fifo": "binned"}
+
+
+def canonical_mode(mode: str) -> str:
+    """Resolve aliases and validate an engine mode name."""
+    mode = MODE_ALIASES.get(mode, mode)
+    if mode not in MODES:
+        raise ValueError(
+            f"mode must be one of {MODES} (or aliases "
+            f"{tuple(MODE_ALIASES)}), got {mode!r}")
+    return mode
 
 
 @dataclasses.dataclass(slots=True)
@@ -163,16 +177,22 @@ class MatchEngine:
     ``arrive`` is the network-delivery analog (search PRQ, else park on
     UMQ). Every call records the counters the paper's method 2 plots:
     traversal depth, queue length, match latency, unexpected counts.
+
+    ``trace`` is an optional sink with an ``emit(dict)`` method (duck-typed
+    to avoid a dependency on :mod:`repro.trace`): every post/arrive writes
+    one schema record carrying the envelope, the per-engine sequence number
+    and the match outcome, which is what the offline replayer re-drives.
     """
 
     def __init__(self, rank: int = 0, mode: str = "binned",
-                 registry: Optional[CounterRegistry] = None):
-        if mode not in MODES:
-            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+                 registry: Optional[CounterRegistry] = None,
+                 trace=None):
         from .defects import LeakyUMQ, LinearPRQ
+        mode = canonical_mode(mode)
         self.rank = rank
         self.mode = mode
         self.reg = registry if registry is not None else global_registry()
+        self.trace = trace
         self.prq = LinearPRQ() if mode == "linear" else BinnedPRQ()
         self.umq = LeakyUMQ(self.reg) if mode == "leaky_umq" else GCUMQ()
         self._seq = itertools.count()
@@ -193,6 +213,11 @@ class MatchEngine:
             self.reg.observe("match.prq.length", len(self.prq))
             self.prq.post(recv)
         self.reg.observe("match.umq.search_ns", time.perf_counter_ns() - t0)
+        if self.trace is not None:
+            self.trace.emit({
+                "t": "post", "rank": self.rank, "src": src, "tag": tag,
+                "comm": comm, "seq": recv.seq,
+                "hit": msg.seq if msg is not None else None})
         return recv
 
     # -- network delivery analog ------------------------------------------
@@ -208,11 +233,16 @@ class MatchEngine:
         if recv is not None:
             recv.message = msg
             self.reg.count("match.expected")
-            return recv
-        self.umq.add(msg)
-        self.reg.count("match.unexpected")
-        self.reg.observe("match.umq.length", len(self.umq))
-        return None
+        else:
+            self.umq.add(msg)
+            self.reg.count("match.unexpected")
+            self.reg.observe("match.umq.length", len(self.umq))
+        if self.trace is not None:
+            self.trace.emit({
+                "t": "arr", "rank": self.rank, "src": src, "tag": tag,
+                "comm": comm, "nb": nbytes, "seq": msg.seq,
+                "match": recv.seq if recv is not None else None})
+        return recv
 
     # -- introspection -----------------------------------------------------
 
@@ -229,27 +259,75 @@ class Fabric:
     arrives before its receive is posted (exercising the UMQ) and every
     ``wildcard_every``-th receive is posted with ``ANY_SOURCE``
     (exercising wildcard matching — and defect 2's leak path).
+
+    Each rank's engine records into its own registry *lane*
+    (``registry.lane(rank)``), so counter snapshots carry one pid per rank
+    and render as separate timeline tracks; the registry's aggregate drain
+    is unchanged. With ``trace`` set (a :class:`repro.trace.TraceWriter`
+    or any ``emit(dict)`` sink), every collective dispatch writes a phase
+    marker and every engine op writes a replayable record.
     """
 
     def __init__(self, mode: str = "binned",
                  registry: Optional[CounterRegistry] = None,
-                 unexpected_every: int = 3, wildcard_every: int = 4):
-        self.mode = mode
+                 unexpected_every: int = 3, wildcard_every: int = 4,
+                 trace=None, per_rank_lanes: bool = True):
+        self.mode = canonical_mode(mode)
         self.reg = registry if registry is not None else global_registry()
         self.unexpected_every = unexpected_every
         self.wildcard_every = wildcard_every
+        self.trace = trace
+        self.per_rank_lanes = per_rank_lanes
         self._engines: Dict[int, MatchEngine] = {}
         self._tick = itertools.count(1)
+        self._label: Optional[str] = None
+        self._depth = 0                 # collective nesting (phase markers)
 
     def engine(self, rank: int) -> MatchEngine:
         eng = self._engines.get(rank)
         if eng is None:
+            reg = self.reg.lane(rank) if self.per_rank_lanes else self.reg
             eng = self._engines[rank] = MatchEngine(
-                rank=rank, mode=self.mode, registry=self.reg)
+                rank=rank, mode=self.mode, registry=reg, trace=self.trace)
         return eng
 
     def engines(self) -> List[MatchEngine]:
         return [self._engines[r] for r in sorted(self._engines)]
+
+    # -- trace phase markers ----------------------------------------------
+
+    def set_label(self, label: Optional[str]) -> Optional[str]:
+        """Set the label stamped on subsequent phase markers (the comm
+        layer uses this to name phases after their dispatch site, e.g.
+        ``psum(x)`` or ``ring_all_gather(r)``). Returns the previous
+        label so callers can restore it."""
+        prev = self._label
+        self._label = label
+        return prev
+
+    def phase(self, label: str, **attrs) -> None:
+        """Write an explicit phase marker into the trace (no-op when
+        untraced). The replayer snapshots counters at every marker, which
+        is what makes per-phase diffing possible."""
+        if self.trace is not None:
+            rec = {"t": "phase", "op": "phase", "label": label}
+            rec.update(attrs)
+            self.trace.emit(rec)
+
+    @contextlib.contextmanager
+    def _collective(self, op: str, **attrs):
+        """Phase-mark one collective dispatch; nested decompositions
+        (all_reduce -> reduce_scatter + all_gather) stay in the outer
+        phase."""
+        if self.trace is not None and self._depth == 0:
+            rec = {"t": "phase", "op": op, "label": self._label or op}
+            rec.update(attrs)
+            self.trace.emit(rec)
+        self._depth += 1
+        try:
+            yield
+        finally:
+            self._depth -= 1
 
     # -- one communication phase ------------------------------------------
 
@@ -281,26 +359,31 @@ class Fabric:
 
     def ppermute(self, perm, nbytes: int = 0, tag: int = 0,
                  comm: int = 0) -> None:
-        self.exchange(list(perm), tag=tag, nbytes=nbytes, comm=comm)
+        with self._collective("ppermute", tag=tag, nb=nbytes):
+            self.exchange(list(perm), tag=tag, nbytes=nbytes, comm=comm)
 
     def all_gather(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
-        for step in range(1, n):
-            self.exchange(self._ring(n), tag=step, nbytes=nbytes // max(n, 1),
-                          comm=comm)
+        with self._collective("all_gather", n=n, nb=nbytes):
+            for step in range(1, n):
+                self.exchange(self._ring(n), tag=step,
+                              nbytes=nbytes // max(n, 1), comm=comm)
 
     def reduce_scatter(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
-        for step in range(1, n):
-            self.exchange(self._ring(n, -1), tag=step,
-                          nbytes=nbytes // max(n, 1), comm=comm)
+        with self._collective("reduce_scatter", n=n, nb=nbytes):
+            for step in range(1, n):
+                self.exchange(self._ring(n, -1), tag=step,
+                              nbytes=nbytes // max(n, 1), comm=comm)
 
     def all_reduce(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
         # ring all-reduce = reduce-scatter phase + all-gather phase
-        self.reduce_scatter(n, nbytes=nbytes, comm=comm)
-        self.all_gather(n, nbytes=nbytes, comm=comm)
+        with self._collective("all_reduce", n=n, nb=nbytes):
+            self.reduce_scatter(n, nbytes=nbytes, comm=comm)
+            self.all_gather(n, nbytes=nbytes, comm=comm)
 
     def all_to_all(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
-        pairs = [(i, j) for i in range(n) for j in range(n) if i != j]
-        self.exchange(pairs, tag=0, nbytes=nbytes // max(n, 1), comm=comm)
+        with self._collective("all_to_all", n=n, nb=nbytes):
+            pairs = [(i, j) for i in range(n) for j in range(n) if i != j]
+            self.exchange(pairs, tag=0, nbytes=nbytes // max(n, 1), comm=comm)
 
     # -- introspection -----------------------------------------------------
 

@@ -1,0 +1,22 @@
+# Communication trace capture + deterministic what-if replay: record the
+# matching fabric's post/arrive stream (and the progress engine's lane
+# events) to a versioned JSONL trace once, then re-drive it offline
+# through any engine configuration — counters, detectors and the trace
+# differ all run on replayed data, no workload re-execution needed.
+from .diff import PhaseDelta, TraceDiff, diff
+from .io import TraceWriter, read_trace
+from .recorder import record_collectives, record_fabric
+from .replay import (LOCK_REGION, PhaseStats, Replayer, ReplayResult,
+                     replay, replay_progress)
+from .schema import (SCHEMA_VERSION, TRACE_FORMAT, TraceSchemaError,
+                     make_header, validate_header, validate_record)
+
+__all__ = [
+    "PhaseDelta", "TraceDiff", "diff",
+    "TraceWriter", "read_trace",
+    "record_collectives", "record_fabric",
+    "LOCK_REGION", "PhaseStats", "Replayer", "ReplayResult", "replay",
+    "replay_progress",
+    "SCHEMA_VERSION", "TRACE_FORMAT", "TraceSchemaError", "make_header",
+    "validate_header", "validate_record",
+]

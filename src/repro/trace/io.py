@@ -1,0 +1,94 @@
+"""JSONL trace writer/reader (the persistence layer of ``repro.trace``).
+
+The writer is the ``emit(dict)`` sink the instrumented layers speak
+(:class:`repro.match.MatchEngine`, :class:`repro.match.Fabric`,
+:class:`repro.comm.progress.ProgressEngine`): one compact JSON object per
+line, header first, ``.gz`` transparently compressed like
+:mod:`repro.core.timeline`. ``emit`` is serialized by a lock because the
+progress engine writes from two threads.
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from ..core.counters import CounterRegistry
+from .schema import (TraceSchemaError, make_header, validate_header,
+                     validate_record)
+
+
+def _open(path: str, write: bool):
+    if path.endswith(".gz"):
+        return gzip.open(path, "wt" if write else "rt")
+    return open(path, "w" if write else "r")
+
+
+class TraceWriter:
+    """Append-only trace sink with a versioned header.
+
+    Usable as a context manager; ``close`` is idempotent. ``n_records``
+    counts everything written including the header.
+    """
+
+    def __init__(self, path: str, mode: str = "binned",
+                 meta: Optional[Dict] = None):
+        self.path = str(path)
+        self._lock = threading.Lock()
+        self._f = _open(self.path, write=True)
+        self.n_records = 0
+        self._emit_unlocked(make_header(mode, meta))
+
+    def _emit_unlocked(self, rec: Dict) -> None:
+        self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        self.n_records += 1
+
+    def emit(self, rec: Dict) -> None:
+        with self._lock:
+            if self._f is None:
+                raise ValueError(f"trace {self.path} is closed")
+            self._emit_unlocked(rec)
+
+    def snapshot(self, registry: CounterRegistry) -> None:
+        """Write the registry's per-lane counter statistics as a ``snap``
+        record (drains, so the snapshot reflects everything recorded so
+        far; lane pids key the stats)."""
+        lanes = registry.drain_lanes()
+        stats = {str(pid): {name: st.to_attrs()
+                            for name, st in sorted(per.items())}
+                 for pid, per in sorted(lanes.items())}
+        self.emit({"t": "snap", "stats": stats})
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+    def __enter__(self) -> "TraceWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_trace(path: str) -> Tuple[Dict, List[Dict]]:
+    """Load and validate a trace: returns ``(header, records)``. Raises
+    :class:`repro.trace.schema.TraceSchemaError` on a version or shape
+    mismatch — the schema gate ``scripts/verify.sh`` exercises."""
+    header: Optional[Dict] = None
+    records: List[Dict] = []
+    with _open(str(path), write=False) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if header is None:
+                header = validate_header(rec)
+            else:
+                records.append(validate_record(rec))
+    if header is None:
+        raise TraceSchemaError(f"empty trace file (no header): {path}")
+    return header, records

@@ -1,0 +1,63 @@
+"""Recorder: hook the comm layer and the matching fabric, persist a trace.
+
+Two entry points, both context managers yielding the traced
+:class:`repro.match.Fabric`:
+
+  * :func:`record_fabric` — trace a fabric driven directly (benchmarks,
+    offline workloads; no JAX involved).
+  * :func:`record_collectives` — additionally install the fabric on the
+    comm layer (:func:`repro.comm.collectives.configure_matching`), so
+    every ``psum`` / ``all_gather`` / ``ppermute`` a shard_map program
+    dispatches — including the ring schedules and halo faces that route
+    through them — is decomposed, matched *and recorded*.
+
+On exit both write a final counter ``snap`` record (the record-time
+ground truth replays are checked against) and close the file. The
+progress engine is traced by passing the same writer to
+``ProgressEngine(trace=writer)`` — its submit/process lane events land in
+the same trace and replay under either queue discipline.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Iterator, Optional
+
+from ..core.counters import CounterRegistry
+from ..match import Fabric, canonical_mode
+from .io import TraceWriter
+
+
+@contextlib.contextmanager
+def record_fabric(path: str, mode: str = "binned",
+                  registry: Optional[CounterRegistry] = None,
+                  meta: Optional[Dict] = None,
+                  **fabric_kwargs) -> Iterator[Fabric]:
+    """Yield a fabric whose every engine op and collective phase is
+    appended to the JSONL trace at ``path``."""
+    reg = registry if registry is not None else CounterRegistry()
+    with TraceWriter(path, mode=canonical_mode(mode), meta=meta) as writer:
+        fabric = Fabric(mode=mode, registry=reg, trace=writer,
+                        **fabric_kwargs)
+        try:
+            yield fabric
+        finally:
+            writer.snapshot(reg)
+
+
+@contextlib.contextmanager
+def record_collectives(path: str, mode: str = "binned",
+                       registry: Optional[CounterRegistry] = None,
+                       meta: Optional[Dict] = None,
+                       **fabric_kwargs) -> Iterator[Fabric]:
+    """Like :func:`record_fabric`, but also routes the live comm layer
+    through the traced fabric for the duration of the block (restoring
+    whatever fabric was configured before)."""
+    from ..comm import collectives
+    with record_fabric(path, mode=mode, registry=registry, meta=meta,
+                       **fabric_kwargs) as fabric:
+        prev = collectives.matching_fabric()
+        collectives.configure_matching(fabric)
+        try:
+            yield fabric
+        finally:
+            collectives.configure_matching(prev)

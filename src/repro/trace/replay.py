@@ -1,0 +1,284 @@
+"""Deterministic what-if replay of recorded communication traces.
+
+A recorded trace is an ordered stream of matching-engine operations
+(post/arrive with envelopes), phase markers and progress-engine lane
+events. Replay re-drives that exact stream through a *fresh* set of
+engines in any mode (``binned``/``fifo``, ``linear``, ``leaky_umq``) —
+no JAX, no re-execution of the workload — and produces the same
+artifacts a live run produces:
+
+  * per-rank, per-phase counter statistics (one registry lane per rank),
+  * ``core.counters`` snapshot Events (category ``"counter"``) at every
+    phase boundary, so ``long_traversal`` / ``umq_flood`` and the rest of
+    :mod:`repro.core.analyses` run on replayed data unchanged,
+  * modeled progress-engine lock Events under either queue discipline
+    (the §4 shared-queue defect vs the incoming-queue fix), so
+    ``contention`` runs on replayed data too.
+
+Because the seeded defects change *cost*, never *matching* (the
+engine-mode equivalence property ``tests/test_match.py`` pins down),
+replaying under a different mode answers "what would this exact run have
+cost on that engine?" — and replaying under the same mode reproduces the
+recorded match order exactly (``divergences`` stays empty).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core.counters import CounterRegistry, CounterStat, counter_stats
+from ..core.events import Event
+from ..match import MatchEngine, canonical_mode
+from .io import read_trace
+from .schema import (REC_ARRIVE, REC_PHASE, REC_POST, REC_PROGRESS,
+                     REC_SNAPSHOT)
+
+# mirrors repro.comm.progress.LOCK_REGION without importing the comm layer
+# (which would pull in JAX — replay stays JAX-free)
+LOCK_REGION = "BlockingProgress lock"
+
+# synthetic spacing between phase snapshots on the replay timeline
+PHASE_NS = 1_000_000
+
+
+@dataclasses.dataclass
+class PhaseStats:
+    """Counter deltas attributed to one recorded phase, per rank."""
+
+    index: int
+    label: str
+    op: str
+    attrs: Dict = dataclasses.field(default_factory=dict)
+    stats: Dict[int, Dict[str, CounterStat]] = dataclasses.field(
+        default_factory=dict)
+
+    def metric(self, rank: int, name: str) -> Optional[CounterStat]:
+        return self.stats.get(rank, {}).get(name)
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    mode: str
+    progress_mode: Optional[str]
+    header: Dict
+    matches: List[Tuple[int, str, int, Optional[int]]]
+    divergences: List[Dict]
+    phases: List[PhaseStats]
+    events: List[Event]
+    registry: CounterRegistry
+    recorded_stats: Optional[Dict[int, Dict[str, CounterStat]]] = None
+
+    def totals(self) -> Dict[str, CounterStat]:
+        """Replayed counter statistics aggregated across ranks."""
+        return counter_stats(self.events)
+
+    def totals_by_rank(self) -> Dict[int, Dict[str, CounterStat]]:
+        per: Dict[int, List[Event]] = {}
+        for ev in self.events:
+            per.setdefault(ev.pid, []).append(ev)
+        return {pid: counter_stats(evs) for pid, evs in per.items()}
+
+
+def _parse_snap(rec: Dict) -> Dict[int, Dict[str, CounterStat]]:
+    out: Dict[int, Dict[str, CounterStat]] = {}
+    for pid, per in rec["stats"].items():
+        out[int(pid)] = {name: CounterStat.from_attrs(attrs)
+                         for name, attrs in per.items()}
+    return out
+
+
+def replay_progress(pe_records: Sequence[Dict], mode: str = "incoming",
+                    pid: int = 0, swap_ns: int = 1_000) -> List[Event]:
+    """Re-model recorded progress-engine lane events under a queue
+    discipline (deterministic queueing model over the recorded submit
+    times and processing quanta):
+
+      * ``"shared"`` — one queue: the progress thread holds the lock for
+        whole processing quanta, so a submit landing inside a busy span
+        waits for the span to end. Lock-hold Events overlap across
+        threads, which ``core.analyses.contention`` flags — the paper's
+        Fig. 8, reconstructed offline.
+      * ``"incoming"`` — second queue: the lock is held only for an O(1)
+        append/swap; lock Events never overlap and the timeline is clean.
+
+    tid 0 is the user thread, tid 1 the progress thread (the same lane
+    convention as the live timeline)."""
+    assert mode in ("shared", "incoming")
+    # concurrent submitters can win the trace-writer lock out of enqueue
+    # order; ts is captured pre-lock, so sorting restores arrival order
+    # before submits are paired positionally with FIFO-processed quanta
+    submits = sorted((r for r in pe_records if r.get("ev") == "submit"),
+                     key=lambda r: r["ts"])
+    procs = sorted((r for r in pe_records if r.get("ev") == "proc"),
+                   key=lambda r: r["ts"])
+    if not submits or not procs:
+        return []
+    base = min(r["ts"] for r in submits + procs)
+    events: List[Event] = []
+
+    def lock_event(tid: int, t0: int, t1: int) -> Event:
+        return Event(name=LOCK_REGION, path=("replay", LOCK_REGION),
+                     category="runtime", t_start=t0, t_end=t1, pid=pid,
+                     tid=tid, attrs={"lock": "request_queue",
+                                     "replayed": mode})
+
+    if mode == "shared":
+        # progress thread drains back-to-back, holding the lock for whole
+        # processing quanta; request i completes at C_i
+        spans: List[Tuple[int, int]] = []
+        completions: List[int] = []
+        frontier: Optional[int] = None
+        for sub, proc in zip(submits, procs):
+            s = sub["ts"] - base
+            start = s if frontier is None or frontier <= s else frontier
+            end = start + int(proc.get("dur", 0))
+            events.append(Event(
+                name="progress/process", path=("replay", "progress",
+                                               "process"),
+                category="runtime", t_start=start, t_end=end, pid=pid,
+                tid=1))
+            spans.append((start, end))
+            completions.append(end)
+            frontier = end
+        merged: List[Tuple[int, int]] = []
+        for a, b in spans:
+            if merged and a <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], b))
+            else:
+                merged.append((a, b))
+        for a, b in merged:
+            events.append(lock_event(1, a, b))
+        # submit j blocks behind the processing of every *earlier*
+        # request (the paper's Fig. 10: Isend latency grows with the
+        # number of pending requests). Submits without a matching proc
+        # record (engine shut down with requests still queued) block
+        # behind the last *known* completion.
+        for j, sub in enumerate(submits):
+            s = sub["ts"] - base
+            release = s + swap_ns
+            if j > 0 and completions:
+                release = max(release,
+                              completions[min(j, len(completions)) - 1])
+            events.append(lock_event(0, s, release))
+    else:
+        frontier = 0
+        for sub, proc in zip(submits, procs):
+            s = sub["ts"] - base
+            events.append(lock_event(0, s, s + swap_ns))
+            # instant swap on the progress thread: zero-width hold, no
+            # cross-thread overlap possible
+            events.append(lock_event(1, s + swap_ns, s + swap_ns))
+            start = max(s + swap_ns, frontier)
+            end = start + int(proc.get("dur", 0))
+            events.append(Event(
+                name="progress/process", path=("replay", "progress",
+                                               "process"),
+                category="runtime", t_start=start, t_end=end, pid=pid,
+                tid=1))
+            frontier = end
+    events.sort(key=lambda e: (e.t_start, e.t_end))
+    return events
+
+
+class Replayer:
+    """Re-drive a recorded trace through an alternate engine config.
+
+    ``mode`` overrides the engine mode (default: the recorded one);
+    ``progress_mode`` picks the queue discipline for progress-engine lane
+    events (default: leave them out unless the trace has any, then replay
+    as ``"incoming"``)."""
+
+    def __init__(self, mode: Optional[str] = None,
+                 progress_mode: Optional[str] = None,
+                 phase_ns: int = PHASE_NS):
+        self.mode = mode
+        self.progress_mode = progress_mode
+        self.phase_ns = phase_ns
+
+    def run(self, source: Union[str, Tuple[Dict, List[Dict]]]
+            ) -> ReplayResult:
+        if isinstance(source, (tuple, list)):
+            header, records = source
+        else:
+            header, records = read_trace(source)
+        mode = canonical_mode(self.mode or header.get("mode", "binned"))
+
+        registry = CounterRegistry()
+        engines: Dict[int, MatchEngine] = {}
+
+        def engine(rank: int) -> MatchEngine:
+            eng = engines.get(rank)
+            if eng is None:
+                eng = engines[rank] = MatchEngine(
+                    rank=rank, mode=mode, registry=registry.lane(rank))
+            return eng
+
+        phases: List[PhaseStats] = []
+        events: List[Event] = []
+        matches: List[Tuple[int, str, int, Optional[int]]] = []
+        divergences: List[Dict] = []
+        pe_records: List[Dict] = []
+        recorded_stats: Optional[Dict[int, Dict[str, CounterStat]]] = None
+        current = PhaseStats(index=0, label="prologue", op="phase")
+
+        def flush_phase() -> None:
+            t = (len(phases) + 1) * self.phase_ns
+            evs = registry.snapshot_events(t_ns=t)
+            per: Dict[int, List[Event]] = {}
+            for ev in evs:
+                ev.attrs["phase"] = current.label
+                ev.attrs["phase_index"] = current.index
+                per.setdefault(ev.pid, []).append(ev)
+            current.stats = {pidx: counter_stats(group)
+                             for pidx, group in per.items()}
+            phases.append(current)
+            events.extend(evs)
+
+        for rec in records:
+            kind = rec["t"]
+            if kind == REC_PHASE:
+                flush_phase()
+                current = PhaseStats(
+                    index=len(phases), label=rec["label"], op=rec["op"],
+                    attrs={k: v for k, v in rec.items()
+                           if k not in ("t", "op", "label")})
+            elif kind == REC_POST:
+                r = engine(rec["rank"]).post_recv(
+                    src=rec["src"], tag=rec["tag"], comm=rec.get("comm", 0))
+                got = r.message.seq if r.message is not None else None
+                matches.append((rec["rank"], "post", r.seq, got))
+                if "hit" in rec and rec["hit"] != got:
+                    divergences.append(
+                        {"rec": rec, "replayed": got, "mode": mode})
+            elif kind == REC_ARRIVE:
+                r = engine(rec["rank"]).arrive(
+                    src=rec["src"], tag=rec["tag"],
+                    comm=rec.get("comm", 0), nbytes=rec.get("nb", 0))
+                got = r.seq if r is not None else None
+                matches.append((rec["rank"], "arr", rec["seq"], got))
+                if "match" in rec and rec["match"] != got:
+                    divergences.append(
+                        {"rec": rec, "replayed": got, "mode": mode})
+            elif kind == REC_PROGRESS:
+                pe_records.append(rec)
+            elif kind == REC_SNAPSHOT:
+                recorded_stats = _parse_snap(rec)
+        flush_phase()
+
+        progress_mode = self.progress_mode
+        if pe_records:
+            progress_mode = progress_mode or "incoming"
+            events.extend(replay_progress(pe_records, progress_mode))
+
+        return ReplayResult(
+            mode=mode, progress_mode=progress_mode, header=header,
+            matches=matches, divergences=divergences, phases=phases,
+            events=events, registry=registry,
+            recorded_stats=recorded_stats)
+
+
+def replay(source: Union[str, Tuple[Dict, List[Dict]]],
+           mode: Optional[str] = None,
+           progress_mode: Optional[str] = None) -> ReplayResult:
+    """One-call replay: ``replay(path, mode="linear")``."""
+    return Replayer(mode=mode, progress_mode=progress_mode).run(source)

@@ -1,0 +1,85 @@
+"""Versioned record schema for ``repro.trace`` JSONL traces.
+
+A trace is one JSON object per line. The first line is the header; every
+following line is a record tagged by its ``"t"`` field:
+
+  ``hdr``    header: ``format``, ``schema`` (version), the engine ``mode``
+             the run was recorded under, free-form ``meta``.
+  ``post``   MPI_Irecv analog on one rank: envelope (``src``/``tag``/
+             ``comm``), the per-engine sequence number ``seq``, and the
+             match outcome ``hit`` (seq of the unexpected message the
+             receive pulled from the UMQ, or null).
+  ``arr``    network delivery on one rank: envelope plus payload size
+             ``nb``, ``seq``, and outcome ``match`` (seq of the posted
+             receive the message matched, or null -> parked on the UMQ).
+  ``phase``  phase marker: ``op`` (collective kind or ``"phase"`` for
+             explicit markers), human ``label``, optional attrs (``n``,
+             ``nb``, ``tag``). The replayer snapshots counters at every
+             marker — this is the alignment unit the differ works in.
+  ``pe``     progress-engine lane event: ``ev`` = ``submit`` (``ts``,
+             lock ``wait``) or ``proc`` (``ts``, processing ``dur``),
+             nanosecond timestamps.
+  ``snap``   counter snapshot: per-pid ``stats`` in the
+             :meth:`repro.core.counters.CounterStat.to_attrs` encoding.
+
+Schema changes MUST bump :data:`SCHEMA_VERSION`; readers reject traces
+whose version they do not understand (``scripts/verify.sh`` gates on
+this round-tripping).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+SCHEMA_VERSION = 1
+TRACE_FORMAT = "repro.trace"
+
+REC_HEADER = "hdr"
+REC_POST = "post"
+REC_ARRIVE = "arr"
+REC_PHASE = "phase"
+REC_PROGRESS = "pe"
+REC_SNAPSHOT = "snap"
+
+# required fields per record type (beyond "t")
+_REQUIRED = {
+    REC_POST: ("rank", "src", "tag", "seq"),
+    REC_ARRIVE: ("rank", "src", "tag", "seq"),
+    REC_PHASE: ("op", "label"),
+    REC_PROGRESS: ("ev", "ts"),
+    REC_SNAPSHOT: ("stats",),
+}
+
+
+class TraceSchemaError(ValueError):
+    """A trace file does not conform to the schema this reader speaks."""
+
+
+def make_header(mode: str, meta: Optional[Dict] = None) -> Dict:
+    return {"t": REC_HEADER, "format": TRACE_FORMAT,
+            "schema": SCHEMA_VERSION, "mode": mode, "meta": meta or {}}
+
+
+def validate_header(rec: Dict) -> Dict:
+    if rec.get("t") != REC_HEADER:
+        raise TraceSchemaError(
+            f"first record must be a {REC_HEADER!r} header, got "
+            f"{rec.get('t')!r}")
+    if rec.get("format") != TRACE_FORMAT:
+        raise TraceSchemaError(
+            f"not a {TRACE_FORMAT} trace (format={rec.get('format')!r})")
+    if rec.get("schema") != SCHEMA_VERSION:
+        raise TraceSchemaError(
+            f"unsupported schema version {rec.get('schema')!r} "
+            f"(this reader speaks version {SCHEMA_VERSION})")
+    return rec
+
+
+def validate_record(rec: Dict) -> Dict:
+    kind = rec.get("t")
+    if kind not in _REQUIRED:
+        raise TraceSchemaError(f"unknown record type {kind!r}")
+    missing = [f for f in _REQUIRED[kind] if f not in rec]
+    if missing:
+        raise TraceSchemaError(
+            f"{kind!r} record missing required field(s) {missing}")
+    return rec

@@ -1,0 +1,246 @@
+"""Trace differ on the seeded defects, progress-engine what-if replay,
+and the match-latency -> roofline/device-timeline bridge."""
+import pytest
+
+from repro.core import analyses
+from repro.core.counters import CounterRegistry
+from repro.core.device_timeline import (MATCH_TID, Segment,
+                                        overlay_match_lane, to_events)
+from repro.core.roofline import Roofline, match_seconds
+from repro.match import MatchEngine
+from repro.trace import diff, read_trace, record_fabric, replay, \
+    replay_progress
+
+DEFECT_KINDS = ("long_traversal", "umq_flood")
+
+
+@pytest.fixture(scope="module")
+def seeded_trace(tmp_path_factory):
+    """One recorded run: collectives + a deep-PRQ burst, dense
+    unexpected/wildcard mix (the leak fuel). Recorded under the linear
+    defect — the trace itself is mode-independent."""
+    path = str(tmp_path_factory.mktemp("trace") / "seeded.jsonl")
+    reg = CounterRegistry()
+    with record_fabric(path, mode="linear", registry=reg,
+                       unexpected_every=2, wildcard_every=3) as fab:
+        for r in range(8):
+            fab.all_reduce(8, nbytes=1 << 14)
+            fab.all_gather(8, nbytes=1 << 13)
+            fab.phase("burst", rank=0)
+            eng = fab.engine(0)
+            for t in range(128):
+                eng.post_recv(src=1, tag=10_000 + t)
+            for t in reversed(range(128)):
+                eng.arrive(src=1, tag=10_000 + t)
+    return read_trace(path)
+
+
+@pytest.fixture(scope="module")
+def replays(seeded_trace):
+    return {mode: replay(seeded_trace, mode=mode)
+            for mode in ("binned", "linear", "leaky_umq")}
+
+
+# ---------------------------------------------------------------- differ
+
+def test_diff_flags_linear_defect(replays):
+    d = diff(replays["binned"], replays["linear"])
+    kinds = {f.kind for f in d.flags()}
+    assert kinds == {"long_traversal"}
+    f = d.flags()[0]
+    assert "linear" in f.message and f.severity > 0
+
+
+def test_diff_flags_leaky_umq_defect(replays):
+    d = diff(replays["binned"], replays["leaky_umq"])
+    kinds = {f.kind for f in d.flags(umq_len=32.0)}
+    assert "umq_flood" in kinds
+    assert "long_traversal" not in kinds
+
+
+def test_diff_healthy_replay_stays_clean(seeded_trace, replays):
+    again = replay(seeded_trace, mode="fifo")
+    d = diff(replays["binned"], again)
+    assert d.flags() == []
+    # and the per-phase cells agree exactly (deterministic metrics)
+    for delta in d.deltas:
+        assert delta.depth_mean[0] == delta.depth_mean[1]
+        assert delta.umq_len_max[0] == delta.umq_len_max[1]
+
+
+def test_diff_aligns_per_phase_and_rank(replays):
+    d = diff(replays["binned"], replays["linear"])
+    burst = [x for x in d.deltas if x.label == "burst" and x.rank == 0]
+    assert burst, "burst phase must align by (phase, rank)"
+    # the linear engine's traversal regression concentrates in the burst
+    assert max(x.depth_mean[1] for x in burst) > 8
+    colls = [x for x in d.deltas if x.op == "all_reduce"]
+    assert colls and all(x.index >= 0 for x in colls)
+    assert "trace diff" in d.report()
+
+
+def test_detectors_run_on_replayed_events(replays):
+    flagged = {f.kind for f in analyses.analyze_all(replays["linear"].events)
+               if f.kind in DEFECT_KINDS}
+    assert "long_traversal" in flagged
+    flagged = {f.kind
+               for f in analyses.analyze_all(replays["leaky_umq"].events)
+               if f.kind in DEFECT_KINDS}
+    assert "umq_flood" in flagged
+    clean = {f.kind for f in analyses.analyze_all(replays["binned"].events)
+             if f.kind in DEFECT_KINDS}
+    assert clean == set()
+
+
+# ------------------------------------------------- progress-engine what-if
+
+def _pe_stream(n=6, gap_ns=10_000, dur_ns=2_000_000):
+    """Synthetic recorded lane events: submits arriving much faster than
+    the progress thread processes (the paper's Fig. 10 load)."""
+    recs = []
+    for i in range(n):
+        recs.append({"t": "pe", "ev": "submit", "ts": 1000 + i * gap_ns,
+                     "wait": 0})
+    for i in range(n):
+        recs.append({"t": "pe", "ev": "proc", "ts": 1000 + i * gap_ns,
+                     "dur": dur_ns})
+    return recs
+
+
+def test_progress_replay_shared_contends():
+    events = replay_progress(_pe_stream(), mode="shared")
+    findings = analyses.contention(events)
+    assert findings and all(f.kind == "contention" for f in findings)
+    # the modeled wait grows with queue depth: later submits wait longer
+    locks0 = sorted((e for e in events if e.tid == 0),
+                    key=lambda e: e.t_start)
+    waits = [e.duration for e in locks0]
+    assert waits[-1] > waits[1] > 0
+
+
+def test_progress_replay_incoming_is_clean():
+    events = replay_progress(_pe_stream(), mode="incoming")
+    assert events
+    assert analyses.contention(events) == []
+
+
+def test_progress_replay_empty_stream():
+    assert replay_progress([], mode="shared") == []
+
+
+def test_progress_replay_unprocessed_submits():
+    """An engine shut down with requests still queued records submits
+    with no matching proc; shared-mode replay must model them against
+    the last known completion, not crash."""
+    recs = _pe_stream(n=2)
+    for i in range(3):                    # 3 extra never-processed submits
+        recs.append({"t": "pe", "ev": "submit",
+                     "ts": 1000 + (2 + i) * 10_000, "wait": 0})
+    events = replay_progress(recs, mode="shared")
+    assert len([e for e in events if e.tid == 0]) == 5   # one per submit
+    assert replay_progress(recs, mode="incoming")        # truncated pairs
+
+
+def test_progress_engine_survives_closed_trace_writer(tmp_path):
+    """A failing trace sink must never kill the progress thread (a dead
+    progress thread deadlocks every later wait)."""
+    from repro.comm.progress import ProgressEngine
+    from repro.trace import TraceWriter
+
+    writer = TraceWriter(str(tmp_path / "pe.jsonl"), mode="binned")
+    writer.close()                        # emits now raise ValueError
+    engine = ProgressEngine(mode="incoming", trace=writer)
+    try:
+        assert engine.submit(lambda: 41).wait(10) == 41
+        assert engine.submit(lambda: 42).wait(10) == 42
+    finally:
+        engine.shutdown()
+
+
+def test_live_progress_engine_records_and_replays(tmp_path):
+    """A real ProgressEngine run (threads and all) recorded under the
+    *fixed* incoming mode replays as what-if 'shared' and exhibits the
+    paper's lock contention — without rerunning anything."""
+    import time
+
+    from repro.comm.progress import ProgressEngine
+    from repro.trace import TraceWriter
+
+    path = str(tmp_path / "pe.jsonl")
+    writer = TraceWriter(path, mode="binned")
+    engine = ProgressEngine(mode="incoming", trace=writer)
+    def work(x):
+        time.sleep(0.002)      # quanta >> submit spacing: backlog builds
+        return x * 2
+
+    try:
+        reqs = [engine.submit(work, i) for i in range(5)]
+        assert [r.wait(10) for r in reqs] == [0, 2, 4, 6, 8]
+    finally:
+        engine.shutdown()
+        writer.close()
+
+    _, records = read_trace(path)
+    pe = [r for r in records if r["t"] == "pe"]
+    assert {r["ev"] for r in pe} == {"submit", "proc"}
+    shared = replay_progress(pe, mode="shared")
+    incoming = replay_progress(pe, mode="incoming")
+    assert analyses.contention(incoming) == []
+    # contention only appears if processing quanta actually overlapped
+    # later submits; with 5 near-simultaneous submits they do
+    assert analyses.contention(shared)
+
+
+# ------------------------------------- match latency on modeled timelines
+
+def _measured_stats():
+    reg = CounterRegistry()
+    eng = MatchEngine(mode="linear", registry=reg)
+    for t in range(256):
+        eng.post_recv(src=0, tag=t)
+    for t in reversed(range(256)):
+        eng.arrive(src=0, tag=t)
+    return reg.drain()
+
+
+def test_match_seconds_from_stats():
+    stats = _measured_stats()
+    s = match_seconds(stats)
+    assert s > 0
+    assert match_seconds({}) == 0.0
+
+
+def test_roofline_carries_measured_match_term():
+    stats = _measured_stats()
+    s = match_seconds(stats)
+    base = Roofline(flops=1e12, hbm_bytes=1e9, wire_bytes=1e8, n_chips=8)
+    with_match = Roofline(flops=1e12, hbm_bytes=1e9, wire_bytes=1e8,
+                          n_chips=8, match_s=s)
+    assert with_match.t_match == pytest.approx(s)
+    assert with_match.t_collective == pytest.approx(base.t_collective + s)
+    assert with_match.to_dict()["t_match"] == pytest.approx(s)
+    assert base.to_dict()["t_match"] == 0.0
+    assert "incl. match" in with_match.summary()
+    assert "bound=" in base.summary()
+
+
+def test_device_timeline_match_overlay():
+    stats = _measured_stats()
+    segments = [Segment("matmul", "compute", 2e-3),
+                Segment("all-gather", "collective", 1e-3),
+                Segment("matmul", "compute", 1e-3),
+                Segment("all-reduce", "collective", 3e-3)]
+    events = to_events(segments)
+    lane = overlay_match_lane(events, stats)
+    assert len(lane) == 2                      # one per modeled collective
+    assert all(e.tid == MATCH_TID and e.category == "match" for e in lane)
+    total_ns = sum(e.duration for e in lane)
+    assert total_ns == pytest.approx(match_seconds(stats) * 1e9, rel=1e-3)
+    # apportioned by wire time: the 3ms collective carries 3x the 1ms one
+    by_name = {e.name: e.duration for e in lane}
+    assert by_name["match/all-reduce"] == pytest.approx(
+        3 * by_name["match/all-gather"], rel=1e-3)
+    assert lane[0].attrs["prq_depth_mean"] > 8
+    # no measured time or no collectives -> no lane
+    assert overlay_match_lane(events, {}) == []
+    assert overlay_match_lane([], stats) == []
