@@ -1,6 +1,7 @@
 PYTHON ?= python
 
-.PHONY: verify test bench-match bench-replay replay-smoke tour-timeline \
+.PHONY: verify test bench-match bench-replay replay-smoke \
+	bench-scenarios scenario-smoke scenario-baseline tour-timeline \
 	tour-match tour-replay
 
 verify:
@@ -17,6 +18,17 @@ bench-replay:
 
 replay-smoke:
 	PYTHONPATH=src $(PYTHON) benchmarks/replay_sweep.py --smoke
+
+bench-scenarios:
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py
+
+scenario-smoke:
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke
+
+# after an intentional behavior change: regenerate both committed baselines
+scenario-baseline:
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --write-baseline
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --write-baseline
 
 tour-timeline:
 	PYTHONPATH=src:. $(PYTHON) examples/timeline_tour.py

@@ -1,0 +1,122 @@
+"""Scenario sweep: the workload suite's unified bench/regression gate.
+
+    PYTHONPATH=src python benchmarks/scenario_sweep.py [--smoke]
+
+Runs every registered scenario (`repro.workloads`) under every engine
+mode (``fifo``/``linear``/``leaky_umq``) crossed with both progress
+disciplines (``shared``/``incoming``), collects per-op latency,
+queue-depth percentiles and the full detector suite's findings, writes
+one versioned ``results/bench/scenario_sweep.json``, and enforces:
+
+1. all registered scenarios (>= 6) ran under every mode combination;
+2. healthy runs (``fifo+incoming``) are detector-clean;
+3. every scenario's declared defect expectations hold, and each seeded
+   defect (``linear`` / ``leaky_umq`` / ``shared``) is flagged by its
+   detector in at least 2 distinct scenarios;
+4. no regression against the committed baseline
+   (``benchmarks/baselines/scenario_baseline[_smoke].json``):
+   defect-finding sets and the deterministic queue metrics must match
+   exactly (timing is advisory). ``--write-baseline`` regenerates it
+   after an intentional behavior change.
+
+Exit status is non-zero on any failed condition, so this file doubles
+as a regression gate (``make bench-scenarios``; ``scripts/verify.sh``
+runs the smoke size).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import argparse
+import json
+from typing import List
+
+from repro import workloads
+
+
+# committed baselines live under benchmarks/ (results/ is gitignored)
+BASELINES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "baselines")
+
+
+def baseline_path(size: str) -> str:
+    name = ("scenario_baseline.json" if size == "full"
+            else f"scenario_baseline_{size}.json")
+    return os.path.join(BASELINES, name)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized scenario parameters")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file (default: committed one for the "
+                         "chosen size)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from this sweep")
+    args = ap.parse_args()
+    size = "smoke" if args.smoke else "full"
+
+    from benchmarks.common import RESULTS, save_json
+    os.makedirs(RESULTS, exist_ok=True)
+
+    print(f"== scenario sweep (size={size}, seed={args.seed}) ==")
+    results = workloads.sweep(size=size, seed=args.seed)
+
+    print(f"{'scenario':20s} {'cell':22s} {'us/op':>8s} "
+          f"{'depth p50/p90/max':>18s} {'umq max':>8s}  findings")
+    for name, entry in sorted(results["scenarios"].items()):
+        for key, cell in entry["cells"].items():
+            print(f"{name:20s} {key:22s} {cell['us_per_op']:8.2f} "
+                  f"{cell['depth_p50']:5.0f}/{cell['depth_p90']:5.0f}/"
+                  f"{cell['depth_max']:6.0f} {cell['umq_max']:8.0f}  "
+                  f"{cell['findings']}")
+
+    print("\n== seeded-defect coverage (detector fired under the "
+          "defect's own mode) ==")
+    for defect, flagged in sorted(results["defect_coverage"].items()):
+        print(f"{defect:10s} -> {workloads.DEFECT_DETECTOR[defect]:15s} "
+              f"in {len(flagged)} scenario(s): {flagged}")
+
+    failures: List[str] = workloads.check(results)
+
+    bpath = args.baseline or baseline_path(size)
+    if args.write_baseline:
+        os.makedirs(os.path.dirname(bpath), exist_ok=True)
+        with open(bpath, "w") as f:
+            json.dump(workloads.make_baseline(results), f, indent=1,
+                      sort_keys=True)
+        print(f"\nbaseline written: {bpath}")
+    elif os.path.exists(bpath):
+        with open(bpath) as f:
+            baseline = json.load(f)
+        regressions = workloads.compare_to_baseline(results, baseline)
+        results["baseline"] = {"path": bpath, "regressions": regressions}
+        print(f"\nbaseline comparison vs {bpath}: "
+              f"{len(regressions)} regression(s)")
+        for r in regressions:
+            print("  - " + r)
+        failures.extend(regressions)
+    else:
+        print(f"\n(no committed baseline at {bpath}; run with "
+              "--write-baseline to create one)")
+
+    path = save_json("scenario_sweep.json", results)
+    print(f"results saved: {path}")
+
+    if failures:
+        print("\nFAILED acceptance checks:")
+        for f in failures:
+            print(" - " + f)
+        return 1
+    print("\nall scenario-sweep acceptance checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,3 +38,6 @@ python benchmarks/matching_sweep.py
 
 echo "== replay what-if acceptance gate =="
 python benchmarks/replay_sweep.py --smoke
+
+echo "== workload scenario sweep gate (baseline regression + seeded-defect coverage) =="
+python benchmarks/scenario_sweep.py --smoke

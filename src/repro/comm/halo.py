@@ -25,16 +25,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import compat, regions
 from ..core.compat import shard_map
+from . import patterns
 from .collectives import comm_phase, ppermute
 
 
 def _shift(x: jax.Array, axis_name: str, direction: int,
            ax: int = 0) -> jax.Array:
     n = compat.axis_size(axis_name)
-    perm = [(i, (i + direction) % n) for i in range(n)]
-    # envelope tag per (mesh axis position, direction) so the matching
-    # engine sees each halo face as a distinct message stream
-    return ppermute(x, axis_name, perm, tag=2 * ax + (direction > 0))
+    # perm + envelope tag per (mesh axis position, direction) come from
+    # comm.patterns so the matching engine and the offline workload
+    # scenarios see the exact message streams the stencil issues
+    return ppermute(x, axis_name, patterns.ring_perm(n, direction),
+                    tag=patterns.halo_tag(ax, direction))
 
 
 def stencil_interior(u: jax.Array) -> jax.Array:

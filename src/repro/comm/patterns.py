@@ -1,0 +1,74 @@
+"""Pure communication-pattern generators (JAX-free).
+
+One source of truth for the (src, dst) pair lists and envelope-tag
+conventions the repo's communication patterns are built from, shared by
+
+  * the live comm layer — :mod:`repro.comm.ring` ring schedules and
+    :mod:`repro.comm.halo` face shifts running under shard_map,
+  * the matching fabric — :meth:`repro.match.Fabric` collective
+    decompositions, and
+  * the workload scenario suite — :mod:`repro.workloads`, which drives
+    the fabric offline with the same patterns the JAX workloads dispatch,
+
+so a scenario named ``halo3d`` exercises byte-for-byte the message
+streams the real halo stencil generates. Keeping this module free of JAX
+imports is what lets the scenario suite and the trace replayer stay
+offline-runnable.
+"""
+from __future__ import annotations
+
+import random
+from typing import Iterator, List, Sequence, Tuple
+
+Pair = Tuple[int, int]
+
+AXIS_INDEX = {"x": 0, "y": 1, "z": 2}
+
+
+def ring_perm(n: int, step: int = 1) -> List[Pair]:
+    """The ring permutation ``i -> (i + step) % n`` (step -1 reverses)."""
+    return [(i, (i + step) % n) for i in range(n)]
+
+
+def halo_tag(axis: int, direction: int) -> int:
+    """Envelope tag for one halo face shift: one tag per (mesh axis,
+    direction), so the matching engine sees each face as a distinct
+    message stream (the convention :func:`repro.comm.halo._shift`
+    stamps on its ppermutes)."""
+    return 2 * axis + (1 if direction > 0 else 0)
+
+
+def halo_shifts(n: int, axes: int = 3) -> Iterator[Tuple[int, int,
+                                                         List[Pair], int]]:
+    """All face shifts of one halo-exchange step on ``axes`` ring axes of
+    size ``n``: yields ``(axis, direction, perm, tag)`` in the fixed
+    axis-major order the stencil issues them."""
+    for ax in range(axes):
+        for direction in (1, -1):
+            yield ax, direction, ring_perm(n, direction), \
+                halo_tag(ax, direction)
+
+
+def transpose_pairs(n: int) -> List[Pair]:
+    """Full all-to-all (matrix transpose) traffic: every ordered pair."""
+    return [(i, j) for i in range(n) for j in range(n) if i != j]
+
+
+def random_neighbor_pairs(n: int, degree: int,
+                          rng: random.Random) -> List[Pair]:
+    """Sparse random neighbor exchange: each rank sends to ``degree``
+    distinct random peers (seeded — same rng state, same graph)."""
+    pairs: List[Pair] = []
+    for src in range(n):
+        peers = [d for d in range(n) if d != src]
+        for dst in rng.sample(peers, min(degree, len(peers))):
+            pairs.append((src, dst))
+    return pairs
+
+
+def hot_rank_pairs(n: int, hot: int = 0,
+                   per_worker: int = 1) -> List[Pair]:
+    """Master–worker imbalance: every other rank sends ``per_worker``
+    messages to the single hot rank."""
+    return [(w, hot) for w in range(n) if w != hot
+            for _ in range(per_worker)]

@@ -24,13 +24,12 @@ import jax
 import jax.numpy as jnp
 
 from ..core import compat, regions
+from . import patterns
 from .collectives import comm_phase, ppermute
 
 
 def _ring_perm(n: int, reverse: bool = False):
-    if reverse:
-        return [(i, (i - 1) % n) for i in range(n)]
-    return [(i, (i + 1) % n) for i in range(n)]
+    return patterns.ring_perm(n, -1 if reverse else 1)
 
 
 def ring_all_gather(

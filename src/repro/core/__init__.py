@@ -10,7 +10,8 @@ from .collector import Collector, global_collector, reset_global_collector
 from .counters import (CounterLane, CounterRegistry, CounterStat,
                        counter_stats, global_registry,
                        reset_global_registry)
-from .comparison import ComparisonResult, compare, compare_frames, profile_runs
+from .comparison import (ComparisonResult, ProfileReport, ReportRow,
+                         compare, compare_frames, profile_runs)
 from .events import Event
 from .graphframe import GraphFrame
 from .regions import annotate, annotate_jax, configure, profiled
@@ -21,7 +22,8 @@ __all__ = [
     "hlo_cost", "regions", "timeline", "Collector", "global_collector",
     "reset_global_collector", "CounterLane", "CounterRegistry", "CounterStat",
     "counter_stats", "global_registry", "reset_global_registry",
-    "ComparisonResult", "compare", "compare_frames", "profile_runs", "Event",
+    "ComparisonResult", "ProfileReport", "ReportRow", "compare",
+    "compare_frames", "profile_runs", "Event",
     "GraphFrame", "annotate", "annotate_jax", "configure", "profiled",
     "HW", "Roofline",
 ]

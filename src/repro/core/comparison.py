@@ -5,15 +5,81 @@ aggregate per-region times over many runs, and divide the baseline tree by
 the experimental tree. Values > 1: experimental faster; < 1: slower;
 ~1: equal. ``hotspots()`` then lists the worst regions — 'a starting point
 for optimization efforts'.
+
+:class:`ProfileReport` is the *unified* report type both comparison
+front-ends render to: GraphFrame comparisons
+(:meth:`ComparisonResult.to_report`) and trace diffs
+(:meth:`repro.trace.TraceDiff.to_report`) emit the same
+rows-plus-:class:`~repro.core.analyses.Finding` shape, so downstream
+consumers (the workload bench harness, verify gates, humans reading the
+rendered text) handle "two live runs compared" and "two replays diffed"
+identically.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence
 
+from .analyses import Finding
 from .collector import Collector, reset_global_collector
 from .events import Event
 from .graphframe import GraphFrame
+
+
+@dataclasses.dataclass
+class ReportRow:
+    """One compared item: a region path (GraphFrame comparison) or a
+    ``phase/rank`` cell (trace diff). ``baseline``/``candidate`` are in
+    ``unit`` (seconds for region times, nanoseconds for match latency)."""
+
+    path: str
+    baseline: float
+    candidate: float
+    unit: str = "s"
+
+    @property
+    def delta(self) -> float:
+        return self.candidate - self.baseline
+
+    @property
+    def ratio(self) -> float:
+        """candidate / baseline (> 1: candidate slower/deeper)."""
+        return (self.candidate / self.baseline if self.baseline
+                else float("inf") if self.candidate else 1.0)
+
+    def __str__(self) -> str:
+        return (f"{self.path}: {self.baseline:.6g} -> "
+                f"{self.candidate:.6g} {self.unit} ({self.ratio:.2f}x)")
+
+
+@dataclasses.dataclass
+class ProfileReport:
+    """The one report type shared by GraphFrame comparisons and trace
+    diffs: per-item rows plus detector findings."""
+
+    kind: str                     # "graphframe" | "trace"
+    baseline_name: str
+    candidate_name: str
+    rows: List[ReportRow] = dataclasses.field(default_factory=list)
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+
+    def worst(self, n: int = 10) -> List[ReportRow]:
+        """Rows where the candidate regressed hardest (largest delta)."""
+        return sorted(self.rows, key=lambda r: -r.delta)[:n]
+
+    def finding_kinds(self) -> List[str]:
+        return sorted({f.kind for f in self.findings})
+
+    def regressed(self) -> bool:
+        return bool(self.findings)
+
+    def render(self, limit: int = 10) -> str:
+        lines = [f"{self.kind} report: {self.baseline_name!r} -> "
+                 f"{self.candidate_name!r}, {len(self.rows)} rows, "
+                 f"{len(self.findings)} finding(s)"]
+        lines += ["  " + str(r) for r in self.worst(limit)]
+        lines += ["  " + str(f) for f in self.findings[:limit]]
+        return "\n".join(lines)
 
 
 @dataclasses.dataclass
@@ -34,6 +100,48 @@ class ComparisonResult:
 
     def tree(self, **kw) -> str:
         return self.ratio.tree(**kw)
+
+    def to_report(self, slowdown_factor: float = 2.0) -> ProfileReport:
+        """Render this comparison as the unified :class:`ProfileReport`
+        (the same type trace diffs produce). Leaves where the
+        experimental implementation is ``slowdown_factor``x slower than
+        the baseline become ``"hotspot"`` findings, severity = excess
+        seconds per occurrence."""
+        rows: List[ReportRow] = []
+        findings: List[Finding] = []
+        exp = {"/".join(p): n.metric("value")
+               for p, n in self.experimental.walk()}
+        for path, node in self.baseline.walk():
+            if node.children:
+                continue
+            key = "/".join(path)
+            a = node.metric("value")                 # inclusive seconds
+            b = exp.get(key, float("nan"))
+            if a != a:
+                continue
+            if b != b:
+                # a region the experimental run never produced is itself
+                # a finding, not something to silently drop
+                findings.append(Finding(
+                    kind="missing",
+                    message=(f"'{key}' profiled on "
+                             f"{self.baseline_name!r} but absent from "
+                             f"{self.experimental_name!r}"),
+                    severity=a))
+                continue
+            rows.append(ReportRow(path=key, baseline=a, candidate=b))
+            if a > 0 and b >= slowdown_factor * a:
+                findings.append(Finding(
+                    kind="hotspot",
+                    message=(f"'{key}' is {b / a:.1f}x slower on "
+                             f"{self.experimental_name!r} "
+                             f"({a * 1e3:.3f} -> {b * 1e3:.3f} ms)"),
+                    severity=b - a))
+        findings.sort(key=lambda f: -f.severity)
+        return ProfileReport(kind="graphframe",
+                             baseline_name=self.baseline_name,
+                             candidate_name=self.experimental_name,
+                             rows=rows, findings=findings)
 
     def mean_speedup(self, category_paths: Optional[Sequence[str]] = None) -> float:
         """Geometric-mean-free average ratio across (optionally filtered) leaves

@@ -38,6 +38,7 @@ import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+from ..comm import patterns
 from ..core.counters import CounterRegistry, global_registry
 
 ANY_SOURCE = -1
@@ -332,10 +333,13 @@ class Fabric:
     # -- one communication phase ------------------------------------------
 
     def exchange(self, pairs, tag: int = 0, nbytes: int = 0,
-                 comm: int = 0) -> None:
+                 comm: int = 0, deliver=None) -> None:
         """Deliver one phase of point-to-point traffic: each (src, dst)
         pair is one message. Receives post first except for the
-        deterministic 'unexpected' fraction, which post after delivery."""
+        deterministic 'unexpected' fraction, which post after delivery.
+        ``deliver`` overrides the arrival order (default: post order) —
+        the scenario suite uses it to drive adversarial-but-legal
+        delivery orders (e.g. a transposed all-to-all)."""
         late: List[Tuple[int, int, int]] = []
         for src, dst in pairs:
             k = next(self._tick)
@@ -346,7 +350,7 @@ class Fabric:
                 late.append((rsrc, dst, tag))
             else:
                 self.engine(dst).post_recv(rsrc, tag, comm)
-        for src, dst in pairs:
+        for src, dst in (pairs if deliver is None else deliver):
             self.engine(dst).arrive(src, tag, comm, nbytes)
         for rsrc, dst, rtag in late:
             self.engine(dst).post_recv(rsrc, rtag, comm)
@@ -355,7 +359,7 @@ class Fabric:
 
     @staticmethod
     def _ring(n: int, step: int = 1) -> List[Tuple[int, int]]:
-        return [(i, (i + step) % n) for i in range(n)]
+        return patterns.ring_perm(n, step)
 
     def ppermute(self, perm, nbytes: int = 0, tag: int = 0,
                  comm: int = 0) -> None:
@@ -382,8 +386,8 @@ class Fabric:
 
     def all_to_all(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
         with self._collective("all_to_all", n=n, nb=nbytes):
-            pairs = [(i, j) for i in range(n) for j in range(n) if i != j]
-            self.exchange(pairs, tag=0, nbytes=nbytes // max(n, 1), comm=comm)
+            self.exchange(patterns.transpose_pairs(n), tag=0,
+                          nbytes=nbytes // max(n, 1), comm=comm)
 
     # -- introspection -----------------------------------------------------
 

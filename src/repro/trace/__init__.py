@@ -8,8 +8,9 @@ from .io import TraceWriter, read_trace
 from .recorder import record_collectives, record_fabric
 from .replay import (LOCK_REGION, PhaseStats, Replayer, ReplayResult,
                      replay, replay_progress)
-from .schema import (SCHEMA_VERSION, TRACE_FORMAT, TraceSchemaError,
-                     make_header, validate_header, validate_record)
+from .schema import (SCHEMA_VERSION, SUPPORTED_VERSIONS, TRACE_FORMAT,
+                     TraceSchemaError, make_header, validate_header,
+                     validate_record)
 
 __all__ = [
     "PhaseDelta", "TraceDiff", "diff",
@@ -17,6 +18,7 @@ __all__ = [
     "record_collectives", "record_fabric",
     "LOCK_REGION", "PhaseStats", "Replayer", "ReplayResult", "replay",
     "replay_progress",
-    "SCHEMA_VERSION", "TRACE_FORMAT", "TraceSchemaError", "make_header",
-    "validate_header", "validate_record",
+    "SCHEMA_VERSION", "SUPPORTED_VERSIONS", "TRACE_FORMAT",
+    "TraceSchemaError", "make_header", "validate_header",
+    "validate_record",
 ]

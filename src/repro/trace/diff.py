@@ -14,6 +14,11 @@ produced them — and report deltas in the method-2 quantities:
 (``long_traversal`` / ``umq_flood``), so "replay the trace on engine B
 and diff against engine A" answers the what-if question directly: a
 defective candidate engine is flagged, a healthy one diffs clean.
+
+``TraceDiff.to_report()`` renders the diff as the unified
+:class:`repro.core.comparison.ProfileReport` — the same type GraphFrame
+comparisons produce — so trace diffs and method-1 comparisons flow
+through one report pipeline.
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ import dataclasses
 from typing import Dict, List, Tuple
 
 from ..core.analyses import NS_PER_QUEUE_ENTRY, Finding
+from ..core.comparison import ProfileReport, ReportRow
 from ..core.counters import CounterStat
 from .replay import PhaseStats, ReplayResult
 
@@ -158,6 +164,18 @@ class TraceDiff:
                 ))
         out.sort(key=lambda f: -f.severity)
         return out
+
+    def to_report(self) -> ProfileReport:
+        """The unified report: one row per (phase, rank) cell carrying
+        measured match latency (seconds), findings from :meth:`flags`."""
+        rows = [ReportRow(
+            path=f"phase{d.index}:{d.label}/rank{d.rank}",
+            baseline=d.match_ns[0] / 1e9,
+            candidate=d.match_ns[1] / 1e9,
+        ) for d in self.deltas]
+        return ProfileReport(kind="trace", baseline_name=self.a_mode,
+                             candidate_name=self.b_mode, rows=rows,
+                             findings=self.flags())
 
     def report(self, limit: int = 12) -> str:
         worst = sorted(

@@ -12,11 +12,15 @@ from __future__ import annotations
 import gzip
 import json
 import threading
+import time
 from typing import Dict, List, Optional, Tuple
 
 from ..core.counters import CounterRegistry
 from .schema import (TraceSchemaError, make_header, validate_header,
                      validate_record)
+
+# record types that carry live wall-clock timing in schema v2
+_TIMED = ("post", "arr", "pe")
 
 
 def _open(path: str, write: bool):
@@ -30,14 +34,24 @@ class TraceWriter:
 
     Usable as a context manager; ``close`` is idempotent. ``n_records``
     counts everything written including the header.
+
+    With ``wall_clock=True`` (the default) every engine-op / progress
+    record is stamped with ``t_wall``, nanoseconds since the writer
+    opened (schema v2), so replays can report measured time dilation.
+    ``wall_clock=False`` is deterministic mode: no ``t_wall`` stamps and
+    counter snapshots exclude measured-time (``*_ns``) statistics, so
+    the same op stream produces a byte-identical trace file — the
+    property the workload scenario suite's determinism tests pin down.
     """
 
     def __init__(self, path: str, mode: str = "binned",
-                 meta: Optional[Dict] = None):
+                 meta: Optional[Dict] = None, wall_clock: bool = True):
         self.path = str(path)
+        self.wall_clock = wall_clock
         self._lock = threading.Lock()
         self._f = _open(self.path, write=True)
         self.n_records = 0
+        self._t0 = time.perf_counter_ns()
         self._emit_unlocked(make_header(mode, meta))
 
     def _emit_unlocked(self, rec: Dict) -> None:
@@ -45,6 +59,9 @@ class TraceWriter:
         self.n_records += 1
 
     def emit(self, rec: Dict) -> None:
+        if (self.wall_clock and rec.get("t") in _TIMED
+                and "t_wall" not in rec):
+            rec = dict(rec, t_wall=time.perf_counter_ns() - self._t0)
         with self._lock:
             if self._f is None:
                 raise ValueError(f"trace {self.path} is closed")
@@ -53,10 +70,13 @@ class TraceWriter:
     def snapshot(self, registry: CounterRegistry) -> None:
         """Write the registry's per-lane counter statistics as a ``snap``
         record (drains, so the snapshot reflects everything recorded so
-        far; lane pids key the stats)."""
+        far; lane pids key the stats). In deterministic mode the
+        wall-clock-measured ``*_ns`` statistics are dropped — they are
+        the only nondeterministic content of a snapshot."""
         lanes = registry.drain_lanes()
         stats = {str(pid): {name: st.to_attrs()
-                            for name, st in sorted(per.items())}
+                            for name, st in sorted(per.items())
+                            if self.wall_clock or not name.endswith("_ns")}
                  for pid, per in sorted(lanes.items())}
         self.emit({"t": "snap", "stats": stats})
 

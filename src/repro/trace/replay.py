@@ -43,7 +43,11 @@ PHASE_NS = 1_000_000
 
 @dataclasses.dataclass
 class PhaseStats:
-    """Counter deltas attributed to one recorded phase, per rank."""
+    """Counter deltas attributed to one recorded phase, per rank.
+
+    ``wall_ns`` is the measured live wall-clock span of the phase's
+    recorded ops (schema v2 ``t_wall`` stamps); ``None`` for v1 traces
+    or deterministic-mode recordings."""
 
     index: int
     label: str
@@ -51,6 +55,7 @@ class PhaseStats:
     attrs: Dict = dataclasses.field(default_factory=dict)
     stats: Dict[int, Dict[str, CounterStat]] = dataclasses.field(
         default_factory=dict)
+    wall_ns: Optional[int] = None
 
     def metric(self, rank: int, name: str) -> Optional[CounterStat]:
         return self.stats.get(rank, {}).get(name)
@@ -71,6 +76,22 @@ class ReplayResult:
     def totals(self) -> Dict[str, CounterStat]:
         """Replayed counter statistics aggregated across ranks."""
         return counter_stats(self.events)
+
+    def measured_wall_s(self) -> Optional[float]:
+        """Total measured live wall time across phases (v2 ``t_wall``
+        stamps), or ``None`` when the trace carries no timing (v1, or
+        recorded in deterministic mode)."""
+        spans = [p.wall_ns for p in self.phases if p.wall_ns is not None]
+        return sum(spans) / 1e9 if spans else None
+
+    def dilation(self, baseline: "ReplayResult") -> Optional[float]:
+        """Measured wall-time dilation of this trace's live run relative
+        to ``baseline``'s (e.g. a defective recording vs a healthy one).
+        ``None`` unless both traces carry ``t_wall`` timing."""
+        a, b = baseline.measured_wall_s(), self.measured_wall_s()
+        if a is None or b is None or a <= 0:
+            return None
+        return b / a
 
     def totals_by_rank(self) -> Dict[int, Dict[str, CounterStat]]:
         per: Dict[int, List[Event]] = {}
@@ -220,6 +241,7 @@ class Replayer:
         pe_records: List[Dict] = []
         recorded_stats: Optional[Dict[int, Dict[str, CounterStat]]] = None
         current = PhaseStats(index=0, label="prologue", op="phase")
+        wall: List[int] = []          # t_wall stamps seen in current phase
 
         def flush_phase() -> None:
             t = (len(phases) + 1) * self.phase_ns
@@ -231,11 +253,16 @@ class Replayer:
                 per.setdefault(ev.pid, []).append(ev)
             current.stats = {pidx: counter_stats(group)
                              for pidx, group in per.items()}
+            if wall:
+                current.wall_ns = max(wall) - min(wall)
+                del wall[:]
             phases.append(current)
             events.extend(evs)
 
         for rec in records:
             kind = rec["t"]
+            if "t_wall" in rec:
+                wall.append(rec["t_wall"])
             if kind == REC_PHASE:
                 flush_phase()
                 current = PhaseStats(

@@ -22,15 +22,28 @@ following line is a record tagged by its ``"t"`` field:
   ``snap``   counter snapshot: per-pid ``stats`` in the
              :meth:`repro.core.counters.CounterStat.to_attrs` encoding.
 
-Schema changes MUST bump :data:`SCHEMA_VERSION`; readers reject traces
-whose version they do not understand (``scripts/verify.sh`` gates on
-this round-tripping).
+Version history:
+
+  * **v1** — the record types above, no per-op timing.
+  * **v2** — ``post``/``arr``/``pe`` records may carry ``t_wall``:
+    live wall-clock nanoseconds since the writer opened, stamped by
+    :class:`repro.trace.io.TraceWriter` (``wall_clock=True``, the
+    default). Optional — a writer in deterministic mode omits it, and
+    v1 traces never have it — so readers treat it as advisory timing
+    (the replayer surfaces it as measured per-phase wall time /
+    dilation).
+
+Schema changes MUST bump :data:`SCHEMA_VERSION`; readers accept every
+version in :data:`SUPPORTED_VERSIONS` (currently v1 and v2 — v2 only
+adds an optional field) and reject anything newer
+(``scripts/verify.sh`` gates on this round-tripping).
 """
 from __future__ import annotations
 
 from typing import Dict, Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 TRACE_FORMAT = "repro.trace"
 
 REC_HEADER = "hdr"
@@ -67,10 +80,10 @@ def validate_header(rec: Dict) -> Dict:
     if rec.get("format") != TRACE_FORMAT:
         raise TraceSchemaError(
             f"not a {TRACE_FORMAT} trace (format={rec.get('format')!r})")
-    if rec.get("schema") != SCHEMA_VERSION:
+    if rec.get("schema") not in SUPPORTED_VERSIONS:
         raise TraceSchemaError(
             f"unsupported schema version {rec.get('schema')!r} "
-            f"(this reader speaks version {SCHEMA_VERSION})")
+            f"(this reader speaks versions {SUPPORTED_VERSIONS})")
     return rec
 
 

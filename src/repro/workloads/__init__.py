@@ -1,0 +1,24 @@
+# Workload scenario suite + unified bench regression harness: each
+# scenario is a declarative, seeded, parameterized communication-pattern
+# generator driving the matching fabric (and the trace recorder /
+# progress-lane model) end-to-end; the bench harness sweeps every
+# scenario under every engine/progress mode, runs all detectors, and
+# gates regressions against a committed baseline.
+#
+# Importing the package registers the built-in scenario gallery.
+from .base import (DEFECT_DETECTOR, Scenario, all_scenarios, get, names,
+                   progress_schedule, register, scenario)
+from . import scenarios  # noqa: F401  (registers the gallery)
+from .bench import (DEFECT_KINDS, ENGINE_MODES, PE_REQUESTS,
+                    PROGRESS_MODES, ScenarioRun, cell_key, check,
+                    compare_to_baseline, defect_coverage,
+                    hist_percentile, make_baseline, run_scenario, sweep)
+
+__all__ = [
+    "DEFECT_DETECTOR", "Scenario", "all_scenarios", "get", "names",
+    "progress_schedule", "register", "scenario",
+    "DEFECT_KINDS", "ENGINE_MODES", "PE_REQUESTS", "PROGRESS_MODES",
+    "ScenarioRun", "cell_key", "check", "compare_to_baseline",
+    "defect_coverage", "hist_percentile", "make_baseline",
+    "run_scenario", "sweep",
+]

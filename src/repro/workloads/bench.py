@@ -1,0 +1,326 @@
+"""Unified bench/regression harness over the scenario suite.
+
+One entry point — :func:`sweep` — runs every registered scenario under
+every engine mode (``fifo``/``linear``/``leaky_umq``) crossed with both
+progress-queue disciplines (``shared``/``incoming``), collecting for
+each cell:
+
+  * per-op latency (measured wall time / engine ops — advisory, never
+    gated),
+  * queue-shape statistics: PRQ traversal-depth mean/max and p50/p90
+    (from the counter registry's power-of-two histograms), UMQ length
+    mean/max,
+  * the detector findings ``core.analyses.analyze_all`` raises over the
+    scenario's counter snapshot Events plus the progress-lane events
+    modeled by :func:`repro.trace.replay.replay_progress`.
+
+Everything except wall time is a pure function of (scenario, params,
+seed), so :func:`make_baseline` / :func:`compare_to_baseline` gate exact
+regressions: a changed defect-finding set or a drifted queue metric
+fails the gate, while machine-dependent timing only informs.
+
+``benchmarks/scenario_sweep.py`` is the CLI; ``scripts/verify.sh`` runs
+the smoke-sized sweep against the committed baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Dict, List, Optional, Sequence, Union
+
+from ..core import analyses
+from ..core.counters import CounterRegistry, CounterStat, counter_stats
+from ..match import Fabric, canonical_mode
+from ..trace.io import TraceWriter
+from ..trace.replay import replay_progress
+from .base import (DEFECT_DETECTOR, Params, Scenario, all_scenarios, get,
+                   progress_schedule)
+
+SWEEP_FORMAT = "repro.workloads.scenario_sweep"
+BASELINE_FORMAT = "repro.workloads.scenario_baseline"
+SWEEP_VERSION = 1
+
+ENGINE_MODES = ("fifo", "linear", "leaky_umq")
+PROGRESS_MODES = ("shared", "incoming")
+DEFECT_KINDS = tuple(sorted(set(DEFECT_DETECTOR.values())))
+
+# number of requests in every scenario's deterministic progress-lane
+# schedule (enough backlog for the shared-queue discipline to serialize)
+PE_REQUESTS = 32
+
+# deterministic queue metrics a baseline pins exactly (drift -> regression)
+GATED_METRICS = ("n_ops", "depth_mean", "depth_max", "umq_mean", "umq_max")
+
+
+def hist_percentile(st: Optional[CounterStat], q: float) -> float:
+    """Approximate percentile of a power-of-two histogram: the lower
+    bound of the bucket holding the q-quantile observation."""
+    if st is None or not st.bins:
+        return 0.0
+    total = sum(st.bins.values())
+    need = q * total
+    seen = 0
+    for b in sorted(st.bins):
+        seen += st.bins[b]
+        if seen >= need:
+            return float(b)
+    return float(max(st.bins))
+
+
+@dataclasses.dataclass
+class ScenarioRun:
+    """One (scenario, engine mode, progress mode) cell of the sweep."""
+
+    scenario: str
+    engine_mode: str
+    progress_mode: str
+    seed: int
+    params: Params
+    n_ops: int
+    wall_s: float
+    us_per_op: float
+    depth_mean: float
+    depth_max: float
+    depth_p50: float
+    depth_p90: float
+    umq_mean: float
+    umq_max: float
+    finding_kinds: List[str]
+    defect_kinds: List[str]
+    findings: List[analyses.Finding] = dataclasses.field(
+        default_factory=list, repr=False)
+    trace_path: Optional[str] = None
+
+    def row(self) -> Dict:
+        """JSON row for ``scenario_sweep.json``."""
+        return {
+            "engine_mode": self.engine_mode,
+            "progress_mode": self.progress_mode,
+            "n_ops": self.n_ops,
+            "us_per_op": round(self.us_per_op, 3),
+            "depth_mean": round(self.depth_mean, 4),
+            "depth_max": self.depth_max,
+            "depth_p50": self.depth_p50,
+            "depth_p90": self.depth_p90,
+            "umq_mean": round(self.umq_mean, 4),
+            "umq_max": self.umq_max,
+            "findings": self.finding_kinds,
+            "defects": self.defect_kinds,
+        }
+
+
+def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
+                 progress_mode: str = "incoming", seed: int = 0,
+                 size: str = "full", params: Optional[Params] = None,
+                 trace_path: Optional[str] = None,
+                 wall_clock: bool = True) -> ScenarioRun:
+    """Run one scenario end-to-end under one engine/progress config:
+    drive the fabric, snapshot counters, model the progress lanes, run
+    every detector. With ``trace_path`` the run is recorded to a
+    replayable JSONL trace (``wall_clock=False`` for the byte-identical
+    deterministic form)."""
+    if isinstance(sc, str):
+        sc = get(sc)
+    p = sc.params(size, **(params or {}))
+    engine_mode = canonical_mode(engine_mode)
+    if progress_mode not in PROGRESS_MODES:
+        raise ValueError(f"progress_mode must be one of {PROGRESS_MODES}")
+
+    reg = CounterRegistry()
+    writer = None
+    if trace_path is not None:
+        writer = TraceWriter(
+            trace_path, mode=engine_mode, wall_clock=wall_clock,
+            meta={"scenario": sc.name, "seed": seed, "size": size,
+                  "params": dict(sorted(p.items())),
+                  "progress_mode": progress_mode})
+    fab = Fabric(mode=engine_mode, registry=reg, trace=writer,
+                 unexpected_every=sc.unexpected_every,
+                 wildcard_every=sc.wildcard_every)
+    rng = random.Random(seed)
+    t0 = time.perf_counter_ns()
+    sc.drive(fab, rng, p)
+    wall_ns = time.perf_counter_ns() - t0
+
+    # deterministic progress-engine lane schedule (same rng continuation
+    # for every engine mode, so the stream is mode-independent)
+    pe_records = progress_schedule(rng, PE_REQUESTS)
+    if writer is not None:
+        for rec in pe_records:
+            writer.emit(dict(rec))
+        writer.snapshot(reg)
+        writer.close()
+
+    events = reg.snapshot_events(t_ns=0)
+    events += replay_progress(pe_records, mode=progress_mode)
+    findings = analyses.analyze_all(events)
+    kinds = sorted({f.kind for f in findings})
+    defects = sorted(k for k in kinds if k in DEFECT_KINDS)
+
+    stats = counter_stats(events)
+    depth = stats.get("match.prq.traversal_depth")
+    umq = stats.get("match.umq.length")
+    posts = stats.get("match.umq.traversal_depth")  # one obs per post
+    n_ops = (depth.count if depth else 0) + (posts.count if posts else 0)
+
+    def hv(st, attr):
+        return getattr(st, attr) if st is not None and st.count else 0.0
+
+    return ScenarioRun(
+        scenario=sc.name, engine_mode=engine_mode,
+        progress_mode=progress_mode, seed=seed, params=p, n_ops=n_ops,
+        wall_s=wall_ns / 1e9,
+        us_per_op=wall_ns / 1e3 / max(n_ops, 1),
+        depth_mean=hv(depth, "mean"), depth_max=hv(depth, "vmax"),
+        depth_p50=hist_percentile(depth, 0.50),
+        depth_p90=hist_percentile(depth, 0.90),
+        umq_mean=hv(umq, "mean"), umq_max=hv(umq, "vmax"),
+        finding_kinds=kinds, defect_kinds=defects, findings=findings,
+        trace_path=trace_path)
+
+
+def cell_key(scenario: str, engine_mode: str, progress_mode: str) -> str:
+    return f"{scenario}|{engine_mode}|{progress_mode}"
+
+
+def sweep(size: str = "full", seed: int = 0,
+          engine_modes: Sequence[str] = ENGINE_MODES,
+          progress_modes: Sequence[str] = PROGRESS_MODES,
+          scenarios: Optional[Sequence[Union[str, Scenario]]] = None
+          ) -> Dict:
+    """Every scenario x engine mode x progress mode; returns the
+    versioned ``scenario_sweep.json`` payload."""
+    scs = ([get(s) if isinstance(s, str) else s for s in scenarios]
+           if scenarios is not None else all_scenarios())
+    out: Dict = {
+        "format": SWEEP_FORMAT, "version": SWEEP_VERSION,
+        "size": size, "seed": seed,
+        "engine_modes": list(engine_modes),
+        "progress_modes": list(progress_modes),
+        "scenarios": {},
+    }
+    for sc in scs:
+        entry = {"description": sc.description, "stresses": sc.stresses,
+                 "expect": list(sc.expect),
+                 "params": dict(sorted(sc.params(size).items())),
+                 "cells": {}}
+        for em in engine_modes:
+            for pm in progress_modes:
+                run = run_scenario(sc, engine_mode=em, progress_mode=pm,
+                                   seed=seed, size=size)
+                entry["cells"][f"{em}+{pm}"] = run.row()
+        out["scenarios"][sc.name] = entry
+    out["defect_coverage"] = defect_coverage(out)
+    return out
+
+
+def defect_coverage(results: Dict) -> Dict[str, List[str]]:
+    """Which scenarios surfaced each seeded defect: the defect's
+    detector fired in the cell where (only) that defect was switched
+    on."""
+    cover: Dict[str, List[str]] = {d: [] for d in DEFECT_DETECTOR}
+    for name, entry in results["scenarios"].items():
+        cells = entry["cells"]
+        for defect, detector in DEFECT_DETECTOR.items():
+            if defect == "shared":
+                cell = cells.get("fifo+shared")
+            else:
+                cell = cells.get(f"{defect}+incoming")
+            if cell and detector in cell["defects"]:
+                cover[defect].append(name)
+    return cover
+
+
+def check(results: Dict, min_scenarios: int = 6,
+          min_coverage: int = 2) -> List[str]:
+    """Acceptance conditions over one sweep payload (CLI + verify.sh
+    exit nonzero on any)."""
+    failures: List[str] = []
+    names = sorted(results["scenarios"])
+    if len(names) < min_scenarios:
+        failures.append(f"only {len(names)} scenarios registered "
+                        f"(need >= {min_scenarios})")
+    want_cells = {f"{em}+{pm}" for em in results["engine_modes"]
+                  for pm in results["progress_modes"]}
+    for name in names:
+        entry = results["scenarios"][name]
+        missing = want_cells - set(entry["cells"])
+        if missing:
+            failures.append(f"{name}: missing cells {sorted(missing)}")
+        healthy = entry["cells"].get("fifo+incoming")
+        if healthy and healthy["defects"]:
+            failures.append(f"{name}: healthy fifo+incoming run flagged "
+                            f"{healthy['defects']}")
+        for defect in entry["expect"]:
+            detector = DEFECT_DETECTOR[defect]
+            key = ("fifo+shared" if defect == "shared"
+                   else f"{defect}+incoming")
+            cell = entry["cells"].get(key)
+            if cell is not None and detector not in cell["defects"]:
+                failures.append(
+                    f"{name}: expected {detector!r} under {key} "
+                    f"(seeded defect {defect!r}), got {cell['defects']}")
+    for defect, flagged in results["defect_coverage"].items():
+        if len(flagged) < min_coverage:
+            failures.append(
+                f"seeded defect {defect!r} flagged in only "
+                f"{len(flagged)} scenario(s) {flagged} "
+                f"(need >= {min_coverage})")
+    return failures
+
+
+# -- baseline regression gate ---------------------------------------------
+
+def make_baseline(results: Dict) -> Dict:
+    """Reduce a sweep payload to the deterministic quantities a
+    committed baseline pins."""
+    cells: Dict[str, Dict] = {}
+    for name, entry in results["scenarios"].items():
+        for key, cell in entry["cells"].items():
+            em, pm = key.split("+")
+            cells[cell_key(name, em, pm)] = {
+                "defects": cell["defects"],
+                **{m: cell[m] for m in GATED_METRICS},
+            }
+    return {"format": BASELINE_FORMAT, "version": SWEEP_VERSION,
+            "size": results["size"], "seed": results["seed"],
+            "cells": cells}
+
+
+def compare_to_baseline(results: Dict, baseline: Dict,
+                        rel_tol: float = 0.0) -> List[str]:
+    """Regressions of a sweep vs a committed baseline: changed defect
+    findings or drifted deterministic queue metrics. Both are pure
+    functions of the seed (and baseline metrics are stored with the
+    same rounding the sweep applies), so the default gate is exact —
+    any nonzero drift is a behavior change. Timing (us_per_op) is
+    intentionally not gated."""
+    regressions: List[str] = []
+    if baseline.get("format") != BASELINE_FORMAT:
+        return [f"baseline has wrong format {baseline.get('format')!r}"]
+    if (baseline.get("size"), baseline.get("seed")) != (
+            results["size"], results["seed"]):
+        return [f"baseline was recorded at size={baseline.get('size')!r} "
+                f"seed={baseline.get('seed')!r}, sweep ran "
+                f"size={results['size']!r} seed={results['seed']!r} "
+                "(regenerate with --write-baseline)"]
+    current = make_baseline(results)["cells"]
+    for key, want in sorted(baseline.get("cells", {}).items()):
+        got = current.get(key)
+        if got is None:
+            regressions.append(f"{key}: cell disappeared from the sweep")
+            continue
+        if got["defects"] != want["defects"]:
+            regressions.append(
+                f"{key}: defect findings changed "
+                f"{want['defects']} -> {got['defects']}")
+        for m in GATED_METRICS:
+            a, b = float(want[m]), float(got[m])
+            if abs(b - a) > rel_tol * max(abs(a), 1.0):
+                regressions.append(
+                    f"{key}: {m} drifted {a:g} -> {b:g}")
+    for key in sorted(set(current) - set(baseline.get("cells", {}))):
+        regressions.append(f"{key}: new cell not in baseline "
+                           "(regenerate with --write-baseline)")
+    return regressions

@@ -1,0 +1,186 @@
+"""The scenario gallery: ≥6 communication patterns spanning the space
+the related-work profilers sweep (stencil halos, ring collectives,
+transposes, sparse graphs, imbalance, storms, wildcard pipelines).
+
+Each scenario is registered declaratively (:func:`repro.workloads.base
+.scenario`) and drives a :class:`repro.match.Fabric` with traffic built
+from :mod:`repro.comm.patterns` — the same pair lists and tag
+conventions the live JAX workloads dispatch — plus whatever adversarial
+(but MPI-legal) post/arrival orderings the pattern calls for. ``expect``
+declares which seeded defect each pattern is adversarial enough to
+surface; the bench harness enforces those declarations and the README
+gallery table is generated from them.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict
+
+from ..comm import patterns
+from ..match import ANY_SOURCE, ANY_TAG, Fabric
+from .base import scenario
+
+Params = Dict[str, int]
+
+
+@scenario(
+    "halo3d",
+    description="3-D stencil halo exchange: one face shift per (axis, "
+                "direction) per step, the comm/halo.py pattern",
+    stresses="steady bidirectional neighbor traffic; wildcard-consumed "
+             "unexpected arrivals accumulate as UMQ garbage",
+    defaults={"ranks": 8, "steps": 40, "face_bytes": 1 << 14},
+    smoke={"steps": 24},
+    expect=("leaky_umq", "shared"),
+    unexpected_every=2, wildcard_every=2,
+)
+def halo3d(fab: Fabric, rng: random.Random, p: Params) -> None:
+    n = p["ranks"]
+    for step in range(p["steps"]):
+        fab.set_label(f"halo_step({step})")
+        for ax, direction, perm, tag in patterns.halo_shifts(n):
+            fab.ppermute(perm, nbytes=p["face_bytes"], tag=tag)
+    fab.set_label(None)
+
+
+@scenario(
+    "ring_allreduce",
+    description="ring all-reduce (reduce-scatter + all-gather phases), "
+                "the comm/ring.py schedule",
+    stresses="long dependent chains of ring-step messages; every rank "
+             "both sends and receives each step",
+    defaults={"ranks": 8, "rounds": 8, "nbytes": 1 << 18},
+    smoke={"rounds": 5},
+    expect=("leaky_umq", "shared"),
+    unexpected_every=2, wildcard_every=2,
+)
+def ring_allreduce(fab: Fabric, rng: random.Random, p: Params) -> None:
+    for r in range(p["rounds"]):
+        fab.set_label(f"all_reduce({r})")
+        fab.all_reduce(p["ranks"], nbytes=p["nbytes"])
+    fab.set_label(None)
+
+
+@scenario(
+    "alltoall_transpose",
+    description="all-to-all matrix transpose with column-major delivery "
+                "against row-major posts",
+    stresses="every rank holds n-1 posted receives while arrivals land "
+             "in reversed order — the adversarial case for a flat PRQ",
+    defaults={"ranks": 28, "rounds": 4, "nbytes": 1 << 12},
+    smoke={"rounds": 2},
+    expect=("linear", "shared"),
+    unexpected_every=4, wildcard_every=0,
+)
+def alltoall_transpose(fab: Fabric, rng: random.Random,
+                       p: Params) -> None:
+    pairs = patterns.transpose_pairs(p["ranks"])
+    for r in range(p["rounds"]):
+        fab.phase(f"transpose({r})", n=p["ranks"])
+        fab.exchange(pairs, tag=0, nbytes=p["nbytes"],
+                     deliver=list(reversed(pairs)))
+
+
+@scenario(
+    "sparse_neighbors",
+    description="sparse random neighbor exchange: each rank talks to a "
+                "few seeded-random peers per round",
+    stresses="irregular, asymmetric queue shapes — no rank sees the "
+             "same traffic twice",
+    defaults={"ranks": 16, "degree": 3, "rounds": 10, "nbytes": 1 << 12},
+    smoke={"rounds": 6},
+    expect=("shared",),
+)
+def sparse_neighbors(fab: Fabric, rng: random.Random, p: Params) -> None:
+    for r in range(p["rounds"]):
+        pairs = patterns.random_neighbor_pairs(p["ranks"], p["degree"],
+                                               rng)
+        fab.phase(f"sparse({r})", n=p["ranks"])
+        fab.exchange(pairs, tag=r, nbytes=p["nbytes"])
+
+
+@scenario(
+    "master_worker",
+    description="master-worker imbalance: every worker floods rank 0, "
+                "which consumes via wildcard receives and carries a "
+                "deep reversed-drain receive backlog",
+    stresses="one hot rank: UMQ storm from racing workers plus a deep "
+             "PRQ drained in reverse",
+    defaults={"ranks": 8, "per_worker": 8, "backlog": 64, "rounds": 6},
+    smoke={"rounds": 3},
+    expect=("linear", "leaky_umq", "shared"),
+    unexpected_every=0, wildcard_every=0,
+)
+def master_worker(fab: Fabric, rng: random.Random, p: Params) -> None:
+    n, m, backlog = p["ranks"], p["per_worker"], p["backlog"]
+    master = fab.engine(0)
+    for r in range(p["rounds"]):
+        fab.phase(f"master_worker({r})", n=n)
+        # workers race the master's posts: results arrive unexpected
+        for w, _ in patterns.hot_rank_pairs(n, hot=0, per_worker=m):
+            master.arrive(src=w, tag=200 + (r % m), nbytes=1 << 10)
+        # master consumes whoever-finished-first via ANY_SOURCE
+        for _ in range((n - 1) * m):
+            master.post_recv(src=ANY_SOURCE, tag=200 + (r % m))
+        # imbalance backlog: a pile of specific receives, drained in
+        # reverse post order (legal, adversarial for a flat PRQ)
+        for t in range(backlog):
+            master.post_recv(src=1, tag=1_000 + t)
+        for t in reversed(range(backlog)):
+            master.arrive(src=1, tag=1_000 + t, nbytes=1 << 8)
+
+
+@scenario(
+    "unexpected_storm",
+    description="unexpected-message storm: senders race every post, "
+                "bursts land before any receive exists",
+    stresses="the UMQ: every arrival parks unexpected; wildcard "
+             "consumption turns the burst into permanent garbage under "
+             "the leaky defect",
+    defaults={"ranks": 8, "burst": 24, "rounds": 4},
+    smoke={"rounds": 3},
+    expect=("leaky_umq", "shared"),
+    unexpected_every=1, wildcard_every=2,
+)
+def unexpected_storm(fab: Fabric, rng: random.Random, p: Params) -> None:
+    n, burst = p["ranks"], p["burst"]
+    for r in range(p["rounds"]):
+        fab.phase(f"storm({r})", n=n, burst=burst)
+        # the fabric's own mix: every ppermute message arrives before
+        # its receive is posted (unexpected_every=1)
+        fab.ppermute(patterns.ring_perm(n), nbytes=1 << 10, tag=r)
+        # plus a direct burst per rank, consumed by ANY_TAG wildcards
+        for rank in range(n):
+            eng = fab.engine(rank)
+            for j in range(burst):
+                eng.arrive(src=(rank + 1) % n, tag=300 + j,
+                           nbytes=1 << 9)
+            for _ in range(burst):
+                eng.post_recv(src=ANY_SOURCE, tag=ANY_TAG)
+
+
+@scenario(
+    "wildcard_pipeline",
+    description="wildcard-heavy pipeline: each stage posts specific-tag "
+                "receives plus trailing ANY_TAG wildcards, producer "
+                "delivers in descending-tag order",
+    stresses="PRQ traversal past a wall of specifics to reach wildcard "
+             "entries — worst case for a linear posted-receive queue",
+    defaults={"stages": 5, "batch": 48, "wildcards": 12, "rounds": 3},
+    smoke={"rounds": 2},
+    expect=("linear", "shared"),
+    unexpected_every=0, wildcard_every=0,
+)
+def wildcard_pipeline(fab: Fabric, rng: random.Random, p: Params) -> None:
+    batch, wild = p["batch"], p["wildcards"]
+    for r in range(p["rounds"]):
+        fab.phase(f"pipeline({r})", stages=p["stages"])
+        for stage in range(1, p["stages"]):
+            consumer = fab.engine(stage)
+            producer = stage - 1
+            for t in range(batch):
+                consumer.post_recv(src=producer, tag=t)
+            for _ in range(wild):
+                consumer.post_recv(src=producer, tag=ANY_TAG)
+            for t in reversed(range(batch + wild)):
+                consumer.arrive(src=producer, tag=t, nbytes=1 << 11)

@@ -219,6 +219,70 @@ def test_lanes_survive_snapshot_delta_semantics():
     assert merged["d"].count == 2 and merged["d"].total == 10
 
 
+# ------------------------------------------------- wall-clock (schema v2)
+
+def test_v2_records_carry_t_wall(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    record_workload(path, rounds=1)
+    header, records = read_trace(path)
+    assert header["schema"] == SCHEMA_VERSION == 2
+    ops = [r for r in records if r["t"] in ("post", "arr")]
+    assert ops and all("t_wall" in r for r in ops)
+    walls = [r["t_wall"] for r in ops]
+    assert walls == sorted(walls)               # monotone since open
+    # phase markers and snapshots stay untimed
+    assert all("t_wall" not in r for r in records
+               if r["t"] in ("phase", "snap"))
+
+
+def test_deterministic_mode_omits_t_wall_and_ns_stats(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    reg = CounterRegistry()
+    with TraceWriter(path, mode="binned", wall_clock=False) as w:
+        fab = Fabric(mode="binned", registry=reg, trace=w)
+        fab.all_reduce(4, nbytes=1 << 10)
+        w.snapshot(reg)
+    _, records = read_trace(path)
+    assert all("t_wall" not in r for r in records)
+    snap = [r for r in records if r["t"] == "snap"][-1]
+    for per in snap["stats"].values():
+        assert not any(name.endswith("_ns") for name in per)
+
+
+def test_reader_accepts_v1_traces(tmp_path):
+    """Backward compat: a v1 trace (no t_wall anywhere) still reads and
+    replays; measured wall time is simply absent."""
+    path = str(tmp_path / "t.jsonl")
+    record_workload(path, rounds=1)
+    lines = open(path).read().splitlines()
+    hdr = json.loads(lines[0])
+    hdr["schema"] = 1
+    out = [json.dumps(hdr)]
+    for line in lines[1:]:
+        rec = json.loads(line)
+        rec.pop("t_wall", None)
+        out.append(json.dumps(rec))
+    open(path, "w").write("\n".join(out))
+    header, records = read_trace(path)
+    assert header["schema"] == 1
+    res = replay(path)
+    assert res.divergences == []
+    assert res.measured_wall_s() is None
+    assert all(p.wall_ns is None for p in res.phases)
+
+
+def test_replay_surfaces_measured_wall_and_dilation(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    record_workload(path, rounds=2)
+    res = replay(path)
+    spans = [p.wall_ns for p in res.phases if p.wall_ns is not None]
+    assert spans and all(s >= 0 for s in spans)
+    total = res.measured_wall_s()
+    assert total == pytest.approx(sum(spans) / 1e9)
+    # dilation of a trace against itself is 1.0 (same recorded timing)
+    assert res.dilation(replay(path, mode="linear")) == pytest.approx(1.0)
+
+
 # ---------------------------------------------------------------- modes
 
 def test_fifo_mode_alias():

@@ -79,6 +79,56 @@ def test_diff_aligns_per_phase_and_rank(replays):
     assert "trace diff" in d.report()
 
 
+def test_trace_diff_renders_unified_report(replays):
+    """Trace diffs and GraphFrame comparisons share one report type
+    (core.comparison.ProfileReport)."""
+    from repro.core.comparison import ProfileReport
+    rep = diff(replays["binned"], replays["linear"]).to_report()
+    assert isinstance(rep, ProfileReport)
+    assert rep.kind == "trace"
+    assert (rep.baseline_name, rep.candidate_name) == ("binned", "linear")
+    assert rep.rows and all("rank" in r.path for r in rep.rows)
+    assert rep.regressed()
+    assert "long_traversal" in rep.finding_kinds()
+    txt = rep.render()
+    assert "trace report" in txt and "long_traversal" in txt
+    # a healthy diff renders the same type, unregressed
+    clean = diff(replays["binned"], replays["binned"]).to_report()
+    assert isinstance(clean, ProfileReport) and not clean.regressed()
+
+
+def test_graphframe_comparison_shares_report_type():
+    from repro.core.comparison import ProfileReport, compare_frames
+    from repro.core.events import Event
+    from repro.core.graphframe import GraphFrame
+
+    def frame(scale: int) -> GraphFrame:
+        evs = [Event(name="step", path=("app", "step"), category="app",
+                     t_start=0, t_end=1_000_000 * scale),
+               Event(name="send", path=("app", "send"), category="api",
+                     t_start=0, t_end=500_000 * scale)]
+        return GraphFrame.from_events(evs)
+
+    res = compare_frames([frame(1)], [frame(4)],
+                         baseline_name="fixed", experimental_name="slow")
+    rep = res.to_report()
+    assert isinstance(rep, ProfileReport)
+    assert rep.kind == "graphframe"
+    assert {r.path for r in rep.rows} == {"app/step", "app/send"}
+    for row in rep.rows:
+        assert row.ratio == pytest.approx(4.0)
+    # 4x slower leaves become hotspot findings with seconds severity
+    assert rep.finding_kinds() == ["hotspot"]
+    assert rep.findings[0].severity == pytest.approx(3e-3, rel=1e-3)
+    assert rep.worst(1)[0].path == "app/step"
+    # a region the experimental run never produced is reported, not
+    # silently dropped
+    gone = compare_frames([frame(1)], [frame(1)])
+    gone.experimental.root.children["app"].children.pop("send")
+    kinds = gone.to_report().finding_kinds()
+    assert "missing" in kinds
+
+
 def test_detectors_run_on_replayed_events(replays):
     flagged = {f.kind for f in analyses.analyze_all(replays["linear"].events)
                if f.kind in DEFECT_KINDS}

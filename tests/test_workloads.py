@@ -1,0 +1,230 @@
+"""Workload scenario suite: registry contract, seeded determinism
+(same seed => byte-identical trace + identical counter snapshots),
+detector expectations per seeded defect, sweep payload schema and the
+baseline regression path."""
+import json
+
+import pytest
+
+from repro import workloads
+from repro.core.counters import CounterStat
+from repro.trace import read_trace
+from repro.workloads import (DEFECT_DETECTOR, Scenario, all_scenarios,
+                             check, compare_to_baseline, hist_percentile,
+                             make_baseline, run_scenario)
+
+SMOKE = dict(size="smoke", seed=0)
+
+
+# ---------------------------------------------------------------- registry
+
+def test_gallery_has_at_least_six_scenarios():
+    scs = all_scenarios()
+    assert len(scs) >= 6
+    assert len({s.name for s in scs}) == len(scs)
+    for s in scs:
+        assert s.description and s.stresses
+        # every declared expectation names a known seeded defect
+        assert set(s.expect) <= set(DEFECT_DETECTOR)
+        # every scenario stresses the progress-lane defect
+        assert "shared" in s.expect
+
+
+def test_get_unknown_scenario_raises():
+    with pytest.raises(KeyError):
+        workloads.get("nope")
+
+
+def test_duplicate_registration_rejected():
+    sc = all_scenarios()[0]
+    with pytest.raises(ValueError):
+        workloads.register(sc)
+
+
+def test_params_sizes_and_overrides():
+    sc = workloads.get("halo3d")
+    full, smoke = sc.params("full"), sc.params("smoke")
+    assert smoke["steps"] < full["steps"]
+    assert sc.params("smoke", steps=3)["steps"] == 3
+    with pytest.raises(ValueError):
+        sc.params("huge")
+
+
+# ------------------------------------------------------------- determinism
+
+def test_same_seed_byte_identical_trace(tmp_path):
+    """Deterministic mode: two runs of one (scenario, seed) produce
+    byte-identical trace files — ops, phases, pe schedule and the final
+    counter snapshot included."""
+    paths = [str(tmp_path / f"t{i}.jsonl") for i in (0, 1)]
+    for p in paths:
+        run_scenario("master_worker", engine_mode="linear",
+                     trace_path=p, wall_clock=False, **SMOKE)
+    a, b = (open(p, "rb").read() for p in paths)
+    assert a == b and len(a) > 1000
+
+
+def test_different_seed_changes_seeded_traffic(tmp_path):
+    pa = str(tmp_path / "a.jsonl")
+    pb = str(tmp_path / "b.jsonl")
+    run_scenario("sparse_neighbors", seed=0, trace_path=pa,
+                 wall_clock=False, size="smoke")
+    run_scenario("sparse_neighbors", seed=1, trace_path=pb,
+                 wall_clock=False, size="smoke")
+    assert open(pa, "rb").read() != open(pb, "rb").read()
+
+
+def test_same_seed_identical_counter_snapshots(tmp_path):
+    """The trace's final ``snap`` record (deterministic mode: no
+    wall-clock stats) is identical across runs and carries per-rank
+    lanes."""
+    snaps = []
+    for i in (0, 1):
+        path = str(tmp_path / f"s{i}.jsonl")
+        run_scenario("unexpected_storm", engine_mode="leaky_umq",
+                     trace_path=path, wall_clock=False, **SMOKE)
+        _, records = read_trace(path)
+        snaps.append([r for r in records if r["t"] == "snap"][-1])
+    assert snaps[0] == snaps[1]
+    stats = snaps[0]["stats"]
+    assert len(stats) >= 2                       # one lane per rank
+    for per in stats.values():
+        assert not any(name.endswith("_ns") for name in per)
+    leak = CounterStat.from_attrs(stats["0"]["match.umq.leaked"])
+    assert leak.total > 0
+
+
+def test_deterministic_metrics_reproduce_exactly():
+    a = run_scenario("wildcard_pipeline", engine_mode="linear", **SMOKE)
+    b = run_scenario("wildcard_pipeline", engine_mode="linear", **SMOKE)
+    for field in ("n_ops", "depth_mean", "depth_max", "umq_mean",
+                  "umq_max", "finding_kinds", "defect_kinds"):
+        assert getattr(a, field) == getattr(b, field), field
+
+
+# ---------------------------------------------------- detector expectations
+
+@pytest.mark.parametrize("sc", all_scenarios(), ids=lambda s: s.name)
+def test_healthy_run_is_clean(sc):
+    r = run_scenario(sc, engine_mode="fifo", progress_mode="incoming",
+                     **SMOKE)
+    assert r.defect_kinds == []
+
+
+@pytest.mark.parametrize("sc", all_scenarios(), ids=lambda s: s.name)
+def test_declared_defects_are_flagged(sc):
+    for defect in sc.expect:
+        detector = DEFECT_DETECTOR[defect]
+        if defect == "shared":
+            r = run_scenario(sc, engine_mode="fifo",
+                             progress_mode="shared", **SMOKE)
+        else:
+            r = run_scenario(sc, engine_mode=defect,
+                             progress_mode="incoming", **SMOKE)
+        assert detector in r.defect_kinds, (sc.name, defect)
+
+
+def test_hist_percentile():
+    st = CounterStat(name="d")
+    for v in (1, 1, 1, 1, 1, 1, 1, 1, 1, 64):
+        st.add(v, observation=True)
+    assert hist_percentile(st, 0.5) == 1.0
+    assert hist_percentile(st, 0.99) == 64.0
+    assert hist_percentile(None, 0.5) == 0.0
+
+
+# --------------------------------------------------- sweep schema + baseline
+
+@pytest.fixture(scope="module")
+def small_sweep():
+    """One small sweep shared by the schema/baseline tests (three
+    scenarios — together covering every seeded defect twice — keep the
+    fixture fast; the full matrix is the scenario_sweep.py gate's
+    job)."""
+    return workloads.sweep(
+        size="smoke", seed=0,
+        scenarios=["master_worker", "unexpected_storm",
+                   "wildcard_pipeline"])
+
+
+def test_sweep_payload_schema(small_sweep):
+    r = small_sweep
+    assert r["format"] == workloads.bench.SWEEP_FORMAT
+    assert r["version"] == workloads.bench.SWEEP_VERSION
+    assert set(r["scenarios"]) == {"master_worker", "unexpected_storm",
+                                   "wildcard_pipeline"}
+    for entry in r["scenarios"].values():
+        assert set(entry["cells"]) == {
+            f"{em}+{pm}" for em in r["engine_modes"]
+            for pm in r["progress_modes"]}
+        for cell in entry["cells"].values():
+            for key in ("n_ops", "us_per_op", "depth_mean", "depth_max",
+                        "depth_p50", "depth_p90", "umq_mean", "umq_max",
+                        "findings", "defects"):
+                assert key in cell
+    assert set(r["defect_coverage"]) == set(DEFECT_DETECTOR)
+    json.dumps(r)                                # JSON-serializable
+
+
+def test_check_passes_and_detects_missing_coverage(small_sweep):
+    assert check(small_sweep, min_scenarios=2) == []
+    broken = json.loads(json.dumps(small_sweep))
+    broken["defect_coverage"]["linear"] = []
+    assert any("linear" in f for f in check(broken, min_scenarios=2))
+    broken = json.loads(json.dumps(small_sweep))
+    broken["scenarios"]["master_worker"]["cells"][
+        "fifo+incoming"]["defects"] = ["umq_flood"]
+    assert any("healthy" in f for f in check(broken, min_scenarios=2))
+
+
+def test_baseline_round_trip_and_regression(small_sweep):
+    base = make_baseline(small_sweep)
+    assert base["format"] == workloads.bench.BASELINE_FORMAT
+    assert compare_to_baseline(small_sweep, base) == []
+    # a drifted deterministic metric is a regression
+    tampered = json.loads(json.dumps(base))
+    key = workloads.cell_key("master_worker", "linear", "incoming")
+    tampered["cells"][key]["depth_mean"] *= 2.0
+    regs = compare_to_baseline(small_sweep, tampered)
+    assert any("depth_mean" in r for r in regs)
+    # a changed defect set is a regression
+    tampered = json.loads(json.dumps(base))
+    tampered["cells"][key]["defects"] = []
+    regs = compare_to_baseline(small_sweep, tampered)
+    assert any("defect findings changed" in r for r in regs)
+    # size/seed mismatch is reported, not silently compared
+    tampered = json.loads(json.dumps(base))
+    tampered["size"] = "full"
+    regs = compare_to_baseline(small_sweep, tampered)
+    assert regs and "regenerate" in regs[0]
+
+
+def test_committed_baselines_exist_and_have_format():
+    import os
+    root = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines")
+    for name in ("scenario_baseline.json",
+                 "scenario_baseline_smoke.json"):
+        path = os.path.join(root, name)
+        assert os.path.exists(path), name
+        with open(path) as f:
+            base = json.load(f)
+        assert base["format"] == workloads.bench.BASELINE_FORMAT
+        assert base["cells"]
+
+
+# ------------------------------------------------------- trace integration
+
+def test_scenario_trace_replays_without_divergence(tmp_path):
+    """A recorded scenario run replays through the trace subsystem with
+    the exact recorded match order (the what-if property holds for
+    scenario traffic too)."""
+    from repro.trace import replay
+    path = str(tmp_path / "t.jsonl")
+    run_scenario("alltoall_transpose", engine_mode="linear",
+                 trace_path=path, wall_clock=False, **SMOKE)
+    res = replay(path)                   # recorded mode
+    assert res.mode == "linear"
+    assert res.divergences == []
+    fifo = replay(path, mode="fifo")
+    assert fifo.matches == res.matches   # defects change cost, not matching
