@@ -1,8 +1,8 @@
 PYTHON ?= python
 
 .PHONY: verify test bench-match bench-replay replay-smoke \
-	bench-scenarios scenario-smoke scenario-baseline tour-timeline \
-	tour-match tour-replay
+	bench-scenarios scenario-smoke scenario-baseline bench-hotpath \
+	hotpath-smoke hotpath-baseline tour-timeline tour-match tour-replay
 
 verify:
 	./scripts/verify.sh
@@ -29,6 +29,19 @@ scenario-smoke:
 scenario-baseline:
 	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --write-baseline
 	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --write-baseline
+
+# hot-path throughput gate: >= 3x the frozen pre-overhaul engine,
+# measured in-run (machine-load-proof ratio)
+bench-hotpath:
+	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py
+
+hotpath-smoke:
+	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py --smoke --min-speedup 2.5
+
+# regenerate the committed op-stream/throughput baselines
+hotpath-baseline:
+	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py --write-baseline
+	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py --smoke --write-baseline
 
 tour-timeline:
 	PYTHONPATH=src:. $(PYTHON) examples/timeline_tour.py

@@ -1,0 +1,133 @@
+"""Hot-path throughput gate: match ops/sec, trace records/sec, counter
+drain throughput over the scenario sweep.
+
+    PYTHONPATH=src python benchmarks/hotpath_bench.py [--smoke]
+                                                      [--min-speedup X]
+
+Measures every scenario x engine mode with :mod:`repro.workloads
+.hotpath` (best-of-N deterministic drives), writes the versioned
+``results/bench/hotpath.json``, and gates the aggregate ``binned``-mode
+match throughput against the committed machine-local baseline
+(``benchmarks/baselines/hotpath_baseline[_smoke].json``).
+
+The committed baseline was recorded on the *pre-overhaul* engine, so the
+default gate demands the overhaul's >= 3x; after regenerating the
+baseline (``--write-baseline`` / ``make hotpath-baseline``) the bar moves
+to the then-current engine and later PRs gate at ~1x against it (pass
+``--min-speedup 0.8`` or similar to tolerate machine noise while still
+catching order-of-magnitude regressions).
+
+Exit status is non-zero on any failed condition (``make bench-hotpath``;
+``scripts/verify.sh`` runs the smoke size with a noise-tolerant bar).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import argparse
+import json
+from typing import List
+
+from repro.workloads import hotpath
+
+# committed baselines live under benchmarks/ (results/ is gitignored)
+BASELINES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "baselines")
+
+
+def baseline_path(size: str) -> str:
+    name = ("hotpath_baseline.json" if size == "full"
+            else f"hotpath_baseline_{size}.json")
+    return os.path.join(BASELINES, name)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized scenario parameters")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=7,
+                    help="best-of-N timing repeats per cell")
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="required aggregate binned match-throughput "
+                         "multiple of the committed baseline")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file (default: committed one for the "
+                         "chosen size)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from this run")
+    args = ap.parse_args()
+    size = "smoke" if args.smoke else "full"
+
+    from benchmarks.common import RESULTS, save_json
+    os.makedirs(RESULTS, exist_ok=True)
+
+    print(f"== hotpath bench (size={size}, seed={args.seed}, "
+          f"best of {args.repeats}) ==")
+    results = hotpath.bench(size=size, seed=args.seed,
+                            repeats=args.repeats)
+
+    bpath = args.baseline or baseline_path(size)
+    baseline = None
+    if not args.write_baseline and os.path.exists(bpath):
+        with open(bpath) as f:
+            baseline = json.load(f)
+    print(f"{'cell':35s} {'ops':>6s} {'Mops/s':>8s} {'us/op':>7s} "
+          f"{'trace/s':>9s} {'drain/s':>10s} {'vs pre-PR':>10s}")
+    for key, cell in sorted(results["cells"].items()):
+        print(f"{key:35s} {cell['n_ops']:6d} "
+              f"{cell['match_ops_per_s'] / 1e6:8.3f} "
+              f"{cell['match_us_per_op']:7.2f} "
+              f"{cell['trace_recs_per_s']:9.0f} "
+              f"{cell['drain_deltas_per_s']:10.0f} "
+              f"{cell['speedup_vs_legacy']:9.2f}x")
+    print("\naggregate (total ops / total best wall time; speedup "
+          "measured against the in-process pre-overhaul engine):")
+    for em, agg in results["aggregate"].items():
+        mark = "  <- gated" if em == results["gated_mode"] else ""
+        print(f"  {em:10s} match {agg['match_ops_per_s']:>10,} ops/s "
+              f"({agg['speedup_vs_legacy']:.2f}x pre-PR)   "
+              f"trace {agg['trace_recs_per_s']:>10,} rec/s   "
+              f"drain {agg['drain_deltas_per_s']:>11,} deltas/s{mark}")
+
+    failures: List[str] = []
+    if args.write_baseline:
+        os.makedirs(os.path.dirname(bpath), exist_ok=True)
+        with open(bpath, "w") as f:
+            json.dump(hotpath.make_baseline(results), f, indent=1,
+                      sort_keys=True)
+        print(f"\nbaseline written: {bpath}")
+    elif baseline is not None:
+        failures = hotpath.compare_to_baseline(
+            results, baseline, min_speedup=args.min_speedup)
+        mode = results["gated_mode"]
+        ratio = results["aggregate"][mode]["speedup_vs_legacy"]
+        results["baseline"] = {
+            "path": bpath, "min_speedup": args.min_speedup,
+            "match_speedup": ratio, "failures": failures}
+        print(f"\nperf gate (op stream pinned by {bpath}):")
+        print(f"  aggregate {mode} speedup vs pre-overhaul engine: "
+              f"{ratio:.2f}x (gate: >= {args.min_speedup:g}x, "
+              f"measured in-run)")
+    else:
+        print(f"\n(no committed baseline at {bpath}; run with "
+              "--write-baseline to create one)")
+
+    path = save_json("hotpath.json", results)
+    print(f"results saved: {path}")
+
+    if failures:
+        print("\nFAILED hotpath perf gate:")
+        for f in failures:
+            print(" - " + f)
+        return 1
+    print("\nhotpath perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

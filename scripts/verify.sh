@@ -41,3 +41,8 @@ python benchmarks/replay_sweep.py --smoke
 
 echo "== workload scenario sweep gate (baseline regression + seeded-defect coverage) =="
 python benchmarks/scenario_sweep.py --smoke
+
+echo "== hot-path throughput gate (vs frozen pre-overhaul engine, in-run) =="
+# full-size gate is 3x (make bench-hotpath); the CI-sized run uses a
+# noise-tolerant bar that still catches order-of-magnitude regressions
+python benchmarks/hotpath_bench.py --smoke --min-speedup 2.5

@@ -18,16 +18,23 @@ offline-runnable.
 from __future__ import annotations
 
 import random
-from typing import Iterator, List, Sequence, Tuple
+from functools import lru_cache
+from typing import Sequence, Tuple
 
 Pair = Tuple[int, int]
 
 AXIS_INDEX = {"x": 0, "y": 1, "z": 2}
 
+# The deterministic generators below are memoized and return immutable
+# tuples: collective decompositions rebuild the same pair lists once per
+# ring step / halo face, which at matching-engine throughput is real
+# per-op overhead. Callers iterate (or copy) — never mutate.
 
-def ring_perm(n: int, step: int = 1) -> List[Pair]:
+
+@lru_cache(maxsize=None)
+def ring_perm(n: int, step: int = 1) -> Sequence[Pair]:
     """The ring permutation ``i -> (i + step) % n`` (step -1 reverses)."""
-    return [(i, (i + step) % n) for i in range(n)]
+    return tuple((i, (i + step) % n) for i in range(n))
 
 
 def halo_tag(axis: int, direction: int) -> int:
@@ -38,37 +45,46 @@ def halo_tag(axis: int, direction: int) -> int:
     return 2 * axis + (1 if direction > 0 else 0)
 
 
-def halo_shifts(n: int, axes: int = 3) -> Iterator[Tuple[int, int,
-                                                         List[Pair], int]]:
+@lru_cache(maxsize=None)
+def halo_shifts(n: int, axes: int = 3) -> Sequence[
+        Tuple[int, int, Sequence[Pair], int]]:
     """All face shifts of one halo-exchange step on ``axes`` ring axes of
-    size ``n``: yields ``(axis, direction, perm, tag)`` in the fixed
-    axis-major order the stencil issues them."""
-    for ax in range(axes):
-        for direction in (1, -1):
-            yield ax, direction, ring_perm(n, direction), \
-                halo_tag(ax, direction)
+    size ``n``: ``(axis, direction, perm, tag)`` in the fixed axis-major
+    order the stencil issues them."""
+    return tuple((ax, direction, ring_perm(n, direction),
+                  halo_tag(ax, direction))
+                 for ax in range(axes) for direction in (1, -1))
 
 
-def transpose_pairs(n: int) -> List[Pair]:
+@lru_cache(maxsize=None)
+def transpose_pairs(n: int) -> Sequence[Pair]:
     """Full all-to-all (matrix transpose) traffic: every ordered pair."""
-    return [(i, j) for i in range(n) for j in range(n) if i != j]
+    return tuple((i, j) for i in range(n) for j in range(n) if i != j)
+
+
+@lru_cache(maxsize=None)
+def _peers(n: int, src: int) -> Sequence[int]:
+    return tuple(d for d in range(n) if d != src)
 
 
 def random_neighbor_pairs(n: int, degree: int,
-                          rng: random.Random) -> List[Pair]:
+                          rng: random.Random) -> Sequence[Pair]:
     """Sparse random neighbor exchange: each rank sends to ``degree``
-    distinct random peers (seeded — same rng state, same graph)."""
-    pairs: List[Pair] = []
+    distinct random peers (seeded — same rng state, same graph; the
+    rng consumption order is part of the scenario suite's determinism
+    contract)."""
+    pairs = []
     for src in range(n):
-        peers = [d for d in range(n) if d != src]
+        peers = _peers(n, src)
         for dst in rng.sample(peers, min(degree, len(peers))):
             pairs.append((src, dst))
     return pairs
 
 
+@lru_cache(maxsize=None)
 def hot_rank_pairs(n: int, hot: int = 0,
-                   per_worker: int = 1) -> List[Pair]:
+                   per_worker: int = 1) -> Sequence[Pair]:
     """Master–worker imbalance: every other rank sends ``per_worker``
     messages to the single hot rank."""
-    return [(w, hot) for w in range(n) if w != hot
-            for _ in range(per_worker)]
+    return tuple((w, hot) for w in range(n) if w != hot
+                 for _ in range(per_worker))

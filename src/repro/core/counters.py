@@ -5,12 +5,14 @@ matching engine* with lightweight counters (queue depth traversed, queue
 length, unexpected-message counts) instead of timeline regions. This
 registry is the hot-path sink for those counters, built in the same
 second-queue style as :class:`repro.core.collector.Collector`: producer
-threads append ``(name, value)`` deltas to **thread-local** buffers (list
-appends are atomic in CPython — no shared lock on the hot path); the
-reader swaps out each buffer and merges into aggregate statistics on its
-own time. Producers never contend with the consumer, so instrumenting the
-matching engine does not perturb the matching engine — the property the
-paper calls out as essential for counters inside the critical path.
+threads append flat ``pid, name, value, is_observation`` delta quads to
+**thread-local** buffers (one atomic ``extend`` per op in CPython — no
+shared lock on the hot path); the reader swaps its own buffer out under
+the registry lock, consumes foreign threads' buffers in place, and
+bulk-merges into aggregate statistics on its own time. Producers never
+contend with the consumer, so instrumenting the matching engine does not
+perturb the matching engine — the property the paper calls out as
+essential for counters inside the critical path.
 
 Snapshots serialize into :class:`repro.core.events.Event`-compatible
 records (category ``"counter"``, zero duration, stats in ``attrs``) so the
@@ -29,6 +31,7 @@ import dataclasses
 import math
 import threading
 import time
+from itertools import islice
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from .events import Event
@@ -36,10 +39,27 @@ from .events import Event
 COUNTER_CATEGORY = "counter"
 COUNTER_PREFIX = "counter/"
 
-# (pid, name, value, is_observation) delta records; counters accumulate
-# value, observations additionally feed min/max and the power-of-two
-# histogram. pid tags the lane the delta belongs to.
+# Delta records are stored FLAT: every buffered delta is four consecutive
+# list elements ``pid, name, value, is_observation``. Counters accumulate
+# value; observations additionally feed min/max and the power-of-two
+# histogram; pid tags the lane the delta belongs to. The flat encoding
+# exists for the producer side: appending one op's deltas is a single
+# ``buf += (pid, name, value, obs, pid, name2, ...)`` — one tuple
+# allocation and one extend instead of one tuple per delta (~3x cheaper
+# on the matching hot path). The drain regroups with ``zip(it, it, it,
+# it)``.
+#
+# Batch producers (the match engine's batched dispatch) go one step
+# further with COLUMN records: one quad ``pid, spec, rows, "cols"``
+# carries a whole batch of same-shaped deltas, where ``spec`` is a tuple
+# of ``(name, is_observation)`` columns and ``rows`` is the flat
+# row-major value list (len(rows) % len(spec) == 0). The delta multiset
+# is exactly the per-delta expansion — recording cost per op drops to
+# one small tuple-extend, and the drain resolves each column's stat once
+# per record instead of once per delta.
 _Delta = Tuple[int, str, float, bool]
+DELTA_WIDTH = 4
+COLS = "cols"
 
 
 def _pow2_bin(value: float) -> int:
@@ -134,13 +154,28 @@ class CounterLane:
 
     def count(self, name: str, value: float = 1) -> None:
         if self._reg.enabled:
-            self._reg._buffer_for_current_thread().append(
+            self._reg._buffer_for_current_thread().extend(
                 (self.pid, name, value, False))
 
     def observe(self, name: str, value: float) -> None:
         if self._reg.enabled:
-            self._reg._buffer_for_current_thread().append(
+            self._reg._buffer_for_current_thread().extend(
                 (self.pid, name, value, True))
+
+    def observe_many(self, name: str, values: Iterable[float]) -> None:
+        """Batched observations: one buffer fetch, one extend."""
+        if self._reg.enabled:
+            pid = self.pid
+            buf = self._reg._buffer_for_current_thread()
+            for v in values:
+                buf += (pid, name, v, True)
+
+    def buffer(self) -> List:
+        """This thread's flat delta buffer, for hot-path producers that
+        batch their own ``pid, name, value, is_observation`` quads (see
+        :meth:`CounterRegistry.buffer`). Use :attr:`pid` as the lane tag
+        and check :attr:`enabled` first."""
+        return self._reg._buffer_for_current_thread()
 
 
 class CounterRegistry:
@@ -149,11 +184,17 @@ class CounterRegistry:
     def __init__(self, pid: int = 0):
         self.pid = pid
         self._registry_lock = threading.Lock()   # cold path only
-        self._buffers: Dict[int, List[_Delta]] = {}
+        self._buffers: Dict[int, List] = {}      # flat quads per thread
         self._merged: Dict[str, CounterStat] = {}
-        self._merged_by_pid: Dict[Tuple[int, str], CounterStat] = {}
+        # per-lane stats, nested pid -> name -> stat (tuple keys would
+        # cost one allocation per merged delta)
+        self._merged_by_pid: Dict[int, Dict[str, CounterStat]] = {}
         self._lanes: Dict[int, CounterLane] = {}
         self.enabled = True
+        # bumped whenever a drain may have swapped a buffer out, so
+        # producers that cache the buffer reference (MatchEngine) know
+        # to refetch; plain int read on the hot path
+        self.epoch = 0
 
     # -- producer side (hot path, lock-free after first call per thread) --
 
@@ -168,14 +209,36 @@ class CounterRegistry:
     def count(self, name: str, value: float = 1) -> None:
         """Monotonic counter increment."""
         if self.enabled:
-            self._buffer_for_current_thread().append(
+            self._buffer_for_current_thread().extend(
                 (self.pid, name, value, False))
 
     def observe(self, name: str, value: float) -> None:
         """Histogram observation (feeds min/max and power-of-two bins)."""
         if self.enabled:
-            self._buffer_for_current_thread().append(
+            self._buffer_for_current_thread().extend(
                 (self.pid, name, value, True))
+
+    def observe_many(self, name: str, values: Iterable[float]) -> None:
+        """Batched observations of one (ideally interned/literal) name:
+        one buffer fetch instead of a call per value."""
+        if self.enabled:
+            pid = self.pid
+            buf = self._buffer_for_current_thread()
+            for v in values:
+                buf += (pid, name, v, True)
+
+    def buffer(self) -> List:
+        """This thread's flat delta buffer, for hot-path producers (the
+        match engine) that batch one op's deltas into a single
+        ``buf += (pid, name, value, is_observation, pid, name2, ...)``.
+        Callers must check :attr:`enabled` first, tag quads with the
+        producer's pid, and use interned or literal strings for names
+        (the drain hashes each name once per delta). A fetched buffer
+        stays appendable across *other* threads' drains (they consume in
+        place), but a drain on the fetching thread swaps it out —
+        producers that cache the reference must refetch whenever
+        :attr:`epoch` changes."""
+        return self._buffer_for_current_thread()
 
     def lane(self, pid: int) -> CounterLane:
         """Per-pid producer view (one lane per rank; cached)."""
@@ -187,36 +250,140 @@ class CounterRegistry:
 
     # -- consumer side --
 
+    def _merge(self, flat: Iterable) -> None:
+        """Fold one batch of flat delta quads into the aggregate and
+        per-lane stats. :meth:`CounterStat.add` is inlined — at drain
+        volume the method dispatch and the `_pow2_bin` call are the
+        cost."""
+        merged = self._merged
+        by_pid = self._merged_by_pid
+        it = iter(flat)
+        for pid, name, value, obs in zip(it, it, it, it):
+            if type(obs) is str:          # column record: name=spec,
+                per = by_pid.get(pid)     # value=row-major values
+                if per is None:
+                    per = by_pid[pid] = {}
+                cols = []
+                for cname, cobs in name:
+                    st = merged.get(cname)
+                    if st is None:
+                        st = merged[cname] = CounterStat(name=cname)
+                    pst = per.get(cname)
+                    if pst is None:
+                        pst = per[cname] = CounterStat(name=cname)
+                    cols.append((st, pst, cobs))
+                k = len(cols)
+                i = 0
+                for v in value:
+                    st, pst, cobs = cols[i]
+                    i += 1
+                    if i == k:
+                        i = 0
+                    st.count += 1
+                    st.total += v
+                    pst.count += 1
+                    pst.total += v
+                    if cobs:
+                        iv = int(v)
+                        b = 1 << (iv.bit_length() - 1) if iv > 0 else 0
+                        st.kind = "histogram"
+                        if v < st.vmin:
+                            st.vmin = v
+                        if v > st.vmax:
+                            st.vmax = v
+                        bins = st.bins
+                        bins[b] = bins.get(b, 0) + 1
+                        pst.kind = "histogram"
+                        if v < pst.vmin:
+                            pst.vmin = v
+                        if v > pst.vmax:
+                            pst.vmax = v
+                        bins = pst.bins
+                        bins[b] = bins.get(b, 0) + 1
+                continue
+            st = merged.get(name)
+            if st is None:
+                st = merged[name] = CounterStat(name=name)
+            per = by_pid.get(pid)
+            if per is None:
+                per = by_pid[pid] = {}
+            pst = per.get(name)
+            if pst is None:
+                pst = per[name] = CounterStat(name=name)
+            st.count += 1
+            st.total += value
+            pst.count += 1
+            pst.total += value
+            if obs:
+                v = int(value)
+                b = 1 << (v.bit_length() - 1) if v > 0 else 0
+                st.kind = "histogram"
+                if value < st.vmin:
+                    st.vmin = value
+                if value > st.vmax:
+                    st.vmax = value
+                bins = st.bins
+                bins[b] = bins.get(b, 0) + 1
+                pst.kind = "histogram"
+                if value < pst.vmin:
+                    pst.vmin = value
+                if value > pst.vmax:
+                    pst.vmax = value
+                bins = pst.bins
+                bins[b] = bins.get(b, 0) + 1
+
     def drain(self) -> Dict[str, CounterStat]:
         """Merge all buffered deltas into the aggregate stats and return
         the full aggregate (same snapshot-and-clear idiom as Collector).
-        Lane structure is preserved in parallel for :meth:`drain_lanes`."""
+        Lane structure is preserved in parallel for :meth:`drain_lanes`.
+
+        Buffers owned by the draining thread are swapped out whole under
+        the registry lock (no copy, no delete — the common case: single-
+        threaded benches and scenario runs drain their own buffer).
+        Buffers of *other* live threads cannot be swapped without racing
+        their lock-free ``fetch buffer -> append`` window, so those are
+        consumed in place with the atomic idiom the producers rely on:
+        read ``[0, n)`` (appends only ever land at the tail) and then
+        drop the consumed prefix with a single atomic ``del``."""
+        me = threading.get_ident()
+        own: List[List] = []
+        foreign: List[Tuple[List, int]] = []
         with self._registry_lock:
-            idents = list(self._buffers.keys())
-        for ident in idents:
-            buf = self._buffers[ident]
-            n = len(buf)
-            for pid, name, value, obs in buf[:n]:
-                st = self._merged.get(name)
-                if st is None:
-                    st = self._merged[name] = CounterStat(name=name)
-                st.add(value, obs)
-                pst = self._merged_by_pid.get((pid, name))
-                if pst is None:
-                    pst = self._merged_by_pid[(pid, name)] = (
-                        CounterStat(name=name))
-                pst.add(value, obs)
+            self.epoch += 1
+            for ident, buf in list(self._buffers.items()):
+                if not buf:
+                    continue
+                if ident == me:
+                    self._buffers[ident] = []
+                    own.append(buf)
+                else:
+                    # quad-align: a foreign producer may be mid-extend
+                    foreign.append((buf, len(buf) // 4 * 4))
+        for buf in own:
+            self._merge(buf)
+        for buf, n in foreign:
+            self._merge(islice(buf, n))
             del buf[:n]
         return dict(self._merged)
+
+    def pending_deltas(self) -> int:
+        """Logical deltas buffered but not yet drained, column records
+        expanded (cold-path metric; the hotpath bench reports drain
+        throughput in deltas/sec)."""
+        total = 0
+        with self._registry_lock:
+            for buf in self._buffers.values():
+                it = iter(buf)
+                for _pid, name, value, obs in zip(it, it, it, it):
+                    total += len(value) if type(obs) is str else 1
+        return total
 
     def drain_lanes(self) -> Dict[int, Dict[str, CounterStat]]:
         """Per-pid statistics (drains first). The aggregate returned by
         :meth:`drain` is the merge of these lanes."""
         self.drain()
-        out: Dict[int, Dict[str, CounterStat]] = {}
-        for (pid, name), st in self._merged_by_pid.items():
-            out.setdefault(pid, {})[name] = st
-        return out
+        return {pid: dict(per)
+                for pid, per in self._merged_by_pid.items()}
 
     def value(self, name: str) -> float:
         """Total of one counter (drains first, aggregated across lanes)."""

@@ -28,16 +28,23 @@ from . import engine as _engine
 
 
 class LinearPRQ:
-    """Defect 1: flat posted-receive queue, linear search, no binning."""
+    """Defect 1: flat posted-receive queue, linear search, no binning.
+
+    ``_len`` mirrors the queue length as a plain attribute (the engine's
+    instrumentation reads it without a ``__len__`` dispatch) — pure
+    bookkeeping, the pathological linear scan below is the defect and
+    stays untouched."""
 
     def __init__(self) -> None:
         self._q: List["_engine.PostedRecv"] = []
+        self._len = 0
 
     def __len__(self) -> int:
         return len(self._q)
 
     def post(self, recv: "_engine.PostedRecv") -> None:
         self._q.append(recv)
+        self._len += 1
 
     def match(self, msg: "_engine.Message"
               ) -> Tuple[Optional["_engine.PostedRecv"], int]:
@@ -45,6 +52,7 @@ class LinearPRQ:
         for i, recv in enumerate(self._q):
             if recv.accepts(msg):
                 del self._q[i]
+                self._len -= 1
                 return recv, i + 1
         return None, max(len(self._q), 1)
 

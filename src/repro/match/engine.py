@@ -11,14 +11,19 @@ arrived* wins.
 This module is the host-level model of that engine, instrumented with the
 lightweight counters the paper adds to the matching path (queue depth
 traversed, queue length at post time, match latency, unexpected counts)
-via :class:`repro.core.counters.CounterRegistry`. Counter writes are
-thread-local appends, so instrumentation does not perturb the engine.
+via :class:`repro.core.counters.CounterRegistry`. The engine writes its
+counter deltas with one buffer fetch and one batched append per op
+(:meth:`CounterRegistry.buffer`), so instrumentation cost does not
+dominate the path it instruments — the property the paper calls out as
+essential for counters inside the critical path.
 
 Engine modes (see :mod:`repro.match.defects` for the seeded defects):
 
   * ``"binned"``    — the fixed design: the PRQ is binned by envelope
     (specific / any-source / any-tag / any-any), so a match examines at
-    most four queue heads; the UMQ is garbage-collected on every match.
+    most four queue heads; the UMQ is envelope-indexed
+    (:class:`IndexedUMQ`), so specific receives find their message in
+    O(1) and every consumed entry is reclaimed immediately.
   * ``"linear"``    — seeded defect 1: one flat PRQ searched linearly.
   * ``"leaky_umq"`` — seeded defect 2: UMQ entries consumed via wildcard
     receives are tombstoned, never reclaimed.
@@ -32,8 +37,6 @@ traffic mix the paper's histograms are drawn from.
 from __future__ import annotations
 
 import contextlib
-import dataclasses
-import itertools
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
@@ -49,6 +52,64 @@ MODES = ("binned", "linear", "leaky_umq")
 # wherever a mode is taken (benchmarks/replay_sweep.py uses it).
 MODE_ALIASES = {"fifo": "binned"}
 
+# Search latency (match.prq.search_ns / match.umq.search_ns) is sampled:
+# every TIMING_EVERY-th op per engine is timed and its measurement is
+# scaled by the period, so totals — what roofline.match_seconds, finding
+# severities and the trace differ consume — stay calibrated while the
+# per-op cost of two perf_counter_ns() calls is paid once per
+# TIMING_EVERY ops.
+# The first op on every engine is always sampled (tiny workloads still
+# get a measurement). Search times are wall-clock and therefore already
+# excluded from deterministic traces and baseline-gated metrics.
+TIMING_EVERY = 64
+
+_pcn = time.perf_counter_ns
+
+_NULL_CONTEXT = contextlib.nullcontext()
+
+# Column specs for the batched counter sink (see repro.core.counters
+# COLS records): each batched op appends one row of values; the delta
+# multiset is identical to the per-op quads.
+_POST_HIT_COLS = (("match.umq.length", True),
+                  ("match.umq.traversal_depth", True),
+                  ("match.umq.hit", False))
+_POST_MISS_COLS = (("match.umq.length", True),
+                   ("match.umq.traversal_depth", True),
+                   ("match.prq.length", True))
+_ARR_EXP_COLS = (("match.prq.traversal_depth", True),
+                 ("match.expected", False))
+_ARR_UNEXP_COLS = (("match.prq.traversal_depth", True),
+                   ("match.unexpected", False),
+                   ("match.umq.length", True))
+
+
+class _FusedSpan:
+    """Reentrant context tracking an untraced fused dispatch span on one
+    fabric: enclosed exchanges accumulate per-engine op streams instead
+    of dispatching, and the outermost exit flushes each engine's stream
+    through :meth:`MatchEngine.run_ops` (one python dispatch per engine
+    per span). One instance per fabric — nesting is a depth counter."""
+
+    __slots__ = ("fab",)
+
+    def __init__(self, fab: "Fabric"):
+        self.fab = fab
+
+    def __enter__(self) -> "Fabric":
+        fab = self.fab
+        fab._depth += 1
+        if fab._fuse is None:
+            fab._fuse = {}
+        return fab
+
+    def __exit__(self, *exc) -> None:
+        fab = self.fab
+        fab._depth -= 1
+        if fab._depth == 0:
+            fuse, fab._fuse = fab._fuse, None
+            for dst, ops in fuse.items():
+                fab.engine(dst).run_ops(ops)
+
 
 def canonical_mode(mode: str) -> str:
     """Resolve aliases and validate an engine mode name."""
@@ -60,27 +121,39 @@ def canonical_mode(mode: str) -> str:
     return mode
 
 
-@dataclasses.dataclass(slots=True)
 class Message:
     """An arrived message's envelope (plus payload size)."""
 
-    src: int
-    tag: int
-    comm: int = 0
-    nbytes: int = 0
-    seq: int = 0                  # arrival order
-    matched: bool = False         # tombstone flag (leaky UMQ defect)
+    __slots__ = ("src", "tag", "comm", "nbytes", "seq", "matched")
+
+    def __init__(self, src: int, tag: int, comm: int = 0, nbytes: int = 0,
+                 seq: int = 0, matched: bool = False):
+        self.src = src
+        self.tag = tag
+        self.comm = comm
+        self.nbytes = nbytes
+        self.seq = seq                # arrival order
+        self.matched = matched        # tombstone flag (leaky UMQ defect)
+
+    def __repr__(self) -> str:
+        return (f"Message(src={self.src}, tag={self.tag}, "
+                f"comm={self.comm}, nbytes={self.nbytes}, "
+                f"seq={self.seq}, "
+                f"matched={getattr(self, 'matched', False)})")
 
 
-@dataclasses.dataclass(slots=True)
 class PostedRecv:
     """A posted receive; completed once a message is matched to it."""
 
-    src: int
-    tag: int
-    comm: int = 0
-    seq: int = 0                  # post order
-    message: Optional[Message] = None
+    __slots__ = ("src", "tag", "comm", "seq", "message")
+
+    def __init__(self, src: int, tag: int, comm: int = 0, seq: int = 0,
+                 message: Optional[Message] = None):
+        self.src = src
+        self.tag = tag
+        self.comm = comm
+        self.seq = seq                # post order
+        self.message = message
 
     @property
     def completed(self) -> bool:
@@ -95,14 +168,26 @@ class PostedRecv:
                 and self.src in (ANY_SOURCE, msg.src)
                 and self.tag in (ANY_TAG, msg.tag))
 
+    def __repr__(self) -> str:
+        return (f"PostedRecv(src={self.src}, tag={self.tag}, "
+                f"comm={self.comm}, seq={self.seq}, "
+                f"completed={self.message is not None})")
+
 
 class BinnedPRQ:
     """Fixed posted-receive queue: binned by envelope shape so matching an
     arrival examines at most four queue heads (specific, any-source,
-    any-tag, any-any), while seq numbers preserve MPI post order."""
+    any-tag, any-any), while seq numbers preserve MPI post order.
+
+    The specific bins nest as ``(tag, comm) -> {src: deque}``: batch
+    dispatch (:meth:`MatchEngine.arrive_batch`) delivers whole phases at
+    one ``(tag, comm)``, so the outer lookup hoists out of the
+    per-message loop and the inner probe is a plain int-keyed get with
+    no tuple allocation."""
 
     def __init__(self) -> None:
-        self._specific: Dict[Tuple[int, int, int], Deque[PostedRecv]] = {}
+        self._specific: Dict[Tuple[int, int],
+                             Dict[int, Deque[PostedRecv]]] = {}
         self._any_src: Dict[Tuple[int, int], Deque[PostedRecv]] = {}
         self._any_tag: Dict[Tuple[int, int], Deque[PostedRecv]] = {}
         self._any_any: Dict[int, Deque[PostedRecv]] = {}     # keyed by comm
@@ -112,63 +197,200 @@ class BinnedPRQ:
         return self._len
 
     def post(self, recv: PostedRecv) -> None:
-        if recv.src == ANY_SOURCE and recv.tag == ANY_TAG:
-            self._any_any.setdefault(recv.comm, deque()).append(recv)
-        elif recv.src == ANY_SOURCE:
-            self._any_src.setdefault((recv.tag, recv.comm),
-                                     deque()).append(recv)
-        elif recv.tag == ANY_TAG:
-            self._any_tag.setdefault((recv.src, recv.comm),
-                                     deque()).append(recv)
+        src, tag = recv.src, recv.tag
+        if src == ANY_SOURCE:
+            bins = self._any_any if tag == ANY_TAG else self._any_src
+            key = recv.comm if tag == ANY_TAG else (tag, recv.comm)
+            q = bins.get(key)
+            if q is None:
+                q = bins[key] = deque()
+        elif tag == ANY_TAG:
+            bins, key = self._any_tag, (src, recv.comm)
+            q = bins.get(key)
+            if q is None:
+                q = bins[key] = deque()
         else:
-            self._specific.setdefault((recv.src, recv.tag, recv.comm),
-                                      deque()).append(recv)
+            per = self._specific.get((tag, recv.comm))
+            if per is None:
+                per = self._specific[(tag, recv.comm)] = {}
+            q = per.get(src)
+            if q is None:
+                q = per[src] = deque()
+        q.append(recv)
         self._len += 1
 
     def match(self, msg: Message) -> Tuple[Optional[PostedRecv], int]:
-        """(matched recv or None, queue entries traversed)."""
+        """(matched recv or None, queue heads examined). Emptied bins are
+        deleted so the wildcard probes below stay O(1) dict-emptiness
+        checks in wildcard-free traffic."""
+        comm = msg.comm
         depth = 0
         best: Optional[PostedRecv] = None
-        best_q: Optional[Deque[PostedRecv]] = None
-        queues = (
-            self._specific.get((msg.src, msg.tag, msg.comm)),
-            self._any_src.get((msg.tag, msg.comm)),
-            self._any_tag.get((msg.src, msg.comm)),
-            self._any_any.get(msg.comm),
-        )
-        for q in queues:
+        best_bins = best_key = None
+        bins = self._specific
+        if bins:
+            per = bins.get((msg.tag, comm))
+            if per:
+                q = per.get(msg.src)
+                if q:
+                    depth = 1
+                    best, best_bins, best_key = q[0], per, msg.src
+        bins = self._any_src
+        if bins:
+            key = (msg.tag, comm)
+            q = bins.get(key)
+            if q:
+                depth += 1
+                head = q[0]
+                if best is None or head.seq < best.seq:
+                    best, best_bins, best_key = head, bins, key
+        bins = self._any_tag
+        if bins:
+            key = (msg.src, comm)
+            q = bins.get(key)
+            if q:
+                depth += 1
+                head = q[0]
+                if best is None or head.seq < best.seq:
+                    best, best_bins, best_key = head, bins, key
+        bins = self._any_any
+        if bins:
+            q = bins.get(comm)
+            if q:
+                depth += 1
+                head = q[0]
+                if best is None or head.seq < best.seq:
+                    best, best_bins, best_key = head, bins, comm
+        if best is not None:
+            q = best_bins[best_key]
+            q.popleft()
             if not q:
-                continue
-            depth += 1
-            head = q[0]
-            if best is None or head.seq < best.seq:
-                best, best_q = head, q
-        if best is not None and best_q is not None:
-            best_q.popleft()
+                del best_bins[best_key]
             self._len -= 1
-        return best, max(depth, 1)
+        return best, depth if depth > 1 else 1
 
 
-class GCUMQ:
-    """Fixed unexpected-message queue: one arrival-ordered list, matched
-    entries removed immediately (garbage-collected) whatever the receive's
-    envelope shape."""
+class IndexedUMQ:
+    """Fixed unexpected-message queue: envelope-indexed and reclaimed on
+    every match, mirroring :class:`BinnedPRQ`'s binning on the message
+    side.
+
+    The queue keeps the arrival-ordered list of live messages (the
+    structure the depth counters are defined over) plus an exact-envelope
+    index ``(src, tag, comm) -> deque``. A *specific* receive finds its
+    message in O(1) off the index — the arrival list is then only probed
+    with a C-level identity scan (``list.index``; :class:`Message` has
+    default identity equality) to report the true arrival rank and drop
+    the entry, instead of a Python-level ``accepts`` scan per queue
+    entry. A receive whose envelope misses the index costs O(1) — no
+    scan at all, which is the common case on the post-before-arrival
+    path. *Wildcard* receives traverse the arrival list (specialized per
+    wildcard shape) and report true depth, exactly like the single-queue
+    design.
+
+    **Depth contract**: ``match`` reports exactly what a front-to-back
+    scan of one arrival-ordered queue reports — on a hit, the matched
+    message's 1-based rank among live messages in arrival order; on a
+    miss, the live queue length — which keeps the
+    ``match.umq.traversal_depth`` histogram (and therefore deterministic
+    traces and committed baselines) byte-identical to the pre-indexed
+    engine."""
+
+    __slots__ = ("_q", "_env", "_lazy")
 
     def __init__(self) -> None:
-        self._q: List[Message] = []
+        self._q: List[Message] = []     # live messages, arrival order
+        # (tag, comm) -> {src: deque}; built LAZILY: arrivals are plain
+        # appends (the suffix _q[-_lazy:] is not yet indexed), and the
+        # index catches up only when a specific receive probes it. A
+        # workload whose unexpected messages are consumed by wildcards
+        # never pays for the index at all.
+        self._env: Dict[Tuple[int, int], Dict[int, Deque[Message]]] = {}
+        self._lazy = 0                  # unindexed arrival-suffix length
 
     def __len__(self) -> int:
         return len(self._q)
 
     def add(self, msg: Message) -> None:
         self._q.append(msg)
+        self._lazy += 1
+
+    def _flush_index(self) -> None:
+        """Index the unindexed arrival suffix (amortized O(1)/message:
+        each message is indexed at most once)."""
+        q = self._q
+        env = self._env
+        for m in q[len(q) - self._lazy:]:
+            key = (m.tag, m.comm)
+            per = env.get(key)
+            if per is None:
+                per = env[key] = {}
+            dq = per.get(m.src)
+            if dq is None:
+                dq = per[m.src] = deque()
+            dq.append(m)
+        self._lazy = 0
 
     def match(self, recv: PostedRecv) -> Tuple[Optional[Message], int]:
-        for i, msg in enumerate(self._q):
-            if recv.accepts(msg):
-                del self._q[i]
-                return msg, i + 1
-        return None, len(self._q)
+        return self.match_env(recv.src, recv.tag, recv.comm)
+
+    def match_env(self, src: int, tag: int,
+                  comm: int = 0) -> Tuple[Optional[Message], int]:
+        """:meth:`match` by raw envelope — batch dispatch uses this to
+        decide hit/miss before allocating a receive that would complete
+        immediately and never escape."""
+        q = self._q
+        if src != ANY_SOURCE and tag != ANY_TAG:
+            if self._lazy:
+                self._flush_index()
+            per = self._env.get((tag, comm))
+            dq = per.get(src) if per else None
+            if not dq:
+                return None, len(q)
+            msg = dq.popleft()          # earliest same-envelope arrival
+            if not dq:
+                del per[src]
+            i = q.index(msg)            # identity scan: true rank
+            del q[i]
+            return msg, i + 1
+        # wildcard receive: traverse arrival order (earliest accepted
+        # arrival wins), specialized per wildcard shape
+        i = -1
+        if src == ANY_SOURCE:
+            if tag == ANY_TAG:
+                for j, m in enumerate(q):
+                    if m.comm == comm:
+                        i = j
+                        break
+            else:
+                for j, m in enumerate(q):
+                    if m.tag == tag and m.comm == comm:
+                        i = j
+                        break
+        else:
+            for j, m in enumerate(q):
+                if m.src == src and m.comm == comm:
+                    i = j
+                    break
+        if i < 0:
+            return None, len(q)
+        msg = q[i]
+        indexed = i < len(q) - self._lazy
+        del q[i]
+        if not indexed:
+            self._lazy -= 1             # was still in the lazy suffix
+        else:
+            per = self._env[(msg.tag, msg.comm)]
+            dq = per[msg.src]
+            dq.popleft()                # msg is its bucket's earliest
+            if not dq:
+                del per[msg.src]
+        return msg, i + 1
+
+
+# Backward-compatible name: the garbage-collected UMQ of the fixed design
+# is now envelope-indexed; semantics (and reported depths) are identical.
+GCUMQ = IndexedUMQ
 
 
 class MatchEngine:
@@ -177,7 +399,9 @@ class MatchEngine:
     ``post_recv`` is the MPI_Irecv analog (search UMQ, else park on PRQ);
     ``arrive`` is the network-delivery analog (search PRQ, else park on
     UMQ). Every call records the counters the paper's method 2 plots:
-    traversal depth, queue length, match latency, unexpected counts.
+    traversal depth, queue length, match latency, unexpected counts —
+    written as one batched append to the registry's thread-local buffer
+    so the instrumentation stays off the critical path's critical path.
 
     ``trace`` is an optional sink with an ``emit(dict)`` method (duck-typed
     to avoid a dependency on :mod:`repro.trace`): every post/arrive writes
@@ -195,25 +419,76 @@ class MatchEngine:
         self.reg = registry if registry is not None else global_registry()
         self.trace = trace
         self.prq = LinearPRQ() if mode == "linear" else BinnedPRQ()
-        self.umq = LeakyUMQ(self.reg) if mode == "leaky_umq" else GCUMQ()
-        self._seq = itertools.count()
+        self.umq = (LeakyUMQ(self.reg) if mode == "leaky_umq"
+                    else IndexedUMQ())
+        self._seqn = 0                # next per-engine op sequence number
+        # hot-path counter sink: the underlying registry (self.reg may be
+        # a per-rank CounterLane view of it), the lane pid, and a cached
+        # thread-buffer reference revalidated against the registry epoch
+        # (a drain on this thread swaps the buffer out and bumps it)
+        self._reg = getattr(self.reg, "_reg", self.reg)
+        self._pid = self.reg.pid
+        self._buf: Optional[list] = None
+        self._epoch = -1
+        self._tsample = 1             # ops until the next timed sample
 
     # -- MPI_Irecv analog --------------------------------------------------
 
     def post_recv(self, src: int = ANY_SOURCE, tag: int = ANY_TAG,
                   comm: int = 0) -> PostedRecv:
-        recv = PostedRecv(src=src, tag=tag, comm=comm, seq=next(self._seq))
-        t0 = time.perf_counter_ns()
-        self.reg.observe("match.umq.length", len(self.umq))
-        msg, depth = self.umq.match(recv)
-        self.reg.observe("match.umq.traversal_depth", depth)
-        if msg is not None:
-            recv.message = msg
-            self.reg.count("match.umq.hit")
+        sq = self._seqn
+        self._seqn = sq + 1
+        recv = PostedRecv(src, tag, comm, sq)
+        umq = self.umq
+        reg = self._reg
+        if reg.enabled:
+            if reg.epoch != self._epoch:
+                self._buf = reg._buffer_for_current_thread()
+                self._epoch = reg.epoch
+            buf = self._buf
+            pid = self._pid
+            ulen = len(umq._q)
+            t = self._tsample - 1
+            if t:                     # untimed op (see TIMING_EVERY)
+                self._tsample = t
+                msg, depth = umq.match(recv)
+                if msg is not None:
+                    recv.message = msg
+                    buf += (pid, "match.umq.length", ulen, True,
+                            pid, "match.umq.traversal_depth", depth, True,
+                            pid, "match.umq.hit", 1, False)
+                else:
+                    prq = self.prq
+                    plen = prq._len
+                    prq.post(recv)
+                    buf += (pid, "match.umq.length", ulen, True,
+                            pid, "match.umq.traversal_depth", depth, True,
+                            pid, "match.prq.length", plen, True)
+            else:
+                self._tsample = TIMING_EVERY
+                t0 = _pcn()
+                msg, depth = umq.match(recv)
+                sns = (_pcn() - t0) * TIMING_EVERY
+                if msg is not None:
+                    recv.message = msg
+                    buf += (pid, "match.umq.length", ulen, True,
+                            pid, "match.umq.traversal_depth", depth, True,
+                            pid, "match.umq.hit", 1, False,
+                            pid, "match.umq.search_ns", sns, True)
+                else:
+                    prq = self.prq
+                    plen = prq._len
+                    prq.post(recv)
+                    buf += (pid, "match.umq.length", ulen, True,
+                            pid, "match.umq.traversal_depth", depth, True,
+                            pid, "match.prq.length", plen, True,
+                            pid, "match.umq.search_ns", sns, True)
         else:
-            self.reg.observe("match.prq.length", len(self.prq))
-            self.prq.post(recv)
-        self.reg.observe("match.umq.search_ns", time.perf_counter_ns() - t0)
+            msg, depth = umq.match(recv)
+            if msg is not None:
+                recv.message = msg
+            else:
+                self.prq.post(recv)
         if self.trace is not None:
             self.trace.emit({
                 "t": "post", "rank": self.rank, "src": src, "tag": tag,
@@ -221,29 +496,742 @@ class MatchEngine:
                 "hit": msg.seq if msg is not None else None})
         return recv
 
+    def post_recv_batch(self, srcs, tag: int = ANY_TAG,
+                        comm: int = 0) -> None:
+        """Post one receive per source in ``srcs`` (a shared ``tag`` —
+        the :meth:`Fabric.exchange` shape), equivalent to calling
+        :meth:`post_recv` per element: same matching, same counter
+        multiset, same sampling cadence. The batch loop pays the python
+        dispatch (call, buffer fetch, queue attribute loads) once and
+        inlines the binned-mode fast paths; it falls back to the per-op
+        path whenever tracing is on (trace records must interleave
+        globally across engines in dispatch order) or a defect mode's
+        queues are in play (their pathological cost is the product)."""
+        reg = self._reg
+        if (self.trace is not None or self.mode != "binned"
+                or not reg.enabled):
+            for src in srcs:
+                self.post_recv(src, tag, comm)
+            return
+        if reg.epoch != self._epoch:
+            self._buf = reg._buffer_for_current_thread()
+            self._epoch = reg.epoch
+        buf = self._buf
+        pid = self._pid
+        sq = self._seqn
+        tsample = self._tsample
+        umq = self.umq
+        uq = umq._q
+        tc = (tag, comm)
+        spectag = tag != ANY_TAG
+        if spectag and umq._lazy:
+            umq._flush_index()          # no arrivals run in this batch
+        uenv_tc = umq._env.get(tc) if spectag else None
+        prq = self.prq
+        spec_tc = asrc_q = None         # bound lazily on first park
+        new = PostedRecv.__new__
+        hitv = missv = None
+        # queue lengths mirrored in locals for the batch (written back
+        # once): no arrivals run here, so only our own hits/parks move
+        # them
+        ulen = len(uq)
+        plen = prq._len
+        for src in srcs:
+            sq += 1                   # this op's seq is sq - 1
+            tsample -= 1
+            sns = -1                  # untimed op
+            if tsample:
+                if spectag and src != ANY_SOURCE:
+                    # specific receive: probe the envelope index — a
+                    # miss costs O(1); a hit is resolved inline, and the
+                    # receive (which completes immediately and never
+                    # escapes this batch) is not allocated at all
+                    dq = uenv_tc.get(src) if uenv_tc else None
+                    if dq:
+                        msg = dq.popleft()
+                        if not dq:
+                            del uenv_tc[src]
+                        i = uq.index(msg)
+                        del uq[i]
+                        depth = i + 1
+                    else:
+                        msg, depth = None, ulen
+                else:
+                    msg, depth = umq.match_env(src, tag, comm)
+            else:
+                tsample = TIMING_EVERY
+                t0 = _pcn()
+                msg, depth = umq.match_env(src, tag, comm)
+                sns = (_pcn() - t0) * TIMING_EVERY
+            if msg is not None:
+                if sns >= 0:
+                    buf += (pid, "match.umq.length", ulen, True,
+                            pid, "match.umq.traversal_depth", depth, True,
+                            pid, "match.umq.hit", 1, False,
+                            pid, "match.umq.search_ns", sns, True)
+                else:
+                    if hitv is None:
+                        hitv = []
+                    hitv += (ulen, depth, 1)
+                ulen -= 1             # recorded length was pre-match
+            else:
+                recv = new(PostedRecv)
+                recv.src = src
+                recv.tag = tag
+                recv.comm = comm
+                recv.seq = sq - 1
+                recv.message = None
+                # BinnedPRQ.post inlined; specific/any-src bin dicts for
+                # the batch's fixed (tag, comm) bound on first use
+                if src == ANY_SOURCE or not spectag:
+                    if spectag:
+                        if asrc_q is None:
+                            asrc = prq._any_src
+                            asrc_q = asrc.get(tc)
+                            if asrc_q is None:
+                                asrc_q = asrc[tc] = deque()
+                        asrc_q.append(recv)
+                    else:
+                        prq.post(recv)      # ANY_TAG shapes: generic
+                        prq._len -= 1       # the mirror owns the count
+                else:
+                    if spec_tc is None:
+                        spec = prq._specific
+                        spec_tc = spec.get(tc)
+                        if spec_tc is None:
+                            spec_tc = spec[tc] = {}
+                    bq = spec_tc.get(src)
+                    if bq is None:
+                        bq = spec_tc[src] = deque()
+                    bq.append(recv)
+                if sns >= 0:
+                    buf += (pid, "match.umq.length", ulen, True,
+                            pid, "match.umq.traversal_depth", depth, True,
+                            pid, "match.prq.length", plen, True,
+                            pid, "match.umq.search_ns", sns, True)
+                else:
+                    if missv is None:
+                        missv = []
+                    missv += (ulen, depth, plen)
+                plen += 1
+        prq._len = plen
+        if hitv:
+            buf += (pid, _POST_HIT_COLS, hitv, "cols")
+        if missv:
+            buf += (pid, _POST_MISS_COLS, missv, "cols")
+        self._seqn = sq
+        self._tsample = tsample
+
     # -- network delivery analog ------------------------------------------
 
     def arrive(self, src: int, tag: int, comm: int = 0,
                nbytes: int = 0) -> Optional[PostedRecv]:
-        msg = Message(src=src, tag=tag, comm=comm, nbytes=nbytes,
-                      seq=next(self._seq))
-        t0 = time.perf_counter_ns()
-        recv, depth = self.prq.match(msg)
-        self.reg.observe("match.prq.traversal_depth", depth)
-        self.reg.observe("match.prq.search_ns", time.perf_counter_ns() - t0)
-        if recv is not None:
-            recv.message = msg
-            self.reg.count("match.expected")
+        sq = self._seqn
+        self._seqn = sq + 1
+        msg = Message(src, tag, comm, nbytes, sq)
+        reg = self._reg
+        if reg.enabled:
+            if reg.epoch != self._epoch:
+                self._buf = reg._buffer_for_current_thread()
+                self._epoch = reg.epoch
+            buf = self._buf
+            pid = self._pid
+            t = self._tsample - 1
+            if t:                     # untimed op (see TIMING_EVERY)
+                self._tsample = t
+                recv, depth = self.prq.match(msg)
+                if recv is not None:
+                    recv.message = msg
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.expected", 1, False)
+                else:
+                    umq = self.umq
+                    umq.add(msg)
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.unexpected", 1, False,
+                            pid, "match.umq.length", len(umq._q), True)
+            else:
+                self._tsample = TIMING_EVERY
+                t0 = _pcn()
+                recv, depth = self.prq.match(msg)
+                sns = (_pcn() - t0) * TIMING_EVERY
+                if recv is not None:
+                    recv.message = msg
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.prq.search_ns", sns, True,
+                            pid, "match.expected", 1, False)
+                else:
+                    umq = self.umq
+                    umq.add(msg)
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.prq.search_ns", sns, True,
+                            pid, "match.unexpected", 1, False,
+                            pid, "match.umq.length", len(umq._q), True)
         else:
-            self.umq.add(msg)
-            self.reg.count("match.unexpected")
-            self.reg.observe("match.umq.length", len(self.umq))
+            recv, depth = self.prq.match(msg)
+            if recv is not None:
+                recv.message = msg
+            else:
+                self.umq.add(msg)
         if self.trace is not None:
             self.trace.emit({
                 "t": "arr", "rank": self.rank, "src": src, "tag": tag,
                 "comm": comm, "nb": nbytes, "seq": msg.seq,
                 "match": recv.seq if recv is not None else None})
         return recv
+
+    def arrive_batch(self, srcs, tag: int = 0, comm: int = 0,
+                     nbytes: int = 0) -> None:
+        """Deliver one message per source in ``srcs`` (shared ``tag`` /
+        ``nbytes`` — the :meth:`Fabric.exchange` shape), equivalent to
+        calling :meth:`arrive` per element: same matching, same counter
+        multiset, same sampling cadence. The binned PRQ's four-bin probe
+        is inlined with the bin dicts bound once per batch; the per-op
+        fallback applies under tracing or a defect mode (see
+        :meth:`post_recv_batch`)."""
+        reg = self._reg
+        if (self.trace is not None or self.mode != "binned"
+                or not reg.enabled):
+            for src in srcs:
+                self.arrive(src, tag, comm, nbytes)
+            return
+        if reg.epoch != self._epoch:
+            self._buf = reg._buffer_for_current_thread()
+            self._epoch = reg.epoch
+        buf = self._buf
+        pid = self._pid
+        sq = self._seqn
+        tsample = self._tsample
+        umq = self.umq
+        uq = umq._q
+        tc = (tag, comm)
+        prq = self.prq
+        # a whole arrival phase shares (tag, comm): the specific inner
+        # bin dict hoists out of the loop (no posts run here, so a None
+        # stays None and empties empty in place)
+        spec_tc = prq._specific.get(tc)
+        asrc = prq._any_src
+        atag = prq._any_tag
+        aany = prq._any_any
+        new = Message.__new__
+        expv = unexv = None
+        ulen = len(uq)                  # mirrored for the batch
+        nmatched = 0
+        for src in srcs:
+            msg = new(Message)
+            msg.src = src
+            msg.tag = tag
+            msg.comm = comm
+            msg.nbytes = nbytes
+            msg.seq = sq
+            sq += 1
+            tsample -= 1
+            if not tsample:
+                tsample = TIMING_EVERY
+                t0 = _pcn()
+                recv, depth = prq.match(msg)
+                sns = (_pcn() - t0) * TIMING_EVERY
+                if recv is not None:
+                    recv.message = msg
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.prq.search_ns", sns, True,
+                            pid, "match.expected", 1, False)
+                else:
+                    umq.add(msg)
+                    ulen += 1
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.prq.search_ns", sns, True,
+                            pid, "match.unexpected", 1, False,
+                            pid, "match.umq.length", ulen, True)
+                continue
+            # untimed op: BinnedPRQ.match inlined (bins are locals)
+            depth = 0
+            best = best_bins = best_key = None
+            if spec_tc:
+                q = spec_tc.get(src)
+                if q:
+                    depth = 1
+                    best, best_bins, best_key = q[0], spec_tc, src
+            if asrc:
+                q = asrc.get(tc)
+                if q:
+                    depth += 1
+                    head = q[0]
+                    if best is None or head.seq < best.seq:
+                        best, best_bins, best_key = head, asrc, tc
+            if atag:
+                key = (src, comm)
+                q = atag.get(key)
+                if q:
+                    depth += 1
+                    head = q[0]
+                    if best is None or head.seq < best.seq:
+                        best, best_bins, best_key = head, atag, key
+            if aany:
+                q = aany.get(comm)
+                if q:
+                    depth += 1
+                    head = q[0]
+                    if best is None or head.seq < best.seq:
+                        best, best_bins, best_key = head, aany, comm
+            if depth < 1:
+                depth = 1
+            if best is not None:
+                q = best_bins[best_key]
+                q.popleft()
+                if not q:
+                    del best_bins[best_key]
+                nmatched += 1
+                best.message = msg
+                if expv is None:
+                    expv = []
+                expv += (depth, 1)
+            else:
+                # umq.add inlined: plain lazy append (the envelope
+                # index catches up on the next specific receive)
+                uq.append(msg)
+                umq._lazy += 1
+                ulen += 1
+                if unexv is None:
+                    unexv = []
+                unexv += (depth, 1, ulen)
+        if nmatched:
+            prq._len -= nmatched
+        if expv:
+            buf += (pid, _ARR_EXP_COLS, expv, "cols")
+        if unexv:
+            buf += (pid, _ARR_UNEXP_COLS, unexv, "cols")
+        self._seqn = sq
+        self._tsample = tsample
+
+    def run_ops(self, ops) -> None:
+        """Run a mixed post/arrive stream on this engine: ``ops`` is a
+        flat sequence of ``is_post, src, tag, nbytes, comm`` quints (the
+        encoding :meth:`Fabric.exchange` accumulates for fused phases).
+        Equivalent to the per-op calls in order — same matching, same
+        counter multiset, same sampling cadence — with the dispatch cost
+        paid once per engine per fused span."""
+        reg = self._reg
+        if (self.trace is not None or self.mode != "binned"
+                or not reg.enabled):
+            it = iter(ops)
+            for is_post, src, tag, nb, comm in zip(it, it, it, it, it):
+                if is_post:
+                    self.post_recv(src, tag, comm)
+                else:
+                    self.arrive(src, tag, comm, nb)
+            return
+        if reg.epoch != self._epoch:
+            self._buf = reg._buffer_for_current_thread()
+            self._epoch = reg.epoch
+        buf = self._buf
+        pid = self._pid
+        sq = self._seqn
+        tsample = self._tsample
+        umq = self.umq
+        uq = umq._q
+        uenv = umq._env
+        prq = self.prq
+        spec = prq._specific
+        asrc = prq._any_src
+        atag = prq._any_tag
+        aany = prq._any_any
+        new_recv = PostedRecv.__new__
+        new_msg = Message.__new__
+        hitv = missv = expv = unexv = None
+        # consecutive ops usually share (tag, comm) — cache the last
+        # resolved inner bin dicts (stable objects: emptied in place)
+        utc = stc = None
+        uper = sper = None
+        ulen = len(uq)                  # queue lengths mirrored in
+        plen = prq._len                 # locals, written back once
+        it = iter(ops)
+        for is_post, src, tag, nb, comm in zip(it, it, it, it, it):
+            sq += 1
+            tsample -= 1
+            if is_post:
+                sns = -1
+                if tsample:
+                    if src != ANY_SOURCE and tag != ANY_TAG:
+                        if umq._lazy:
+                            umq._flush_index()
+                            utc = None  # flush may create env bins
+                        if (tag, comm) != utc:
+                            utc = (tag, comm)
+                            uper = uenv.get(utc)
+                        per = uper
+                        dq = per.get(src) if per else None
+                        if dq:
+                            msg = dq.popleft()
+                            if not dq:
+                                del per[src]
+                            i = uq.index(msg)
+                            del uq[i]
+                            depth = i + 1
+                        else:
+                            msg, depth = None, ulen
+                    else:
+                        msg, depth = umq.match_env(src, tag, comm)
+                else:
+                    tsample = TIMING_EVERY
+                    t0 = _pcn()
+                    msg, depth = umq.match_env(src, tag, comm)
+                    sns = (_pcn() - t0) * TIMING_EVERY
+                    utc = None      # match_env may have flushed the
+                    #                 lazy index, creating env bins
+                if msg is not None:
+                    if sns >= 0:
+                        buf += (pid, "match.umq.length", ulen, True,
+                                pid, "match.umq.traversal_depth", depth,
+                                True,
+                                pid, "match.umq.hit", 1, False,
+                                pid, "match.umq.search_ns", sns, True)
+                    else:
+                        if hitv is None:
+                            hitv = []
+                        hitv += (ulen, depth, 1)
+                    ulen -= 1         # recorded length was pre-match
+                else:
+                    recv = new_recv(PostedRecv)
+                    recv.src = src
+                    recv.tag = tag
+                    recv.comm = comm
+                    recv.seq = sq - 1
+                    recv.message = None
+                    if src != ANY_SOURCE and tag != ANY_TAG:
+                        if (tag, comm) != stc:
+                            stc = (tag, comm)
+                            sper = spec.get(stc)
+                        per = sper
+                        if per is None:
+                            per = sper = spec[stc] = {}
+                        bq = per.get(src)
+                        if bq is None:
+                            bq = per[src] = deque()
+                        bq.append(recv)
+                    else:
+                        prq.post(recv)
+                        prq._len -= 1   # the mirror owns the count
+                        stc = None      # generic post may touch any bin
+                    if sns >= 0:
+                        buf += (pid, "match.umq.length", ulen, True,
+                                pid, "match.umq.traversal_depth", depth,
+                                True,
+                                pid, "match.prq.length", plen, True,
+                                pid, "match.umq.search_ns", sns, True)
+                    else:
+                        if missv is None:
+                            missv = []
+                        missv += (ulen, depth, plen)
+                    plen += 1
+                continue
+            # arrival
+            msg = new_msg(Message)
+            msg.src = src
+            msg.tag = tag
+            msg.comm = comm
+            msg.nbytes = nb
+            msg.seq = sq - 1
+            if not tsample:
+                tsample = TIMING_EVERY
+                t0 = _pcn()
+                recv, depth = prq.match(msg)
+                sns = (_pcn() - t0) * TIMING_EVERY
+                if recv is not None:
+                    prq._len += 1       # the mirror owns the count
+                    plen -= 1
+                    recv.message = msg
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.prq.search_ns", sns, True,
+                            pid, "match.expected", 1, False)
+                else:
+                    umq.add(msg)        # lazy: creates no env bins
+                    ulen += 1
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.prq.search_ns", sns, True,
+                            pid, "match.unexpected", 1, False,
+                            pid, "match.umq.length", ulen, True)
+                continue
+            depth = 0
+            best = best_bins = best_key = None
+            if spec:
+                if (tag, comm) != stc:
+                    stc = (tag, comm)
+                    sper = spec.get(stc)
+                per = sper
+                if per:
+                    q = per.get(src)
+                    if q:
+                        depth = 1
+                        best, best_bins, best_key = q[0], per, src
+            if asrc:
+                key = (tag, comm)
+                q = asrc.get(key)
+                if q:
+                    depth += 1
+                    head = q[0]
+                    if best is None or head.seq < best.seq:
+                        best, best_bins, best_key = head, asrc, key
+            if atag:
+                key = (src, comm)
+                q = atag.get(key)
+                if q:
+                    depth += 1
+                    head = q[0]
+                    if best is None or head.seq < best.seq:
+                        best, best_bins, best_key = head, atag, key
+            if aany:
+                q = aany.get(comm)
+                if q:
+                    depth += 1
+                    head = q[0]
+                    if best is None or head.seq < best.seq:
+                        best, best_bins, best_key = head, aany, comm
+            if depth < 1:
+                depth = 1
+            if best is not None:
+                q = best_bins[best_key]
+                q.popleft()
+                if not q:
+                    del best_bins[best_key]
+                plen -= 1
+                best.message = msg
+                if expv is None:
+                    expv = []
+                expv += (depth, 1)
+            else:
+                uq.append(msg)
+                umq._lazy += 1
+                ulen += 1
+                if unexv is None:
+                    unexv = []
+                unexv += (depth, 1, ulen)
+        prq._len = plen
+        if hitv:
+            buf += (pid, _POST_HIT_COLS, hitv, "cols")
+        if missv:
+            buf += (pid, _POST_MISS_COLS, missv, "cols")
+        if expv:
+            buf += (pid, _ARR_EXP_COLS, expv, "cols")
+        if unexv:
+            buf += (pid, _ARR_UNEXP_COLS, unexv, "cols")
+        self._seqn = sq
+        self._tsample = tsample
+
+    def post_recv_tags(self, src: int, tags, comm: int = 0) -> None:
+        """Post one receive per tag in ``tags`` from a fixed ``src`` (the
+        tag-scan shape: pipeline stages, backlog drains), equivalent to
+        :meth:`post_recv` per tag — same fallbacks as
+        :meth:`post_recv_batch`."""
+        reg = self._reg
+        if (self.trace is not None or self.mode != "binned"
+                or not reg.enabled or src == ANY_SOURCE):
+            for tag in tags:
+                self.post_recv(src, tag, comm)
+            return
+        if reg.epoch != self._epoch:
+            self._buf = reg._buffer_for_current_thread()
+            self._epoch = reg.epoch
+        buf = self._buf
+        pid = self._pid
+        sq = self._seqn
+        tsample = self._tsample
+        umq = self.umq
+        uq = umq._q
+        if umq._lazy:
+            umq._flush_index()          # no arrivals run in this batch
+        uenv = umq._env
+        prq = self.prq
+        spec = prq._specific
+        new = PostedRecv.__new__
+        hitv = missv = None
+        ulen = len(uq)                  # queue lengths mirrored in
+        plen = prq._len                 # locals, written back once
+        for tag in tags:
+            sq += 1
+            tsample -= 1
+            sns = -1
+            if tsample:
+                if tag != ANY_TAG:
+                    per = uenv.get((tag, comm))
+                    dq = per.get(src) if per else None
+                    if dq:
+                        msg = dq.popleft()
+                        if not dq:
+                            del per[src]
+                        i = uq.index(msg)
+                        del uq[i]
+                        depth = i + 1
+                    else:
+                        msg, depth = None, ulen
+                else:
+                    msg, depth = umq.match_env(src, tag, comm)
+            else:
+                tsample = TIMING_EVERY
+                t0 = _pcn()
+                msg, depth = umq.match_env(src, tag, comm)
+                sns = (_pcn() - t0) * TIMING_EVERY
+            if msg is not None:
+                if sns >= 0:
+                    buf += (pid, "match.umq.length", ulen, True,
+                            pid, "match.umq.traversal_depth", depth, True,
+                            pid, "match.umq.hit", 1, False,
+                            pid, "match.umq.search_ns", sns, True)
+                else:
+                    if hitv is None:
+                        hitv = []
+                    hitv += (ulen, depth, 1)
+                ulen -= 1             # recorded length was pre-match
+            else:
+                recv = new(PostedRecv)
+                recv.src = src
+                recv.tag = tag
+                recv.comm = comm
+                recv.seq = sq - 1
+                recv.message = None
+                if tag != ANY_TAG:
+                    per = spec.get((tag, comm))
+                    if per is None:
+                        per = spec[(tag, comm)] = {}
+                    bq = per.get(src)
+                    if bq is None:
+                        bq = per[src] = deque()
+                    bq.append(recv)
+                else:
+                    prq.post(recv)
+                    prq._len -= 1       # the mirror owns the count
+                if sns >= 0:
+                    buf += (pid, "match.umq.length", ulen, True,
+                            pid, "match.umq.traversal_depth", depth, True,
+                            pid, "match.prq.length", plen, True,
+                            pid, "match.umq.search_ns", sns, True)
+                else:
+                    if missv is None:
+                        missv = []
+                    missv += (ulen, depth, plen)
+                plen += 1
+        prq._len = plen
+        if hitv:
+            buf += (pid, _POST_HIT_COLS, hitv, "cols")
+        if missv:
+            buf += (pid, _POST_MISS_COLS, missv, "cols")
+        self._seqn = sq
+        self._tsample = tsample
+
+    def arrive_tags(self, src: int, tags, comm: int = 0,
+                    nbytes: int = 0) -> None:
+        """Deliver one message per tag in ``tags`` from a fixed ``src``,
+        equivalent to :meth:`arrive` per tag — same fallbacks as
+        :meth:`arrive_batch`."""
+        reg = self._reg
+        if (self.trace is not None or self.mode != "binned"
+                or not reg.enabled):
+            for tag in tags:
+                self.arrive(src, tag, comm, nbytes)
+            return
+        if reg.epoch != self._epoch:
+            self._buf = reg._buffer_for_current_thread()
+            self._epoch = reg.epoch
+        buf = self._buf
+        pid = self._pid
+        sq = self._seqn
+        tsample = self._tsample
+        umq = self.umq
+        uq = umq._q
+        uenv = umq._env
+        prq = self.prq
+        spec = prq._specific
+        asrc = prq._any_src
+        atag_q = prq._any_tag.get((src, comm))   # fixed src: hoistable
+        aany = prq._any_any
+        new = Message.__new__
+        expv = unexv = None
+        ulen = len(uq)                  # mirrored for the batch
+        nmatched = 0
+        for tag in tags:
+            msg = new(Message)
+            msg.src = src
+            msg.tag = tag
+            msg.comm = comm
+            msg.nbytes = nbytes
+            msg.seq = sq
+            sq += 1
+            tsample -= 1
+            if not tsample:
+                tsample = TIMING_EVERY
+                t0 = _pcn()
+                recv, depth = prq.match(msg)
+                sns = (_pcn() - t0) * TIMING_EVERY
+                if recv is not None:
+                    recv.message = msg
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.prq.search_ns", sns, True,
+                            pid, "match.expected", 1, False)
+                else:
+                    umq.add(msg)
+                    ulen += 1
+                    buf += (pid, "match.prq.traversal_depth", depth, True,
+                            pid, "match.prq.search_ns", sns, True,
+                            pid, "match.unexpected", 1, False,
+                            pid, "match.umq.length", ulen, True)
+                continue
+            depth = 0
+            best = best_bins = best_key = None
+            if spec:
+                per = spec.get((tag, comm))
+                if per:
+                    q = per.get(src)
+                    if q:
+                        depth = 1
+                        best, best_bins, best_key = q[0], per, src
+            if asrc:
+                key = (tag, comm)
+                q = asrc.get(key)
+                if q:
+                    depth += 1
+                    head = q[0]
+                    if best is None or head.seq < best.seq:
+                        best, best_bins, best_key = head, asrc, key
+            if atag_q:
+                depth += 1
+                head = atag_q[0]
+                if best is None or head.seq < best.seq:
+                    best, best_bins, best_key = (
+                        head, prq._any_tag, (src, comm))
+            if aany:
+                q = aany.get(comm)
+                if q:
+                    depth += 1
+                    head = q[0]
+                    if best is None or head.seq < best.seq:
+                        best, best_bins, best_key = head, aany, comm
+            if depth < 1:
+                depth = 1
+            if best is not None:
+                q = best_bins[best_key]
+                q.popleft()
+                if not q:
+                    del best_bins[best_key]
+                nmatched += 1
+                best.message = msg
+                if expv is None:
+                    expv = []
+                expv += (depth, 1)
+            else:
+                uq.append(msg)
+                umq._lazy += 1
+                ulen += 1
+                if unexv is None:
+                    unexv = []
+                unexv += (depth, 1, ulen)
+        if nmatched:
+            prq._len -= nmatched
+        if expv:
+            buf += (pid, _ARR_EXP_COLS, expv, "cols")
+        if unexv:
+            buf += (pid, _ARR_UNEXP_COLS, unexv, "cols")
+        self._seqn = sq
+        self._tsample = tsample
 
     # -- introspection -----------------------------------------------------
 
@@ -280,9 +1268,11 @@ class Fabric:
         self.trace = trace
         self.per_rank_lanes = per_rank_lanes
         self._engines: Dict[int, MatchEngine] = {}
-        self._tick = itertools.count(1)
+        self._tick = 0                  # messages dispatched so far
         self._label: Optional[str] = None
-        self._depth = 0                 # collective nesting (phase markers)
+        self._depth = 0                 # collective/fused-span nesting
+        self._fuse: Optional[Dict[int, List]] = None
+        self._fusecm = _FusedSpan(self)
 
     def engine(self, rank: int) -> MatchEngine:
         eng = self._engines.get(rank)
@@ -315,12 +1305,32 @@ class Fabric:
             rec.update(attrs)
             self.trace.emit(rec)
 
-    @contextlib.contextmanager
+    def fused(self) -> "_FusedSpan":
+        """Fused dispatch span: every collective or exchange inside the
+        ``with`` block is accumulated per destination engine and run as
+        one batched stream per engine at span exit (untraced only — a
+        traced fabric keeps per-op dispatch so trace records interleave
+        globally). Ops are deferred until exit, so do not read engine
+        state (``engine()`` queues, ``outstanding()``, registry drains)
+        inside the block. Scenario drivers wrap tight multi-collective
+        loops (e.g. the six face shifts of one halo step) in this."""
+        if self.trace is None:
+            return self._fusecm
+        return _NULL_CONTEXT
+
     def _collective(self, op: str, **attrs):
         """Phase-mark one collective dispatch; nested decompositions
         (all_reduce -> reduce_scatter + all_gather) stay in the outer
-        phase."""
-        if self.trace is not None and self._depth == 0:
+        phase. Untraced there is nothing to mark — the fused span
+        context batches the collective's whole op stream per engine
+        instead."""
+        if self.trace is None:
+            return self._fusecm
+        return self._collective_traced(op, attrs)
+
+    @contextlib.contextmanager
+    def _collective_traced(self, op: str, attrs):
+        if self._depth == 0:
             rec = {"t": "phase", "op": op, "label": self._label or op}
             rec.update(attrs)
             self.trace.emit(rec)
@@ -339,32 +1349,133 @@ class Fabric:
         deterministic 'unexpected' fraction, which post after delivery.
         ``deliver`` overrides the arrival order (default: post order) —
         the scenario suite uses it to drive adversarial-but-legal
-        delivery orders (e.g. a transposed all-to-all)."""
+        delivery orders (e.g. a transposed all-to-all).
+
+        Untraced, the phase runs *batched*: messages are grouped by
+        destination rank and dispatched through
+        :meth:`MatchEngine.post_recv_batch` / :meth:`~MatchEngine
+        .arrive_batch` — matching state is per-engine, every engine
+        still sees its own ops in dispatch order, and the early-posts /
+        arrivals / late-posts stage barriers are preserved, so outcomes
+        and counter statistics are identical to the per-message path
+        while the python dispatch cost is paid once per (stage, rank).
+        With a trace attached the per-message path runs instead: trace
+        records must interleave globally in dispatch order."""
+        if not isinstance(pairs, (list, tuple)):
+            pairs = list(pairs)         # iterated once per stage
+        k = self._tick
+        ue = self.unexpected_every
+        we = self.wildcard_every
+        if (self._fuse is None and self.trace is None
+                and len(pairs) < 64):
+            # small direct phase: per-destination groups would be too
+            # tiny to amortize a batch call each — run the whole phase
+            # as one fused span (one run_ops per destination engine)
+            with self._fusecm:
+                self.exchange(pairs, tag=tag, nbytes=nbytes, comm=comm,
+                              deliver=deliver)
+            return
+        fuse = self._fuse
+        if fuse is not None:
+            # inside a fused span: accumulate flat (is_post, src, tag,
+            # nbytes, comm) quints per destination; the span's exit runs
+            # each engine's stream in one batch. Stage order per engine
+            # (early posts, arrivals, late posts) is preserved.
+            late_f: List[Tuple[int, int]] = []
+            for src, dst in pairs:
+                k += 1
+                rsrc = ANY_SOURCE if we and k % we == 0 else src
+                if ue and k % ue == 0:
+                    late_f.append((rsrc, dst))
+                else:
+                    grp = fuse.get(dst)
+                    if grp is None:
+                        grp = fuse[dst] = []
+                    grp += (True, rsrc, tag, 0, comm)
+            self._tick = k
+            for src, dst in (pairs if deliver is None else deliver):
+                grp = fuse.get(dst)
+                if grp is None:
+                    grp = fuse[dst] = []
+                grp += (False, src, tag, nbytes, comm)
+            for rsrc, dst in late_f:
+                grp = fuse.get(dst)
+                if grp is None:
+                    grp = fuse[dst] = []
+                grp += (True, rsrc, tag, 0, comm)
+            return
+        if self.trace is None:
+            post_g: Dict[int, List[int]] = {}
+            late_g: Dict[int, List[int]] = {}
+            for src, dst in pairs:
+                k += 1
+                rsrc = ANY_SOURCE if we and k % we == 0 else src
+                g = late_g if ue and k % ue == 0 else post_g
+                grp = g.get(dst)
+                if grp is None:
+                    grp = g[dst] = []
+                grp.append(rsrc)
+            self._tick = k
+            for dst, srcs in post_g.items():
+                eng = self.engine(dst)
+                if len(srcs) > 1:
+                    eng.post_recv_batch(srcs, tag, comm)
+                else:
+                    eng.post_recv(srcs[0], tag, comm)
+            arr_g: Dict[int, List[int]] = {}
+            for src, dst in (pairs if deliver is None else deliver):
+                grp = arr_g.get(dst)
+                if grp is None:
+                    grp = arr_g[dst] = []
+                grp.append(src)
+            for dst, srcs in arr_g.items():
+                eng = self.engine(dst)
+                if len(srcs) > 1:
+                    eng.arrive_batch(srcs, tag, comm, nbytes)
+                else:
+                    eng.arrive(srcs[0], tag, comm, nbytes)
+            for dst, srcs in late_g.items():
+                eng = self.engine(dst)
+                if len(srcs) > 1:
+                    eng.post_recv_batch(srcs, tag, comm)
+                else:
+                    eng.post_recv(srcs[0], tag, comm)
+            return
         late: List[Tuple[int, int, int]] = []
+        posts: Dict[int, object] = {}
         for src, dst in pairs:
-            k = next(self._tick)
-            rsrc = (ANY_SOURCE
-                    if self.wildcard_every and k % self.wildcard_every == 0
-                    else src)
-            if self.unexpected_every and k % self.unexpected_every == 0:
+            k += 1
+            rsrc = ANY_SOURCE if we and k % we == 0 else src
+            if ue and k % ue == 0:
                 late.append((rsrc, dst, tag))
             else:
-                self.engine(dst).post_recv(rsrc, tag, comm)
+                post = posts.get(dst)
+                if post is None:
+                    post = posts[dst] = self.engine(dst).post_recv
+                post(rsrc, tag, comm)
+        self._tick = k
+        arrives: Dict[int, object] = {}
         for src, dst in (pairs if deliver is None else deliver):
-            self.engine(dst).arrive(src, tag, comm, nbytes)
+            arrive = arrives.get(dst)
+            if arrive is None:
+                arrive = arrives[dst] = self.engine(dst).arrive
+            arrive(src, tag, comm, nbytes)
         for rsrc, dst, rtag in late:
-            self.engine(dst).post_recv(rsrc, rtag, comm)
+            post = posts.get(dst)
+            if post is None:
+                post = posts[dst] = self.engine(dst).post_recv
+            post(rsrc, rtag, comm)
 
     # -- collective decompositions (paper: ExaMPI's p2p collectives) -------
 
     @staticmethod
-    def _ring(n: int, step: int = 1) -> List[Tuple[int, int]]:
+    def _ring(n: int, step: int = 1):
         return patterns.ring_perm(n, step)
 
     def ppermute(self, perm, nbytes: int = 0, tag: int = 0,
                  comm: int = 0) -> None:
         with self._collective("ppermute", tag=tag, nb=nbytes):
-            self.exchange(list(perm), tag=tag, nbytes=nbytes, comm=comm)
+            self.exchange(perm, tag=tag, nbytes=nbytes, comm=comm)
 
     def all_gather(self, n: int, nbytes: int = 0, comm: int = 0) -> None:
         with self._collective("all_gather", n=n, nb=nbytes):

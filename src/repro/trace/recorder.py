@@ -30,12 +30,21 @@ from .io import TraceWriter
 @contextlib.contextmanager
 def record_fabric(path: str, mode: str = "binned",
                   registry: Optional[CounterRegistry] = None,
-                  meta: Optional[Dict] = None,
+                  meta: Optional[Dict] = None, wall_clock: bool = True,
+                  buffer_records: Optional[int] = None,
                   **fabric_kwargs) -> Iterator[Fabric]:
     """Yield a fabric whose every engine op and collective phase is
-    appended to the JSONL trace at ``path``."""
+    appended to the JSONL trace at ``path``. Emission is buffered
+    (``buffer_records``, default :data:`repro.trace.io.BUFFER_RECORDS`);
+    everything is flushed by the final snapshot + close on exit — call
+    ``fabric.trace.flush()`` mid-run if another process tails the file.
+    ``wall_clock=False`` records in deterministic (byte-reproducible)
+    mode."""
     reg = registry if registry is not None else CounterRegistry()
-    with TraceWriter(path, mode=canonical_mode(mode), meta=meta) as writer:
+    writer_kwargs = {} if buffer_records is None else {
+        "buffer_records": buffer_records}
+    with TraceWriter(path, mode=canonical_mode(mode), meta=meta,
+                     wall_clock=wall_clock, **writer_kwargs) as writer:
         fabric = Fabric(mode=mode, registry=reg, trace=writer,
                         **fabric_kwargs)
         try:
@@ -47,13 +56,15 @@ def record_fabric(path: str, mode: str = "binned",
 @contextlib.contextmanager
 def record_collectives(path: str, mode: str = "binned",
                        registry: Optional[CounterRegistry] = None,
-                       meta: Optional[Dict] = None,
+                       meta: Optional[Dict] = None, wall_clock: bool = True,
+                       buffer_records: Optional[int] = None,
                        **fabric_kwargs) -> Iterator[Fabric]:
     """Like :func:`record_fabric`, but also routes the live comm layer
     through the traced fabric for the duration of the block (restoring
     whatever fabric was configured before)."""
     from ..comm import collectives
     with record_fabric(path, mode=mode, registry=registry, meta=meta,
+                       wall_clock=wall_clock, buffer_records=buffer_records,
                        **fabric_kwargs) as fabric:
         prev = collectives.matching_fabric()
         collectives.configure_matching(fabric)

@@ -10,15 +10,18 @@ from .base import (DEFECT_DETECTOR, Scenario, all_scenarios, get, names,
                    progress_schedule, register, scenario)
 from . import scenarios  # noqa: F401  (registers the gallery)
 from .bench import (DEFECT_KINDS, ENGINE_MODES, PE_REQUESTS,
-                    PROGRESS_MODES, ScenarioRun, cell_key, check,
-                    compare_to_baseline, defect_coverage,
-                    hist_percentile, make_baseline, run_scenario, sweep)
+                    PROGRESS_MODES, ScenarioRun, build_fabric, cell_key,
+                    check, compare_to_baseline, count_ops,
+                    defect_coverage, hist_percentile, make_baseline,
+                    run_scenario, sweep)
+from . import hotpath  # noqa: F401  (throughput bench + perf gate)
 
 __all__ = [
     "DEFECT_DETECTOR", "Scenario", "all_scenarios", "get", "names",
     "progress_schedule", "register", "scenario",
     "DEFECT_KINDS", "ENGINE_MODES", "PE_REQUESTS", "PROGRESS_MODES",
-    "ScenarioRun", "cell_key", "check", "compare_to_baseline",
-    "defect_coverage", "hist_percentile", "make_baseline",
-    "run_scenario", "sweep",
+    "ScenarioRun", "build_fabric", "cell_key", "check",
+    "compare_to_baseline", "count_ops", "defect_coverage",
+    "hist_percentile", "hotpath", "make_baseline", "run_scenario",
+    "sweep",
 ]

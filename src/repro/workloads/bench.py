@@ -53,6 +53,30 @@ PE_REQUESTS = 32
 GATED_METRICS = ("n_ops", "depth_mean", "depth_max", "umq_mean", "umq_max")
 
 
+def build_fabric(sc: Scenario, engine_mode: str,
+                 registry: Optional[CounterRegistry] = None,
+                 trace=None) -> Fabric:
+    """The fabric configuration every harness drives a scenario through
+    (the sweep here, the hotpath throughput bench, golden-trace
+    capture): the scenario's deterministic unexpected/wildcard mix over
+    a fresh per-run registry."""
+    return Fabric(mode=engine_mode,
+                  registry=registry if registry is not None
+                  else CounterRegistry(),
+                  trace=trace,
+                  unexpected_every=sc.unexpected_every,
+                  wildcard_every=sc.wildcard_every)
+
+
+def count_ops(stats: Dict[str, CounterStat]) -> int:
+    """Engine ops in one drained stat dict: every arrival observes
+    ``match.prq.traversal_depth`` once and every post observes
+    ``match.umq.traversal_depth`` once."""
+    arr = stats.get("match.prq.traversal_depth")
+    post = stats.get("match.umq.traversal_depth")
+    return (arr.count if arr else 0) + (post.count if post else 0)
+
+
 def hist_percentile(st: Optional[CounterStat], q: float) -> float:
     """Approximate percentile of a power-of-two histogram: the lower
     bound of the bucket holding the q-quantile observation."""
@@ -135,9 +159,7 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
             meta={"scenario": sc.name, "seed": seed, "size": size,
                   "params": dict(sorted(p.items())),
                   "progress_mode": progress_mode})
-    fab = Fabric(mode=engine_mode, registry=reg, trace=writer,
-                 unexpected_every=sc.unexpected_every,
-                 wildcard_every=sc.wildcard_every)
+    fab = build_fabric(sc, engine_mode, registry=reg, trace=writer)
     rng = random.Random(seed)
     t0 = time.perf_counter_ns()
     sc.drive(fab, rng, p)
@@ -161,8 +183,7 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
     stats = counter_stats(events)
     depth = stats.get("match.prq.traversal_depth")
     umq = stats.get("match.umq.length")
-    posts = stats.get("match.umq.traversal_depth")  # one obs per post
-    n_ops = (depth.count if depth else 0) + (posts.count if posts else 0)
+    n_ops = count_ops(stats)
 
     def hv(st, attr):
         return getattr(st, attr) if st is not None and st.count else 0.0

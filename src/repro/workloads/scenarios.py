@@ -38,8 +38,9 @@ def halo3d(fab: Fabric, rng: random.Random, p: Params) -> None:
     n = p["ranks"]
     for step in range(p["steps"]):
         fab.set_label(f"halo_step({step})")
-        for ax, direction, perm, tag in patterns.halo_shifts(n):
-            fab.ppermute(perm, nbytes=p["face_bytes"], tag=tag)
+        with fab.fused():           # one batched dispatch per rank/step
+            for ax, direction, perm, tag in patterns.halo_shifts(n):
+                fab.ppermute(perm, nbytes=p["face_bytes"], tag=tag)
     fab.set_label(None)
 
 
@@ -114,20 +115,20 @@ def sparse_neighbors(fab: Fabric, rng: random.Random, p: Params) -> None:
 def master_worker(fab: Fabric, rng: random.Random, p: Params) -> None:
     n, m, backlog = p["ranks"], p["per_worker"], p["backlog"]
     master = fab.engine(0)
+    workers = [w for w, _ in patterns.hot_rank_pairs(n, hot=0,
+                                                     per_worker=m)]
+    wildcards = [ANY_SOURCE] * len(workers)
     for r in range(p["rounds"]):
         fab.phase(f"master_worker({r})", n=n)
         # workers race the master's posts: results arrive unexpected
-        for w, _ in patterns.hot_rank_pairs(n, hot=0, per_worker=m):
-            master.arrive(src=w, tag=200 + (r % m), nbytes=1 << 10)
+        master.arrive_batch(workers, tag=200 + (r % m), nbytes=1 << 10)
         # master consumes whoever-finished-first via ANY_SOURCE
-        for _ in range((n - 1) * m):
-            master.post_recv(src=ANY_SOURCE, tag=200 + (r % m))
+        master.post_recv_batch(wildcards, tag=200 + (r % m))
         # imbalance backlog: a pile of specific receives, drained in
         # reverse post order (legal, adversarial for a flat PRQ)
-        for t in range(backlog):
-            master.post_recv(src=1, tag=1_000 + t)
-        for t in reversed(range(backlog)):
-            master.arrive(src=1, tag=1_000 + t, nbytes=1 << 8)
+        master.post_recv_tags(1, range(1_000, 1_000 + backlog))
+        master.arrive_tags(1, reversed(range(1_000, 1_000 + backlog)),
+                           nbytes=1 << 8)
 
 
 @scenario(
@@ -150,13 +151,12 @@ def unexpected_storm(fab: Fabric, rng: random.Random, p: Params) -> None:
         # its receive is posted (unexpected_every=1)
         fab.ppermute(patterns.ring_perm(n), nbytes=1 << 10, tag=r)
         # plus a direct burst per rank, consumed by ANY_TAG wildcards
+        wildcards = [ANY_SOURCE] * burst
         for rank in range(n):
             eng = fab.engine(rank)
-            for j in range(burst):
-                eng.arrive(src=(rank + 1) % n, tag=300 + j,
-                           nbytes=1 << 9)
-            for _ in range(burst):
-                eng.post_recv(src=ANY_SOURCE, tag=ANY_TAG)
+            eng.arrive_tags((rank + 1) % n, range(300, 300 + burst),
+                            nbytes=1 << 9)
+            eng.post_recv_batch(wildcards, tag=ANY_TAG)
 
 
 @scenario(
@@ -178,9 +178,8 @@ def wildcard_pipeline(fab: Fabric, rng: random.Random, p: Params) -> None:
         for stage in range(1, p["stages"]):
             consumer = fab.engine(stage)
             producer = stage - 1
-            for t in range(batch):
-                consumer.post_recv(src=producer, tag=t)
-            for _ in range(wild):
-                consumer.post_recv(src=producer, tag=ANY_TAG)
-            for t in reversed(range(batch + wild)):
-                consumer.arrive(src=producer, tag=t, nbytes=1 << 11)
+            consumer.post_recv_tags(producer, range(batch))
+            consumer.post_recv_batch([producer] * wild, tag=ANY_TAG)
+            consumer.arrive_tags(producer,
+                                 reversed(range(batch + wild)),
+                                 nbytes=1 << 11)

@@ -1,0 +1,425 @@
+"""Hot-path overhaul equivalence pins (PR 4).
+
+The overhaul (indexed UMQ, batched dispatch, columnar counter sink,
+buffered trace writer) must change *cost only*. Four layers of proof:
+
+1. golden-trace byte-equality: deterministic-mode traces across all
+   scenarios x engine modes are byte-identical to the committed goldens
+   captured on the PRE-overhaul engine;
+2. batched-vs-per-op equivalence: an untraced run (batched dispatch,
+   columnar counters) produces the identical deterministic counter
+   statistics and queue state as a traced run (per-op dispatch) of the
+   same scenario;
+3. IndexedUMQ unit semantics: wildcard ordering and the GCUMQ depth
+   contract, property-checked against a reference linear scan;
+4. infrastructure units: columnar counter records, swap-out drain,
+   observe_many, buffered trace writer byte-identity and flush.
+"""
+import hashlib
+import json
+import os
+import random
+
+import pytest
+
+from repro import workloads
+from repro.core.counters import CounterRegistry, counter_stats
+from repro.match import ANY_SOURCE, ANY_TAG, Fabric, MatchEngine
+from repro.match.engine import IndexedUMQ, Message, PostedRecv
+from repro.match.legacy import LegacyFabric
+from repro.trace import TraceWriter, read_trace
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+GOLDEN_JSON = os.path.join(GOLDEN_DIR, "hotpath_goldens.json")
+
+# counter names whose values are pure functions of the op stream
+DETERMINISTIC = ("match.expected", "match.unexpected", "match.umq.hit",
+                 "match.umq.leaked", "match.prq.traversal_depth",
+                 "match.umq.traversal_depth", "match.prq.length",
+                 "match.umq.length")
+
+
+def goldens():
+    with open(GOLDEN_JSON) as f:
+        return json.load(f)
+
+
+def det_stats(reg):
+    stats = reg.drain()
+    out = {}
+    for name in DETERMINISTIC:
+        st = stats.get(name)
+        if st is not None:
+            out[name] = (st.count, st.total, st.vmin, st.vmax,
+                         dict(st.bins))
+    return out
+
+
+# ------------------------------------------------ golden byte-equality
+
+def test_golden_traces_are_byte_identical(tmp_path):
+    """Deterministic-mode traces for every scenario x engine mode must
+    match the pre-overhaul goldens byte for byte (and reproduce the
+    recorded finding sets and deterministic queue metrics)."""
+    g = goldens()
+    assert len(g["cells"]) >= 21      # 7 scenarios x 3 modes (+ fulls)
+    for key, want in sorted(g["cells"].items()):
+        name, mode, size = key.split("|")
+        path = str(tmp_path / "t.jsonl")
+        run = workloads.run_scenario(name, engine_mode=mode,
+                                     seed=g["seed"], size=size,
+                                     trace_path=path, wall_clock=False)
+        digest = hashlib.sha256(open(path, "rb").read()).hexdigest()
+        assert digest == want["sha256"], key
+        assert run.finding_kinds == want["findings"], key
+        got = {k: v for k, v in run.row().items() if k != "us_per_op"}
+        exp = {k: v for k, v in want["row"].items() if k != "us_per_op"}
+        assert got == exp, key
+
+
+def test_committed_golden_trace_file(tmp_path):
+    """The fully-committed golden trace (not just its hash) reproduces."""
+    g = goldens()
+    name, mode, size = g["golden_trace"]["cell"].split("|")
+    ref = os.path.join(GOLDEN_DIR, g["golden_trace"]["file"])
+    path = str(tmp_path / "t.jsonl")
+    workloads.run_scenario(name, engine_mode=mode, seed=g["seed"],
+                           size=size, trace_path=path, wall_clock=False)
+    assert open(path, "rb").read() == open(ref, "rb").read()
+    header, records = read_trace(ref)       # and it parses
+    assert records
+
+
+# ----------------------------------- batched vs per-op vs legacy paths
+
+@pytest.mark.parametrize("mode", ["fifo", "linear", "leaky_umq"])
+def test_batched_untraced_equals_per_op_traced(tmp_path, mode):
+    """The untraced drive (batched dispatch, columnar counter records,
+    fused collectives) must produce identical deterministic statistics
+    and queue state to the traced drive (per-op dispatch) — this is the
+    cross-check the golden traces cannot provide, since tracing forces
+    the per-op path."""
+    from repro.workloads.base import all_scenarios
+    from repro.workloads.bench import build_fabric
+    for sc in all_scenarios():
+        reg_b = CounterRegistry()
+        fab_b = build_fabric(sc, mode, registry=reg_b)
+        sc.drive(fab_b, random.Random(0), sc.params("smoke"))
+
+        reg_t = CounterRegistry()
+        with TraceWriter(str(tmp_path / f"{sc.name}_{mode}.jsonl"),
+                         mode=mode, wall_clock=False) as w:
+            fab_t = build_fabric(sc, mode, registry=reg_t, trace=w)
+            sc.drive(fab_t, random.Random(0), sc.params("smoke"))
+        assert det_stats(reg_b) == det_stats(reg_t), (sc.name, mode)
+        assert fab_b.outstanding() == fab_t.outstanding(), (sc.name, mode)
+
+
+def test_legacy_engine_is_semantically_equivalent():
+    """The frozen pre-overhaul engine (the bench yardstick) agrees with
+    the live engine on deterministic statistics for every scenario."""
+    from repro.workloads.base import all_scenarios
+    from repro.workloads.bench import build_fabric
+    for sc in all_scenarios():
+        reg_new = CounterRegistry()
+        sc.drive(build_fabric(sc, "binned", registry=reg_new),
+                 random.Random(0), sc.params("smoke"))
+        reg_old = CounterRegistry()
+        fab_old = LegacyFabric(mode="binned", registry=reg_old,
+                               unexpected_every=sc.unexpected_every,
+                               wildcard_every=sc.wildcard_every)
+        sc.drive(fab_old, random.Random(0), sc.params("smoke"))
+        assert det_stats(reg_new) == det_stats(reg_old), sc.name
+
+
+# ------------------------------------------------ IndexedUMQ semantics
+
+class _RefUMQ:
+    """Reference single-list UMQ (the pre-overhaul GCUMQ): the oracle
+    for matching outcomes and the depth contract."""
+
+    def __init__(self):
+        self.q = []
+
+    def add(self, msg):
+        self.q.append(msg)
+
+    def match(self, recv):
+        for i, m in enumerate(self.q):
+            if recv.accepts(m):
+                del self.q[i]
+                return m, i + 1
+        return None, len(self.q)
+
+
+def test_indexed_umq_wildcard_ordering():
+    """Earliest arrival wins across envelope buckets for every wildcard
+    shape."""
+    u = IndexedUMQ()
+    for seq, (src, tag) in enumerate([(3, 9), (1, 5), (2, 5), (1, 9)]):
+        u.add(Message(src, tag, 0, 0, seq))
+    # any-source, tag 5 -> (1, 5) at arrival rank 2
+    msg, depth = u.match(PostedRecv(ANY_SOURCE, 5, 0, 0))
+    assert (msg.src, msg.tag, depth) == (1, 5, 2)
+    # src 1, any-tag -> (1, 9) now at rank 3
+    msg, depth = u.match(PostedRecv(1, ANY_TAG, 0, 1))
+    assert (msg.src, msg.tag, depth) == (1, 9, 3)
+    # any-any -> earliest remaining (3, 9)
+    msg, depth = u.match(PostedRecv(ANY_SOURCE, ANY_TAG, 0, 2))
+    assert (msg.src, msg.tag, depth) == (3, 9, 1)
+    assert len(u) == 1
+
+
+def test_indexed_umq_depth_contract_matches_linear_scan():
+    """Property check: on random streams of adds and (wildcard or
+    specific) matches, IndexedUMQ returns the same (message, depth)
+    as a front-to-back linear scan — the contract that keeps traces
+    and baselines byte-identical."""
+    rng = random.Random(7)
+    u, ref = IndexedUMQ(), _RefUMQ()
+    seq = 0
+    for _ in range(3000):
+        if ref.q and rng.random() < 0.45:
+            src = ANY_SOURCE if rng.random() < 0.3 else rng.randrange(5)
+            tag = ANY_TAG if rng.random() < 0.3 else rng.randrange(7)
+            comm = rng.randrange(2)
+            recv = PostedRecv(src, tag, comm, seq)
+            got, gd = u.match(recv)
+            want, wd = ref.match(recv)
+            assert gd == wd
+            assert (got is None) == (want is None)
+            if got is not None:
+                assert got.seq == want.seq
+        else:
+            m1 = Message(rng.randrange(5), rng.randrange(7),
+                         rng.randrange(2), 0, seq)
+            m2 = Message(m1.src, m1.tag, m1.comm, 0, seq)
+            u.add(m1)
+            ref.add(m2)
+        seq += 1
+        assert len(u) == len(ref.q)
+
+
+def test_indexed_umq_lazy_index_flushes_on_specific_probe():
+    u = IndexedUMQ()
+    for seq in range(8):
+        u.add(Message(seq % 2, 4, 0, 0, seq))
+    assert u._lazy == 8                  # nothing indexed yet
+    msg, depth = u.match(PostedRecv(1, 4, 0, 0))
+    assert u._lazy == 0                  # probe flushed the suffix
+    assert (msg.seq, depth) == (1, 2)
+    # wildcard pulls keep the index and the lazy suffix consistent
+    u.add(Message(0, 5, 0, 0, 99))
+    assert u._lazy == 1
+    msg, depth = u.match(PostedRecv(ANY_SOURCE, 5, 0, 1))
+    assert msg.seq == 99 and u._lazy == 0 and len(u) == 7
+
+
+# --------------------------------------------------- counter sink units
+
+def test_observe_many_and_buffer_fast_path():
+    reg = CounterRegistry(pid=2)
+    reg.observe_many("om.depth", [1, 2, 3, 4])
+    buf = reg.buffer()
+    buf += (reg.pid, "om.direct", 7, True)
+    stats = reg.drain()
+    assert stats["om.depth"].count == 4 and stats["om.depth"].total == 10
+    assert stats["om.direct"].vmax == 7
+    lanes = reg.drain_lanes()
+    assert lanes[2]["om.depth"].count == 4
+
+
+def test_columnar_records_expand_to_the_same_multiset():
+    """A COLS record must drain exactly like its per-delta expansion."""
+    spec = (("c.depth", True), ("c.n", False))
+    rows = [3, 1, 9, 1, 3, 1]
+    a = CounterRegistry()
+    a.buffer().extend((0, spec, rows, "cols"))
+    b = CounterRegistry()
+    for d, n in zip(rows[0::2], rows[1::2]):
+        b.observe("c.depth", d)
+        b.count("c.n", n)
+    sa, sb = a.drain(), b.drain()
+    for name in ("c.depth", "c.n"):
+        assert sa[name].to_attrs() == sb[name].to_attrs()
+    assert sa["c.depth"].bins == {2: 2, 8: 1}
+
+
+def test_pending_deltas_counts_columnar_rows():
+    reg = CounterRegistry()
+    reg.count("x", 1)
+    reg.buffer().extend((0, (("y", True),), [5, 6, 7], "cols"))
+    assert reg.pending_deltas() == 4
+    reg.drain()
+    assert reg.pending_deltas() == 0
+
+
+def test_drain_swaps_own_buffer_out():
+    """The draining thread's buffer is swapped whole (no copy); the
+    epoch bump tells caching producers to refetch."""
+    reg = CounterRegistry()
+    reg.count("s.x", 1)
+    buf = reg.buffer()
+    epoch = reg.epoch
+    assert reg.drain()["s.x"].total == 1
+    assert reg.epoch != epoch
+    assert reg.buffer() is not buf       # swapped out
+    # an engine writing through a stale swapped-out buffer would lose
+    # the second op's deltas; the epoch check makes it refetch
+    eng = MatchEngine(mode="binned", registry=reg)
+    eng.post_recv(src=1, tag=1)
+    assert reg.drain()["match.prq.length"].count == 1
+    eng.post_recv(src=1, tag=2)          # after another swap
+    assert reg.drain()["match.prq.length"].count == 2
+
+
+# ------------------------------------------------ buffered trace writer
+
+def test_buffered_writer_output_is_byte_identical(tmp_path):
+    recs = [{"t": "phase", "op": "phase", "label": f"p{i}"}
+            for i in range(300)]
+    paths = []
+    for cap in (1, 7, 256):
+        path = str(tmp_path / f"t{cap}.jsonl")
+        with TraceWriter(path, mode="binned", wall_clock=False,
+                         buffer_records=cap) as w:
+            for r in recs:
+                w.emit(dict(r))
+        paths.append(path)
+    blobs = [open(p, "rb").read() for p in paths]
+    assert blobs[0] == blobs[1] == blobs[2]
+
+
+def test_writer_flush_makes_buffered_records_visible(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    w = TraceWriter(path, mode="binned", wall_clock=False,
+                    buffer_records=1000)
+    w.emit({"t": "phase", "op": "phase", "label": "x"})
+    assert w.n_records == 2              # header + record (buffered)
+    w.flush()
+    header, records = read_trace(path)
+    assert [r["label"] for r in records] == ["x"]
+    w.emit({"t": "phase", "op": "phase", "label": "y"})
+    w.close()
+    _, records = read_trace(path)
+    assert [r["label"] for r in records] == ["x", "y"]
+    with pytest.raises(ValueError):
+        w.emit({"t": "phase", "op": "phase", "label": "z"})
+
+
+def test_writer_stamps_t_wall_in_place(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    rec = {"t": "post", "rank": 0, "src": 1, "tag": 2, "seq": 0,
+           "hit": None}
+    with TraceWriter(path, mode="binned") as w:
+        w.emit(rec)
+    assert "t_wall" in rec               # stamped without a dict copy
+    _, records = read_trace(path)
+    assert records[0]["t_wall"] == rec["t_wall"]
+
+
+# ------------------------------------------------ batched dispatch API
+
+def test_batch_apis_equal_per_op_calls():
+    """post_recv_batch / arrive_batch / *_tags / run_ops fold exactly
+    like their per-op counterparts (counters included)."""
+    def drive_batch(eng):
+        eng.arrive_batch([1, 2, 3], tag=5, nbytes=8)
+        eng.post_recv_batch([2, 1, ANY_SOURCE], tag=5)
+        eng.post_recv_tags(4, range(3))
+        eng.arrive_tags(4, reversed(range(3)), nbytes=4)
+        eng.run_ops((True, 9, 1, 0, 0,      # post (9, 1)
+                     False, 9, 1, 16, 0,    # arrive -> expected
+                     False, 9, 2, 16, 0,    # arrive -> unexpected
+                     True, ANY_SOURCE, ANY_TAG, 0, 0))  # wildcard pull
+
+    def drive_per_op(eng):
+        for s in (1, 2, 3):
+            eng.arrive(s, tag=5, nbytes=8)
+        for s in (2, 1, ANY_SOURCE):
+            eng.post_recv(s, tag=5)
+        for t in range(3):
+            eng.post_recv(4, t)
+        for t in reversed(range(3)):
+            eng.arrive(4, t, nbytes=4)
+        eng.post_recv(9, 1)
+        eng.arrive(9, 1, nbytes=16)
+        eng.arrive(9, 2, nbytes=16)
+        eng.post_recv(ANY_SOURCE, ANY_TAG)
+
+    reg_a, reg_b = CounterRegistry(), CounterRegistry()
+    ea = MatchEngine(mode="binned", registry=reg_a)
+    eb = MatchEngine(mode="binned", registry=reg_b)
+    drive_batch(ea)
+    drive_per_op(eb)
+    assert det_stats(reg_a) == det_stats(reg_b)
+    assert ea.outstanding() == eb.outstanding()
+    assert ea._seqn == eb._seqn
+
+
+def test_run_ops_probe_cache_survives_sampled_flush():
+    """Regression: a sampled (timed) specific post flushes the lazy UMQ
+    index inside match_env, creating env bins; the utc/uper probe cache
+    must be invalidated or later untimed specific posts for the same
+    (tag, comm) silently miss live messages."""
+    from repro.match.engine import TIMING_EVERY
+    ops = []
+    # op 0 (sampled on a fresh engine): park an unrelated arrival
+    ops.append((False, 9, 1, 0, 0))
+    # untimed specific post primes the cache with (7, 0) -> no bin,
+    # then an arrival completes it so the PRQ is empty again
+    ops.append((True, 5, 7, 0, 0))
+    ops.append((False, 5, 7, 0, 0))
+    # two (5, 7) arrivals park in the lazy (unindexed) suffix
+    ops.append((False, 5, 7, 0, 0))
+    ops.append((False, 5, 7, 0, 0))
+    # pad with parking arrivals so the next op lands on the cadence
+    while len(ops) < TIMING_EVERY:
+        ops.append((False, 9, 2, 0, 0))
+    # sampled specific post: match_env flushes the index and hits
+    ops.append((True, 5, 7, 0, 0))
+    # untimed specific post for the same (tag, comm): must also hit
+    ops.append((True, 5, 7, 0, 0))
+
+    reg_a = CounterRegistry()
+    ea = MatchEngine(mode="binned", registry=reg_a)
+    ea.run_ops([x for op in ops for x in op])
+    reg_b = CounterRegistry()
+    eb = MatchEngine(mode="binned", registry=reg_b)
+    for is_post, src, tag, nb, comm in ops:
+        if is_post:
+            eb.post_recv(src, tag, comm)
+        else:
+            eb.arrive(src, tag, comm, nb)
+    assert det_stats(reg_a) == det_stats(reg_b)
+    assert ea.outstanding() == eb.outstanding()
+
+
+def test_exchange_accepts_one_shot_iterables():
+    """Regression: exchange iterates pairs once per stage, so generator
+    inputs (valid for ppermute since the beginning) must still deliver
+    every message — traced and untraced."""
+    for trace in (None, _SinkTrace()):
+        reg = CounterRegistry()
+        fab = Fabric(mode="binned", registry=reg, unexpected_every=0,
+                     wildcard_every=0, trace=trace)
+        fab.ppermute(((i, (i + 1) % 4) for i in range(4)), nbytes=8)
+        assert fab.outstanding() == (0, 0)
+        assert reg.drain()["match.expected"].total == 4
+
+
+class _SinkTrace:
+    def emit(self, rec):
+        pass
+
+
+def test_fused_span_defers_and_flushes():
+    reg = CounterRegistry()
+    fab = Fabric(mode="binned", registry=reg, unexpected_every=0,
+                 wildcard_every=0)
+    with fab.fused():
+        fab.exchange([(0, 1), (1, 0)], tag=3, nbytes=8)
+        assert fab.outstanding() == (0, 0)      # nothing dispatched yet
+    stats = reg.drain()
+    assert stats["match.expected"].total == 2   # flushed at span exit
+    assert fab.outstanding() == (0, 0)
