@@ -2,7 +2,9 @@ PYTHON ?= python
 
 .PHONY: verify test bench-match bench-replay replay-smoke \
 	bench-scenarios scenario-smoke scenario-baseline bench-hotpath \
-	hotpath-smoke hotpath-baseline tour-timeline tour-match tour-replay
+	hotpath-smoke hotpath-baseline bench-replay-hotpath \
+	replay-hotpath-smoke replay-baseline tour-timeline tour-match \
+	tour-replay
 
 verify:
 	./scripts/verify.sh
@@ -42,6 +44,19 @@ hotpath-smoke:
 hotpath-baseline:
 	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py --write-baseline
 	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py --smoke --write-baseline
+
+# replay-pipeline perf gate: batched v3 streaming replay vs the frozen
+# per-op pipeline (paired-median, in-process) + v2->v3 footprint gate
+bench-replay-hotpath:
+	PYTHONPATH=src $(PYTHON) benchmarks/replay_bench.py
+
+replay-hotpath-smoke:
+	PYTHONPATH=src $(PYTHON) benchmarks/replay_bench.py --smoke --min-speedup 2.0
+
+# regenerate the committed replay op-stream/throughput baselines
+replay-baseline:
+	PYTHONPATH=src $(PYTHON) benchmarks/replay_bench.py --write-baseline
+	PYTHONPATH=src $(PYTHON) benchmarks/replay_bench.py --smoke --write-baseline
 
 tour-timeline:
 	PYTHONPATH=src:. $(PYTHON) examples/timeline_tour.py

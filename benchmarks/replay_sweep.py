@@ -71,6 +71,11 @@ def main() -> int:
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--trace", default=None,
                     help="trace path (default results/bench/replay_trace.jsonl)")
+    ap.add_argument("--align", choices=("index", "label"),
+                    default="index",
+                    help="phase alignment for the differ: 'index' "
+                         "(same-trace what-ifs, the default) or 'label' "
+                         "(cross-run diffs whose phase indices diverge)")
     args = ap.parse_args()
     rounds = args.rounds or (12 if args.smoke else 20)
 
@@ -144,7 +149,7 @@ def main() -> int:
     expected = {"linear": "long_traversal", "leaky_umq": "umq_flood",
                 "fifo_again": None}
     for name, cand in candidates.items():
-        d = diff(base, cand)
+        d = diff(base, cand, align=args.align)
         kinds = sorted({f.kind for f in d.flags()})
         results["diff_flags"][name] = kinds
         print(f"diff fifo -> {name:10s}: flags={kinds}")

@@ -8,14 +8,20 @@ sha256 of the deterministic-mode trace file bytes, the detector finding
 kinds, and the deterministic queue-metric row — plus one complete golden
 trace (``sparse_neighbors`` / fifo / smoke) as a readable JSONL file.
 
-The committed goldens were captured on the PRE-hot-path-overhaul engine;
-``tests/test_hotpath_equiv.py`` pins the overhauled engine to them
-byte-for-byte. Regenerate ONLY after an intentional trace-visible
-behavior change (new counters, schema bump, scenario edits) — never to
-paper over an equivalence failure.
+The committed goldens were captured on the PRE-hot-path-overhaul engine
+and stay **byte-frozen at schema v2** (``--schema 2``, the default):
+the per-op encoding is what pins engine semantics byte-for-byte across
+both the PR 4 engine overhaul and the PR 5 trace compaction.
+``tests/test_hotpath_equiv.py`` pins the live engine to them.
+``--schema 3`` captures the same cells in the compact chunked encoding
+(tooling/inspection only — not what the committed goldens use).
+Regenerate ONLY after an intentional trace-visible behavior change (new
+counters, schema bump, scenario edits) — never to paper over an
+equivalence failure.
 """
 from __future__ import annotations
 
+import argparse
 import hashlib
 import json
 import os
@@ -38,18 +44,24 @@ ENGINE_MODES = ("fifo", "linear", "leaky_umq")
 SEED = 0
 
 
-def capture(scenario: str, mode: str, size: str, scratch: str) -> dict:
+def capture(scenario: str, mode: str, size: str, scratch: str,
+            schema: int) -> dict:
     """One deterministic traced run -> {sha256, findings, row}."""
     path = os.path.join(scratch, f"{scenario}_{mode}_{size}.jsonl")
     run = workloads.run_scenario(scenario, engine_mode=mode, seed=SEED,
                                  size=size, trace_path=path,
-                                 wall_clock=False)
+                                 wall_clock=False, trace_schema=schema)
     digest = hashlib.sha256(open(path, "rb").read()).hexdigest()
     return {"path": path, "sha256": digest,
             "findings": run.finding_kinds, "row": run.row()}
 
 
 def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--schema", type=int, choices=(2, 3), default=2,
+                    help="trace schema for the captured goldens "
+                         "(committed goldens are frozen at 2)")
+    args = ap.parse_args()
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     scratch = tempfile.mkdtemp(prefix="goldens_")
     cells = {}
@@ -57,7 +69,7 @@ def main() -> int:
         for mode in ENGINE_MODES:
             sizes = ("smoke", "full") if mode == "fifo" else ("smoke",)
             for size in sizes:
-                got = capture(name, mode, size, scratch)
+                got = capture(name, mode, size, scratch, args.schema)
                 cells[f"{name}|{mode}|{size}"] = {
                     "sha256": got["sha256"],
                     "findings": got["findings"],
@@ -68,6 +80,7 @@ def main() -> int:
                       f"{got['sha256'][:16]}  {got['findings']}")
     payload = {"format": "repro.workloads.hotpath_goldens", "version": 1,
                "seed": SEED, "engine_modes": list(ENGINE_MODES),
+               "trace_schema": args.schema,
                "golden_trace": {
                    "cell": "|".join(GOLDEN_TRACE_CELL),
                    "file": os.path.basename(GOLDEN_TRACE_FILE)},

@@ -1,0 +1,66 @@
+"""Re-encode a repro.trace JSONL trace between schema versions.
+
+    PYTHONPATH=src python scripts/trace_convert.py IN OUT [--schema {2,3}]
+                                                          [--check]
+
+Streams the source trace (any supported version — v1/v2 per-op, v3
+chunked) through a writer at the target schema: records, ``t_wall``
+stamps, phase markers, snapshots and header meta pass through
+unchanged; only the post/arrive encoding differs. v2 -> v3 -> v2 is
+byte-identical; v3 compacts the op stream into delta-encoded columnar
+chunks (typically 3-5x fewer bytes/op on scenario traces).
+
+``--check`` replays both files (same engine mode, batched) and verifies
+the per-phase/per-rank deterministic counter statistics and detector
+findings are equal — the replay-stat round-trip guarantee the perf gate
+(``benchmarks/replay_bench.py``) enforces fleet-wide.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("src", help="input trace (.jsonl or .jsonl.gz)")
+    ap.add_argument("dst", help="output trace path")
+    ap.add_argument("--schema", type=int, default=None,
+                    help="target schema version (default: 3, the "
+                         "compact chunked encoding; 2 = per-op records)")
+    ap.add_argument("--check", action="store_true",
+                    help="replay both traces and verify stat equality")
+    args = ap.parse_args()
+
+    from repro.trace import convert_trace, replay
+    from repro.workloads.replaybench import (finding_kinds,
+                                             phase_signature)
+
+    n_records, n_ops = convert_trace(args.src, args.dst,
+                                     schema=args.schema)
+    s_in = os.path.getsize(args.src)
+    s_out = os.path.getsize(args.dst)
+    print(f"{args.src} -> {args.dst}: {n_records} records "
+          f"({n_ops} engine ops), {s_in:,} -> {s_out:,} bytes "
+          f"({s_in / max(s_out, 1):.2f}x)")
+
+    if args.check:
+        a = replay(args.src, check_matches=False)
+        b = replay(args.dst, check_matches=False)
+        ok = (phase_signature(a) == phase_signature(b)
+              and finding_kinds(a) == finding_kinds(b)
+              and a.n_ops == b.n_ops)
+        if not ok:
+            print("CHECK FAILED: replay statistics differ between "
+                  "source and converted trace")
+            return 1
+        print(f"check passed: {len(a.phases)} phases, {a.n_ops} ops — "
+              "replay stats and findings identical")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

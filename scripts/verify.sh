@@ -9,28 +9,51 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== trace schema version check =="
+echo "== trace schema version check (v3 chunked + v1/v2 compat) =="
 python - <<'EOF'
-import tempfile, os
+import json, tempfile, os
 from repro.core.counters import CounterRegistry
-from repro.trace import (SCHEMA_VERSION, TraceSchemaError, read_trace,
-                         record_fabric, validate_header)
+from repro.trace import (SCHEMA_VERSION, TraceFormatError,
+                         TraceSchemaError, convert_trace, iter_trace,
+                         read_trace, record_fabric, validate_header)
 
-path = os.path.join(tempfile.mkdtemp(), "schema_check.jsonl")
+d = tempfile.mkdtemp()
+path = os.path.join(d, "schema_check.jsonl")
 with record_fabric(path, mode="binned",
                    registry=CounterRegistry()) as fab:
     fab.all_reduce(4, nbytes=1 << 10)
 header, records = read_trace(path)
-assert header["schema"] == SCHEMA_VERSION, header
+assert header["schema"] == SCHEMA_VERSION == 3, header
 assert records, "trace has no records"
+with open(path) as f:
+    kinds = {json.loads(line)["t"] for line in f}
+assert "chk" in kinds, "v3 trace has no columnar chunks"
+# streaming reader == eager reader, and v2 round-trips byte-identically
+with iter_trace(path) as r:
+    assert r.header == header and list(r) == records
+v2 = os.path.join(d, "v2.jsonl")
+v3 = os.path.join(d, "v3.jsonl")
+convert_trace(path, v2, schema=2)
+convert_trace(v2, v3, schema=3)
+assert read_trace(v2)[1] == records, "v2 conversion changed records"
+assert open(path, "rb").read() == open(v3, "rb").read(), \
+    "v3 -> v2 -> v3 is not byte-identical"
 try:
     validate_header(dict(header, schema=SCHEMA_VERSION + 1))
 except TraceSchemaError:
     pass
 else:
     raise SystemExit("future-version header was not rejected")
-print(f"trace schema v{SCHEMA_VERSION} round-trips and rejects "
-      f"unknown versions")
+# corrupt lines surface as typed errors with line numbers
+open(v2, "a").write("{broken\n")
+try:
+    read_trace(v2)
+except TraceFormatError as e:
+    assert e.line is not None
+else:
+    raise SystemExit("corrupt trace line was not rejected")
+print(f"trace schema v{SCHEMA_VERSION} chunks round-trip, v1/v2 "
+      f"compat holds, unknown versions and corrupt lines rejected")
 EOF
 
 echo "== matching-engine acceptance gate =="
@@ -46,3 +69,8 @@ echo "== hot-path throughput gate (vs frozen pre-overhaul engine, in-run) =="
 # full-size gate is 3x (make bench-hotpath); the CI-sized run uses a
 # noise-tolerant bar that still catches order-of-magnitude regressions
 python benchmarks/hotpath_bench.py --smoke --min-speedup 2.5
+
+echo "== replay-pipeline gate (batched v3 vs frozen per-op pipeline, in-run) =="
+# full-size gate is 2.5x (make bench-replay-hotpath); CI-sized bar is
+# noise-tolerant; the 3x bytes/op footprint gate applies at both sizes
+python benchmarks/replay_bench.py --smoke --min-speedup 2.0

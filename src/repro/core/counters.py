@@ -29,10 +29,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import sys
 import threading
 import time
 from itertools import islice
 from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as _np
 
 from .events import Event
 
@@ -71,9 +74,12 @@ def _pow2_bin(value: float) -> int:
     return 1 << (v.bit_length() - 1)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(**({"slots": True} if sys.version_info >= (3, 10)
+                           else {}))
 class CounterStat:
-    """Merged statistics for one named counter or histogram."""
+    """Merged statistics for one named counter or histogram (slotted
+    where the runtime allows: the drain's per-delta attribute updates
+    are the hottest consumer-side loop in the repo)."""
 
     name: str
     kind: str = "counter"            # "counter" | "histogram"
@@ -178,11 +184,34 @@ class CounterLane:
         return self._reg._buffer_for_current_thread()
 
 
-class CounterRegistry:
-    """Thread-safe, low-overhead counter sink (drain-on-read)."""
+def _fresh_stat(name: str) -> CounterStat:
+    """Bare-metal CounterStat construction for the drain: the dataclass
+    ``__init__`` costs ~3x this at the volume per-phase snapshots create
+    stats (every snapshot clears and every drain recreates)."""
+    st = CounterStat.__new__(CounterStat)
+    st.name = name
+    st.kind = "counter"
+    st.count = 0
+    st.total = 0.0
+    st.vmin = math.inf
+    st.vmax = -math.inf
+    st.bins = {}
+    return st
 
-    def __init__(self, pid: int = 0):
+
+class CounterRegistry:
+    """Thread-safe, low-overhead counter sink (drain-on-read).
+
+    ``lanes_only=True`` drops the cross-lane aggregate: the drain
+    maintains per-pid lane statistics only and :meth:`drain` returns
+    ``{}``. The batched trace replayer uses this — it consumes lanes
+    exclusively (one per replayed rank, snapshotted every phase), so
+    maintaining the aggregate would double the merge work for a dict
+    nobody reads."""
+
+    def __init__(self, pid: int = 0, lanes_only: bool = False):
         self.pid = pid
+        self.lanes_only = lanes_only
         self._registry_lock = threading.Lock()   # cold path only
         self._buffers: Dict[int, List] = {}      # flat quads per thread
         self._merged: Dict[str, CounterStat] = {}
@@ -257,20 +286,76 @@ class CounterRegistry:
         cost."""
         merged = self._merged
         by_pid = self._merged_by_pid
+        pairs: Dict[int, Dict[str, tuple]] = {}   # pid -> name -> pair
+        cpid = None
+        cpairs: Dict[str, tuple] = {}
         it = iter(flat)
         for pid, name, value, obs in zip(it, it, it, it):
             if type(obs) is str:          # column record: name=spec,
                 per = by_pid.get(pid)     # value=row-major values
                 if per is None:
                     per = by_pid[pid] = {}
+                if len(value) >= 24:
+                    # long record: aggregate each column with C-level
+                    # slicing, distinct-value counting (queue metrics
+                    # repeat heavily) and one bin pass over distinct
+                    # values, applied ONCE per stat — the per-value
+                    # double stat update is the drain's (and the batched
+                    # replayer's) dominant cost at volume
+                    k = len(name)
+                    j = 0
+                    for cname, cobs in name:
+                        colv = value[j::k] if k > 1 else value
+                        j += 1
+                        cnt = len(colv)
+                        tot = sum(colv)
+                        st = merged.get(cname)
+                        if st is None:
+                            st = merged[cname] = _fresh_stat(cname)
+                        pst = per.get(cname)
+                        if pst is None:
+                            pst = per[cname] = _fresh_stat(cname)
+                        st.count += cnt
+                        st.total += tot
+                        pst.count += cnt
+                        pst.total += tot
+                        if cobs:
+                            vc: Dict[float, int] = {}
+                            vget = vc.get
+                            for v in colv:
+                                vc[v] = vget(v, 0) + 1
+                            mn = min(vc)
+                            mx = max(vc)
+                            st.kind = "histogram"
+                            if mn < st.vmin:
+                                st.vmin = mn
+                            if mx > st.vmax:
+                                st.vmax = mx
+                            pst.kind = "histogram"
+                            if mn < pst.vmin:
+                                pst.vmin = mn
+                            if mx > pst.vmax:
+                                pst.vmax = mx
+                            sbins = st.bins
+                            sget = sbins.get
+                            pbins = pst.bins
+                            pget = pbins.get
+                            for v, c in vc.items():
+                                iv = int(v)
+                                b = (1 << (iv.bit_length() - 1)
+                                     if iv > 0 else 0)
+                                sbins[b] = sget(b, 0) + c
+                                pbins[b] = pget(b, 0) + c
+                    continue
+                # short record: the per-value loop's fixed cost wins
                 cols = []
                 for cname, cobs in name:
                     st = merged.get(cname)
                     if st is None:
-                        st = merged[cname] = CounterStat(name=cname)
+                        st = merged[cname] = _fresh_stat(cname)
                     pst = per.get(cname)
                     if pst is None:
-                        pst = per[cname] = CounterStat(name=cname)
+                        pst = per[cname] = _fresh_stat(cname)
                     cols.append((st, pst, cobs))
                 k = len(cols)
                 i = 0
@@ -301,15 +386,29 @@ class CounterRegistry:
                         bins = pst.bins
                         bins[b] = bins.get(b, 0) + 1
                 continue
-            st = merged.get(name)
-            if st is None:
-                st = merged[name] = CounterStat(name=name)
-            per = by_pid.get(pid)
-            if per is None:
-                per = by_pid[pid] = {}
-            pst = per.get(name)
-            if pst is None:
-                pst = per[name] = CounterStat(name=name)
+            # flat quad: consecutive deltas overwhelmingly share the
+            # producing lane, so the (aggregate, lane) stat pair is
+            # resolved through a per-pid cache — one dict get per delta
+            # instead of three
+            if pid != cpid:
+                cpid = pid
+                cpairs = pairs.get(pid)
+                if cpairs is None:
+                    cpairs = pairs[pid] = {}
+            pair = cpairs.get(name)
+            if pair is None:
+                st = merged.get(name)
+                if st is None:
+                    st = merged[name] = _fresh_stat(name)
+                per = by_pid.get(pid)
+                if per is None:
+                    per = by_pid[pid] = {}
+                pst = per.get(name)
+                if pst is None:
+                    pst = per[name] = _fresh_stat(name)
+                pair = cpairs[name] = (st, pst)
+            else:
+                st, pst = pair
             st.count += 1
             st.total += value
             pst.count += 1
@@ -332,10 +431,151 @@ class CounterRegistry:
                 bins = pst.bins
                 bins[b] = bins.get(b, 0) + 1
 
+    def _merge_lanes(self, flat: Iterable) -> None:
+        """:meth:`_merge` for ``lanes_only`` registries: identical fold,
+        per-lane stats only — no cross-lane aggregate maintenance. Kept
+        as a separate inlined loop so neither variant pays a per-delta
+        branch (the file's usual hot-loop duplication trade)."""
+        by_pid = self._merged_by_pid
+        cpid = None
+        cper: Dict[str, CounterStat] = {}
+        it = iter(flat)
+        for pid, name, value, obs in zip(it, it, it, it):
+            if pid != cpid:
+                cpid = pid
+                cper = by_pid.get(pid)
+                if cper is None:
+                    cper = by_pid[pid] = {}
+            per = cper
+            if type(obs) is str:          # column record
+                nv = len(value)
+                a = None
+                if nv >= 96:
+                    try:
+                        a = _np.asarray(value)
+                    except (OverflowError, ValueError):
+                        a = None
+                    if a is not None and a.dtype != _np.int64:
+                        a = None      # floats/bignums: exact python fold
+                if a is not None:
+                    # numpy bulk fold: column sums/extrema and the
+                    # power-of-two bin counts (frexp exponent ==
+                    # bit_length) in a handful of vector ops — engine
+                    # queue metrics are small ints, exact in float64
+                    k = len(name)
+                    a = a.reshape(-1, k) if k > 1 else a[:, None]
+                    j = 0
+                    for cname, cobs in name:
+                        col = a[:, j]
+                        j += 1
+                        pst = per.get(cname)
+                        if pst is None:
+                            pst = per[cname] = _fresh_stat(cname)
+                        pst.count += len(col)
+                        pst.total += int(col.sum())
+                        if cobs:
+                            mn = int(col.min())
+                            mx = int(col.max())
+                            pst.kind = "histogram"
+                            if mn < pst.vmin:
+                                pst.vmin = mn
+                            if mx > pst.vmax:
+                                pst.vmax = mx
+                            pbins = pst.bins
+                            pget = pbins.get
+                            pos = col[col > 0]
+                            nz = len(pos)
+                            if nz != len(col):
+                                pbins[0] = pget(0, 0) + len(col) - nz
+                            if nz:
+                                exps = _np.frexp(
+                                    pos.astype(_np.float64))[1] - 1
+                                bv, bc = _np.unique(
+                                    exps, return_counts=True)
+                                for e, cco in zip(bv.tolist(),
+                                                  bc.tolist()):
+                                    bb = 1 << e
+                                    pbins[bb] = pget(bb, 0) + cco
+                    continue
+                if nv >= 24:
+                    k = len(name)
+                    j = 0
+                    for cname, cobs in name:
+                        colv = value[j::k] if k > 1 else value
+                        j += 1
+                        pst = per.get(cname)
+                        if pst is None:
+                            pst = per[cname] = _fresh_stat(cname)
+                        pst.count += len(colv)
+                        pst.total += sum(colv)
+                        if cobs:
+                            vc: Dict[float, int] = {}
+                            vget = vc.get
+                            for v in colv:
+                                vc[v] = vget(v, 0) + 1
+                            mn = min(vc)
+                            mx = max(vc)
+                            pst.kind = "histogram"
+                            if mn < pst.vmin:
+                                pst.vmin = mn
+                            if mx > pst.vmax:
+                                pst.vmax = mx
+                            pbins = pst.bins
+                            pget = pbins.get
+                            for v, c in vc.items():
+                                iv = int(v)
+                                b = (1 << (iv.bit_length() - 1)
+                                     if iv > 0 else 0)
+                                pbins[b] = pget(b, 0) + c
+                    continue
+                cols = []
+                for cname, cobs in name:
+                    pst = per.get(cname)
+                    if pst is None:
+                        pst = per[cname] = _fresh_stat(cname)
+                    cols.append((pst, cobs))
+                k = len(cols)
+                i = 0
+                for v in value:
+                    pst, cobs = cols[i]
+                    i += 1
+                    if i == k:
+                        i = 0
+                    pst.count += 1
+                    pst.total += v
+                    if cobs:
+                        iv = int(v)
+                        b = 1 << (iv.bit_length() - 1) if iv > 0 else 0
+                        pst.kind = "histogram"
+                        if v < pst.vmin:
+                            pst.vmin = v
+                        if v > pst.vmax:
+                            pst.vmax = v
+                        bins = pst.bins
+                        bins[b] = bins.get(b, 0) + 1
+                continue
+            pst = per.get(name)
+            if pst is None:
+                pst = per[name] = _fresh_stat(name)
+            pst.count += 1
+            pst.total += value
+            if obs:
+                v = int(value)
+                b = 1 << (v.bit_length() - 1) if v > 0 else 0
+                pst.kind = "histogram"
+                if value < pst.vmin:
+                    pst.vmin = value
+                if value > pst.vmax:
+                    pst.vmax = value
+                bins = pst.bins
+                bins[b] = bins.get(b, 0) + 1
+
     def drain(self) -> Dict[str, CounterStat]:
         """Merge all buffered deltas into the aggregate stats and return
         the full aggregate (same snapshot-and-clear idiom as Collector).
         Lane structure is preserved in parallel for :meth:`drain_lanes`.
+        A ``lanes_only`` registry maintains the lanes alone and returns
+        ``{}`` here.
 
         Buffers owned by the draining thread are swapped out whole under
         the registry lock (no copy, no delete — the common case: single-
@@ -359,10 +599,11 @@ class CounterRegistry:
                 else:
                     # quad-align: a foreign producer may be mid-extend
                     foreign.append((buf, len(buf) // 4 * 4))
+        merge = self._merge_lanes if self.lanes_only else self._merge
         for buf in own:
-            self._merge(buf)
+            merge(buf)
         for buf, n in foreign:
-            self._merge(islice(buf, n))
+            merge(islice(buf, n))
             del buf[:n]
         return dict(self._merged)
 
@@ -399,6 +640,23 @@ class CounterRegistry:
 
     # -- Event bridge ------------------------------------------------------
 
+    def snapshot_lanes(self) -> Dict[int, Dict[str, CounterStat]]:
+        """Drain and return the per-lane statistics accumulated since
+        the previous snapshot, clearing the merged aggregates — the
+        stat-level sibling of :meth:`snapshot_events` (same snapshot-
+        and-clear delta semantics, no Event round-trip). The batched
+        trace replayer's streaming phase flush consumes this directly:
+        one dict per lane instead of one Event + attrs-encode + attrs-
+        parse per (lane, counter). Ownership of the returned lane dicts
+        transfers to the caller (the registry starts fresh ones), so a
+        per-phase snapshot costs no copying."""
+        self.drain()
+        with self._registry_lock:
+            lanes = self._merged_by_pid
+            self._merged = {}
+            self._merged_by_pid = {}
+        return lanes
+
     def snapshot_events(self, t_ns: Optional[int] = None,
                         path_root: str = "counters") -> List[Event]:
         """Serialize everything since the previous snapshot as zero-duration
@@ -411,10 +669,7 @@ class CounterRegistry:
         tracks."""
         t = t_ns if t_ns is not None else time.perf_counter_ns()
         out: List[Event] = []
-        lanes = self.drain_lanes()
-        with self._registry_lock:
-            self._merged = {}
-            self._merged_by_pid = {}
+        lanes = self.snapshot_lanes()
         for pid in sorted(lanes):
             for name, st in sorted(lanes[pid].items()):
                 out.append(Event(

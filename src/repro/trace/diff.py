@@ -191,13 +191,43 @@ class TraceDiff:
         return "\n".join(lines)
 
 
-def diff(a: ReplayResult, b: ReplayResult) -> TraceDiff:
-    """Diff two replays phase-by-phase. Replays of the same trace align
-    exactly; otherwise phases are aligned by index as long as (op, label)
-    agree, and alignment stops at the first structural mismatch."""
+def diff(a: ReplayResult, b: ReplayResult,
+         align: str = "index") -> TraceDiff:
+    """Diff two replays phase-by-phase.
+
+    ``align="index"`` (the default) zips phases positionally: replays
+    of the same trace align exactly, and alignment stops at the first
+    structural ``(op, label)`` mismatch — right for same-trace what-if
+    comparisons.
+
+    ``align="label"`` aligns *different runs* whose phase indices
+    diverge (extra warmup rounds, a skipped collective, interleaved
+    extra phases): the k-th occurrence of each ``(op, label)`` identity
+    in ``a`` is paired with the k-th occurrence in ``b``, in ``a``'s
+    order; unmatched phases on either side are left out of the diff
+    rather than poisoning the cells after a divergence point. This is
+    the cross-trace mode ``benchmarks/replay_sweep.py --align=label``
+    surfaces."""
     deltas: List[PhaseDelta] = []
-    for pa, pb in zip(a.phases, b.phases):
-        if (pa.op, pa.label) != (pb.op, pb.label):
-            break
-        deltas.extend(_phase_deltas(pa, pb))
+    if align == "index":
+        for pa, pb in zip(a.phases, b.phases):
+            if (pa.op, pa.label) != (pb.op, pb.label):
+                break
+            deltas.extend(_phase_deltas(pa, pb))
+    elif align == "label":
+        by_key: Dict[Tuple[str, str], List[PhaseStats]] = {}
+        for pb in b.phases:
+            by_key.setdefault((pb.op, pb.label), []).append(pb)
+        taken: Dict[Tuple[str, str], int] = {}
+        for pa in a.phases:
+            key = (pa.op, pa.label)
+            i = taken.get(key, 0)
+            cands = by_key.get(key)
+            if cands is None or i >= len(cands):
+                continue
+            taken[key] = i + 1
+            deltas.extend(_phase_deltas(pa, cands[i]))
+    else:
+        raise ValueError(
+            f"align must be 'index' or 'label', got {align!r}")
     return TraceDiff(a_mode=a.mode, b_mode=b.mode, deltas=deltas)

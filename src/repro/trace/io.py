@@ -2,17 +2,28 @@
 
 The writer is the ``emit(dict)`` sink the instrumented layers speak
 (:class:`repro.match.MatchEngine`, :class:`repro.match.Fabric`,
-:class:`repro.comm.progress.ProgressEngine`): one compact JSON object per
-line, header first, ``.gz`` transparently compressed like
-:mod:`repro.core.timeline`.
+:class:`repro.comm.progress.ProgressEngine`): header first, ``.gz``
+transparently compressed like :mod:`repro.core.timeline`.
 
-Emission is buffered: records accumulate in a per-writer list and are
-serialized in batches — one lock acquisition, one ``"\\n".join`` of the
-batch, one file write — so the per-record hot-path cost is a wall-clock
-stamp and a list append under a briefly-held lock (the progress engine
-writes from two threads). ``flush`` forces the buffer to disk;
-``close`` flushes and is idempotent. Batch boundaries are invisible in
-the output: the file bytes are identical to an unbuffered writer's.
+Emission is buffered and, at schema v3 (the default), *compacted*:
+consecutive same-kind ``post``/``arr`` records accumulate in a chunk
+builder and are written as one columnar ``chk`` line per run (delta
+encoding, run-length on constant columns — see
+:mod:`repro.trace.schema`), so long runs cost ~a tenth of the per-op
+bytes and one serialization per chunk instead of per record. Everything
+else (and schema v2, which keeps the pre-compaction per-op encoding
+byte-identical) goes through the PR 4 buffered path: records accumulate
+in a per-writer list and are serialized in batches — one lock
+acquisition, one ``"\\n".join`` of the batch, one file write. ``flush``
+forces builder + buffer to disk; ``close`` flushes and is idempotent.
+
+Reading is streaming: :class:`TraceReader` (also via :func:`iter_trace`)
+validates the header eagerly, then yields records one line at a time,
+expanding v3 chunks lazily — replaying a long trace never materializes
+the full record list. :func:`read_trace` is the eager convenience over
+it. Reader errors are typed: truncated or corrupt lines and unsupported
+versions raise :class:`repro.trace.schema.TraceFormatError` carrying the
+path and 1-based line number.
 """
 from __future__ import annotations
 
@@ -20,18 +31,36 @@ import gzip
 import json
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from ..core.counters import CounterRegistry
-from .schema import (TraceSchemaError, make_header, validate_header,
-                     validate_record)
+from .schema import (REC_ARRIVE, REC_CHUNK, REC_POST, SCHEMA_VERSION,
+                     WRITABLE_VERSIONS, TraceFormatError,
+                     TraceSchemaError, decode_chunk, encode_flags,
+                     encode_ints, encode_outcomes, make_header,
+                     validate_header, validate_record)
 
-# record types that carry live wall-clock timing in schema v2
+# record types that carry live wall-clock timing in schema v2+
 _TIMED = ("post", "arr", "pe")
 
 # records buffered between batch serializations (a batch is ~100 bytes
 # per record, so the default keeps ~25 KiB in flight)
 BUFFER_RECORDS = 256
+
+# rows per v3 chunk: caps the memory a builder holds and keeps chunk
+# lines comfortably sized (~2-6 KiB) for line-oriented tooling
+CHUNK_RECORDS = 512
+
+# chunkable key sets per op kind: a record must match exactly (modulo
+# the optional t_wall stamp) or it is written bare — external producers
+# with extra/missing keys stay valid v3 without touching the chunk path
+_POST_KEYS = frozenset(("t", "rank", "src", "tag", "comm", "seq", "hit"))
+_ARR_KEYS = frozenset(("t", "rank", "src", "tag", "comm", "nb", "seq",
+                       "match"))
+_CHUNK_KEYS = {
+    REC_POST: (_POST_KEYS, frozenset(_POST_KEYS | {"t_wall"})),
+    REC_ARRIVE: (_ARR_KEYS, frozenset(_ARR_KEYS | {"t_wall"})),
+}
 
 # one shared encoder: json.dumps(..., separators=...) builds a fresh
 # JSONEncoder per call, which is pure overhead at trace volume
@@ -48,12 +77,13 @@ class TraceWriter:
     """Append-only trace sink with a versioned header.
 
     Usable as a context manager; ``close`` is idempotent. ``n_records``
-    counts everything emitted including the header (buffered records
-    included — they are on disk after ``flush``/``close``).
+    counts logical records emitted including the header (chunked and
+    buffered records included — everything is on disk after
+    ``flush``/``close``).
 
     With ``wall_clock=True`` (the default) every engine-op / progress
     record is stamped with ``t_wall``, nanoseconds since the writer
-    opened (schema v2), so replays can report measured time dilation.
+    opened (schema v2+), so replays can report measured time dilation.
     The stamp is written into the caller's dict — ``emit`` takes
     ownership of the record, which every in-tree producer satisfies by
     emitting a fresh dict per op. ``wall_clock=False`` is deterministic
@@ -62,23 +92,87 @@ class TraceWriter:
     a byte-identical trace file — the property the workload scenario
     suite's determinism tests pin down.
 
-    ``buffer_records`` bounds the emission buffer (1 = write-through).
+    ``schema`` picks the encoding: 3 (the default) compacts post/arrive
+    runs into columnar chunks; 2 writes the per-op records of the
+    pre-compaction format byte-identically (the committed golden traces
+    stay frozen at v2). ``buffer_records`` bounds the emission buffer
+    (1 = write-through; chunks count as one buffered record).
     """
 
     def __init__(self, path: str, mode: str = "binned",
                  meta: Optional[Dict] = None, wall_clock: bool = True,
-                 buffer_records: int = BUFFER_RECORDS):
+                 buffer_records: int = BUFFER_RECORDS,
+                 schema: Optional[int] = None):
         self.path = str(path)
         self.wall_clock = wall_clock
+        self.schema = SCHEMA_VERSION if schema is None else int(schema)
+        if self.schema not in WRITABLE_VERSIONS:
+            raise TraceSchemaError(
+                f"cannot write schema v{self.schema} (writable: "
+                f"{WRITABLE_VERSIONS})")
         self._lock = threading.Lock()
         self._f = _open(self.path, write=True)
         self._buf: List[Dict] = []
         self._cap = max(int(buffer_records), 1)
+        self._chunk: List[Dict] = []     # pending chunkable op records
+        self._cflags: List[int] = []     # 1 = post row, 0 = arr row
+        self._ctimed = False             # pending chunk carries t_wall
+        self._seqs: Dict[int, int] = {}  # per-rank next expected seq
         self.n_records = 0
         self._t0 = time.perf_counter_ns()
-        self.emit(make_header(mode, meta))
+        self.emit(make_header(mode, meta, schema=self.schema))
+
+    def _flush_chunk_locked(self) -> None:
+        recs = self._chunk
+        if not recs:
+            return
+        flags = self._cflags
+        self._chunk = []
+        self._cflags = []
+        if len(recs) == 1:
+            # a bare record is smaller than a 1-row chunk
+            self._buf.append(recs[0])
+            return
+        out: Dict = {"t": REC_CHUNK, "n": len(recs),
+                     "p": encode_flags(flags)}
+        for key, col in (("r", "rank"), ("s", "src"), ("g", "tag"),
+                         ("c", "comm")):
+            values = [r[col] for r in recs]
+            if any(type(v) is not int for v in values):
+                # non-int payload (an external producer): the delta
+                # codec only round-trips ints — write the run bare
+                self._buf.extend(recs)
+                return
+            enc = encode_ints(values)
+            if key != "c" or enc != 0:   # comm omitted when all-zero
+                out[key] = enc
+        arrs = [r for r, p in zip(recs, flags) if not p]
+        posts = [r for r, p in zip(recs, flags) if p]
+        nbs = [r["nb"] for r in arrs]
+        hits = [r["hit"] for r in posts]
+        matches = [r["match"] for r in arrs]
+        tws = [r["t_wall"] for r in recs] if self._ctimed else []
+        if (any(type(v) is not int for v in nbs + tws)
+                or any(v is not None and type(v) is not int
+                       for v in hits + matches)):
+            self._buf.extend(recs)
+            return
+        if nbs:
+            benc = encode_ints(nbs)
+            if benc != 0:                # nbytes omitted when all-zero
+                out["b"] = benc
+        henc = encode_outcomes(hits) if hits else None
+        if henc is not None:
+            out["h"] = henc
+        menc = encode_outcomes(matches) if matches else None
+        if menc is not None:
+            out["m"] = menc
+        if tws:
+            out["w"] = encode_ints(tws)
+        self._buf.append(out)
 
     def _flush_locked(self) -> None:
+        self._flush_chunk_locked()
         buf = self._buf
         if buf:
             self._f.write("\n".join(map(_encode, buf)) + "\n")
@@ -88,17 +182,48 @@ class TraceWriter:
         with self._lock:
             if self._f is None:
                 raise ValueError(f"trace {self.path} is closed")
-            if (self.wall_clock and rec.get("t") in _TIMED
+            kind = rec.get("t")
+            if (self.wall_clock and kind in _TIMED
                     and "t_wall" not in rec):
                 rec["t_wall"] = time.perf_counter_ns() - self._t0
-            self._buf.append(rec)
             self.n_records += 1
+            is_post = kind == REC_POST
+            if self.schema >= 3 and (is_post or kind == REC_ARRIVE):
+                keys = _CHUNK_KEYS[kind]
+                rk = rec.keys()
+                timed = rk == keys[1]
+                seqs = self._seqs
+                rank = rec.get("rank")
+                seq = rec.get("seq")
+                if ((timed or rk == keys[0]) and type(rank) is int
+                        and type(seq) is int
+                        and seq == seqs.get(rank, 0)):
+                    # chunkable: seq is derivable (dense per-rank
+                    # numbering), so it is dropped from the encoding
+                    if timed != self._ctimed and self._chunk:
+                        self._flush_chunk_locked()
+                    self._ctimed = timed
+                    seqs[rank] = seq + 1
+                    self._chunk.append(rec)
+                    self._cflags.append(1 if is_post else 0)
+                    if len(self._chunk) >= CHUNK_RECORDS:
+                        self._flush_chunk_locked()
+                        if len(self._buf) >= self._cap:
+                            self._flush_locked()
+                    return
+                # bare op record: re-seed the rank's seq counter so
+                # later chunk rows keep reconstructing correctly
+                if type(rank) is int and type(seq) is int:
+                    seqs[rank] = seq + 1
+            self._flush_chunk_locked()
+            self._buf.append(rec)
             if len(self._buf) >= self._cap:
                 self._flush_locked()
 
     def flush(self) -> None:
-        """Serialize and write everything buffered so far (no-op when
-        closed); readers tailing the file see all emitted records."""
+        """Serialize and write everything buffered so far, the pending
+        chunk included (no-op when closed); readers tailing the file see
+        all emitted records."""
         with self._lock:
             if self._f is not None:
                 self._flush_locked()
@@ -131,22 +256,138 @@ class TraceWriter:
         self.close()
 
 
-def read_trace(path: str) -> Tuple[Dict, List[Dict]]:
-    """Load and validate a trace: returns ``(header, records)``. Raises
-    :class:`repro.trace.schema.TraceSchemaError` on a version or shape
-    mismatch — the schema gate ``scripts/verify.sh`` exercises."""
-    header: Optional[Dict] = None
-    records: List[Dict] = []
-    with _open(str(path), write=False) as f:
-        for line in f:
+class TraceReader:
+    """Streaming trace reader: the header is read and validated eagerly
+    (available as ``.header``); iterating yields validated records one
+    at a time with v3 chunks expanded lazily, so consumers never hold
+    the full record list. ``expand=False`` yields raw records (chunks
+    intact) for columnar consumers like the batched replayer.
+
+    Usable as a context manager; iteration closes the file when the
+    stream ends. Malformed input raises
+    :class:`~repro.trace.schema.TraceFormatError` with the offending
+    line number."""
+
+    def __init__(self, path: str, expand: bool = True):
+        self.path = str(path)
+        self.expand = expand
+        self._lineno = 0
+        self._seqs: Dict[int, int] = {}  # per-rank next derived seq
+        self._f = _open(self.path, write=False)
+        try:
+            self.header: Dict = self._read_header()
+        except BaseException:
+            self.close()
+            raise
+
+    def _fail(self, message: str) -> TraceFormatError:
+        return TraceFormatError(message, path=self.path, line=self._lineno)
+
+    def _parse(self, line: str) -> Dict:
+        try:
+            rec = json.loads(line)
+        except ValueError as e:
+            raise self._fail(f"corrupt trace line: {e}") from None
+        if not isinstance(rec, dict):
+            raise self._fail("trace line is not a JSON object")
+        return rec
+
+    def _read_header(self) -> Dict:
+        for line in self._f:
+            self._lineno += 1
             line = line.strip()
             if not line:
                 continue
-            rec = json.loads(line)
-            if header is None:
-                header = validate_header(rec)
-            else:
-                records.append(validate_record(rec))
-    if header is None:
-        raise TraceSchemaError(f"empty trace file (no header): {path}")
-    return header, records
+            rec = self._parse(line)
+            try:
+                return validate_header(rec)
+            except TraceFormatError:
+                raise
+            except TraceSchemaError as e:
+                raise self._fail(str(e)) from None
+        raise self._fail(f"empty trace file (no header): {self.path}")
+
+    def __iter__(self) -> Iterator[Dict]:
+        f = self._f
+        if f is None:
+            raise ValueError(f"trace reader for {self.path} is closed")
+        expand = self.expand
+        v3 = self.header.get("schema", 0) >= 3
+        try:
+            for line in f:
+                self._lineno += 1
+                line = line.strip()
+                if not line:
+                    continue
+                rec = self._parse(line)
+                try:
+                    validate_record(rec)
+                    if v3:
+                        # chunk expansion + derived-seq bookkeeping only
+                        # exist at v3; pre-chunk files skip both
+                        kind = rec.get("t")
+                        if expand and kind == REC_CHUNK:
+                            yield from decode_chunk(rec, self._seqs)
+                            continue
+                        if kind == REC_POST or kind == REC_ARRIVE:
+                            # bare op: re-seed the rank's derived-seq
+                            # counter (mirrors the writer's fallback)
+                            rank, seq = rec.get("rank"), rec.get("seq")
+                            if type(rank) is int and type(seq) is int:
+                                self._seqs[rank] = seq + 1
+                    yield rec
+                except TraceFormatError:
+                    raise
+                except TraceSchemaError as e:
+                    raise self._fail(str(e)) from None
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "TraceReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def iter_trace(path: str, expand: bool = True) -> TraceReader:
+    """Streaming open: ``with iter_trace(p) as r: r.header; for rec in
+    r: ...`` — decodes chunks lazily, one record in memory at a time."""
+    return TraceReader(path, expand=expand)
+
+
+def read_trace(path: str) -> Tuple[Dict, List[Dict]]:
+    """Eagerly load and validate a trace: returns ``(header, records)``
+    with chunks expanded. Raises :class:`repro.trace.schema
+    .TraceFormatError` (a :class:`~repro.trace.schema.TraceSchemaError`)
+    on a version or shape mismatch — the schema gate
+    ``scripts/verify.sh`` exercises."""
+    with TraceReader(path) as r:
+        return r.header, list(r)
+
+
+def convert_trace(src: str, dst: str,
+                  schema: Optional[int] = None) -> Tuple[int, int]:
+    """Re-encode a trace at another schema version (v2 <-> v3) without
+    touching its content: records stream through unchanged — ``t_wall``
+    stamps, phase markers, snapshots and meta are preserved — only the
+    post/arrive encoding changes. Returns ``(n_records, n_ops)``.
+    Converting v2 -> v3 -> v2 is byte-identical; replay statistics are
+    equal in every direction (``scripts/trace_convert.py`` is the
+    CLI)."""
+    n_ops = 0
+    with TraceReader(src) as r:
+        hdr = r.header
+        with TraceWriter(dst, mode=hdr.get("mode", "binned"),
+                         meta=hdr.get("meta") or None, wall_clock=False,
+                         schema=schema) as w:
+            for rec in r:
+                if rec["t"] in (REC_POST, REC_ARRIVE):
+                    n_ops += 1
+                w.emit(rec)
+            return w.n_records, n_ops

@@ -32,6 +32,7 @@ def record_fabric(path: str, mode: str = "binned",
                   registry: Optional[CounterRegistry] = None,
                   meta: Optional[Dict] = None, wall_clock: bool = True,
                   buffer_records: Optional[int] = None,
+                  schema: Optional[int] = None,
                   **fabric_kwargs) -> Iterator[Fabric]:
     """Yield a fabric whose every engine op and collective phase is
     appended to the JSONL trace at ``path``. Emission is buffered
@@ -39,12 +40,14 @@ def record_fabric(path: str, mode: str = "binned",
     everything is flushed by the final snapshot + close on exit — call
     ``fabric.trace.flush()`` mid-run if another process tails the file.
     ``wall_clock=False`` records in deterministic (byte-reproducible)
-    mode."""
+    mode; ``schema`` picks the trace encoding (3 = compact chunks, the
+    default; 2 = the per-op pre-compaction format)."""
     reg = registry if registry is not None else CounterRegistry()
     writer_kwargs = {} if buffer_records is None else {
         "buffer_records": buffer_records}
     with TraceWriter(path, mode=canonical_mode(mode), meta=meta,
-                     wall_clock=wall_clock, **writer_kwargs) as writer:
+                     wall_clock=wall_clock, schema=schema,
+                     **writer_kwargs) as writer:
         fabric = Fabric(mode=mode, registry=reg, trace=writer,
                         **fabric_kwargs)
         try:
@@ -58,6 +61,7 @@ def record_collectives(path: str, mode: str = "binned",
                        registry: Optional[CounterRegistry] = None,
                        meta: Optional[Dict] = None, wall_clock: bool = True,
                        buffer_records: Optional[int] = None,
+                       schema: Optional[int] = None,
                        **fabric_kwargs) -> Iterator[Fabric]:
     """Like :func:`record_fabric`, but also routes the live comm layer
     through the traced fabric for the duration of the block (restoring
@@ -65,7 +69,7 @@ def record_collectives(path: str, mode: str = "binned",
     from ..comm import collectives
     with record_fabric(path, mode=mode, registry=registry, meta=meta,
                        wall_clock=wall_clock, buffer_records=buffer_records,
-                       **fabric_kwargs) as fabric:
+                       schema=schema, **fabric_kwargs) as fabric:
         prev = collectives.matching_fabric()
         collectives.configure_matching(fabric)
         try:

@@ -20,18 +20,40 @@ engine-mode equivalence property ``tests/test_match.py`` pins down),
 replaying under a different mode answers "what would this exact run have
 cost on that engine?" — and replaying under the same mode reproduces the
 recorded match order exactly (``divergences`` stays empty).
+
+Two execution paths share one result type:
+
+  * ``check_matches=True`` (the default) — per-op dispatch with match-
+    order verification: every recorded outcome is compared against the
+    replayed one and ``matches``/``divergences`` are populated. This is
+    the soundness path the acceptance sweeps gate.
+  * ``check_matches=False`` — the **batched streaming** path (the trace-
+    pipeline overhaul): records stream straight off the reader, v3
+    chunks are decoded column-wise into flat per-rank op streams and
+    dispatched through :meth:`repro.match.MatchEngine.run_ops` at every
+    phase boundary (one python call per rank per phase, the PR 4
+    columnar counter sink underneath), so the full record list is never
+    materialized and per-op python dispatch disappears. Counter
+    statistics, phases and findings are identical — pinned against the
+    frozen pre-overhaul replayer (:mod:`repro.trace.legacy_replay`) by
+    ``benchmarks/replay_bench.py``, which also gates the >= 5x
+    throughput this path exists for.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from itertools import accumulate, repeat
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from ..core.counters import CounterRegistry, CounterStat, counter_stats
 from ..core.events import Event
 from ..match import MatchEngine, canonical_mode
-from .io import read_trace
-from .schema import (REC_ARRIVE, REC_PHASE, REC_POST, REC_PROGRESS,
-                     REC_SNAPSHOT)
+from .io import TraceReader, iter_trace
+from .schema import (REC_ARRIVE, REC_CHUNK, REC_PHASE, REC_POST,
+                     REC_PROGRESS, REC_SNAPSHOT, decode_chunk,
+                     decode_flags)
 
 # mirrors repro.comm.progress.LOCK_REGION without importing the comm layer
 # (which would pull in JAX — replay stays JAX-free)
@@ -46,7 +68,7 @@ class PhaseStats:
     """Counter deltas attributed to one recorded phase, per rank.
 
     ``wall_ns`` is the measured live wall-clock span of the phase's
-    recorded ops (schema v2 ``t_wall`` stamps); ``None`` for v1 traces
+    recorded ops (schema v2+ ``t_wall`` stamps); ``None`` for v1 traces
     or deterministic-mode recordings."""
 
     index: int
@@ -61,24 +83,105 @@ class PhaseStats:
         return self.stats.get(rank, {}).get(name)
 
 
-@dataclasses.dataclass
 class ReplayResult:
-    mode: str
-    progress_mode: Optional[str]
-    header: Dict
-    matches: List[Tuple[int, str, int, Optional[int]]]
-    divergences: List[Dict]
-    phases: List[PhaseStats]
-    events: List[Event]
-    registry: CounterRegistry
-    recorded_stats: Optional[Dict[int, Dict[str, CounterStat]]] = None
+    """Everything one replay produced. ``events`` (the counter snapshot
+    Events plus modeled progress-lane Events the detectors consume) is
+    **materialized lazily** from the per-phase lane statistics: the
+    batched streaming path never pays the Event + attrs encode cost for
+    consumers that only read ``phases`` (the differ, the bench gates) —
+    accessing ``.events`` builds the identical event list the eager
+    per-op path would have produced."""
+
+    def __init__(self, mode: str, progress_mode: Optional[str],
+                 header: Dict,
+                 matches: List[Tuple[int, str, int, Optional[int]]],
+                 divergences: List[Dict], phases: List[PhaseStats],
+                 registry: CounterRegistry,
+                 events: Optional[List[Event]] = None,
+                 progress_events: Optional[List[Event]] = None,
+                 pe_records: Optional[List[Dict]] = None,
+                 recorded_stats: Optional[
+                     Dict[int, Dict[str, CounterStat]]] = None,
+                 raw_snap: Optional[Dict] = None,
+                 n_ops: int = 0, phase_ns: int = PHASE_NS):
+        self.mode = mode
+        self.progress_mode = progress_mode
+        self.header = header
+        self.matches = matches
+        self.divergences = divergences
+        self.phases = phases
+        self.registry = registry
+        # engine ops replayed; on the batched path (check_matches=False)
+        # ``matches`` stays empty, so this is the op count to report
+        self.n_ops = n_ops
+        self.phase_ns = phase_ns
+        self._events = events
+        self._pe_records = pe_records or []
+        # eager results pass the modeled progress events in (they are
+        # also inside `events` already); lazy ones model them on demand
+        # from the pe records
+        self._progress_events: Optional[List[Event]] = (
+            (progress_events or []) if events is not None else None)
+        self._recorded_stats = recorded_stats
+        self._raw_snap = raw_snap
+
+    @property
+    def recorded_stats(self) -> Optional[
+            Dict[int, Dict[str, CounterStat]]]:
+        """The record-time final counter snapshot (the trace's ``snap``
+        record), parsed on first access."""
+        if self._recorded_stats is None and self._raw_snap is not None:
+            self._recorded_stats = _parse_snap(self._raw_snap)
+            self._raw_snap = None
+        return self._recorded_stats
+
+    @property
+    def progress_events(self) -> List[Event]:
+        """Modeled progress-engine lock Events (lazy: the queue model
+        only runs when something consumes the events)."""
+        ev = self._progress_events
+        if ev is None:
+            ev = self._progress_events = (
+                replay_progress(self._pe_records, self.progress_mode)
+                if self._pe_records and self.progress_mode else [])
+        return ev
+
+    @property
+    def events(self) -> List[Event]:
+        ev = self._events
+        if ev is None:
+            ev = self._events = (self._phase_events()
+                                 + self.progress_events)
+        return ev
+
+    def _phase_events(self) -> List[Event]:
+        """Counter snapshot Events rebuilt from the per-phase lane stats
+        (same names, paths, timestamps, attrs and ordering as
+        :meth:`repro.core.counters.CounterRegistry.snapshot_events` at
+        every phase flush)."""
+        from ..core.counters import COUNTER_CATEGORY, COUNTER_PREFIX
+        out: List[Event] = []
+        for phase in self.phases:
+            t = (phase.index + 1) * self.phase_ns
+            for pid in sorted(phase.stats):
+                per = phase.stats[pid]
+                for name in sorted(per):
+                    attrs = per[name].to_attrs()
+                    attrs["phase"] = phase.label
+                    attrs["phase_index"] = phase.index
+                    out.append(Event(
+                        name=COUNTER_PREFIX + name,
+                        path=("counters",) + tuple(name.split(".")),
+                        category=COUNTER_CATEGORY, t_start=t, t_end=t,
+                        pid=pid, tid=0, attrs=attrs))
+        return out
 
     def totals(self) -> Dict[str, CounterStat]:
         """Replayed counter statistics aggregated across ranks."""
         return counter_stats(self.events)
 
     def measured_wall_s(self) -> Optional[float]:
-        """Total measured live wall time across phases (v2 ``t_wall``
+        """Total measured live wall time across phases (v2+ ``t_wall``
         stamps), or ``None`` when the trace carries no timing (v1, or
         recorded in deterministic mode)."""
         spans = [p.wall_ns for p in self.phases if p.wall_ns is not None]
@@ -106,6 +209,23 @@ def _parse_snap(rec: Dict) -> Dict[int, Dict[str, CounterStat]]:
         out[int(pid)] = {name: CounterStat.from_attrs(attrs)
                          for name, attrs in per.items()}
     return out
+
+
+def _expand_stream(records: Iterable[Dict]) -> Iterable[Dict]:
+    """Expand v3 chunks inline (threading the per-rank derived-seq
+    counters) so the per-op verification path sees the per-op record
+    stream regardless of how the source was read."""
+    seqs: Dict[int, int] = {}
+    for rec in records:
+        kind = rec.get("t")
+        if kind == REC_CHUNK:
+            yield from decode_chunk(rec, seqs)
+            continue
+        if kind == REC_POST or kind == REC_ARRIVE:
+            rank, seq = rec.get("rank"), rec.get("seq")
+            if type(rank) is int and type(seq) is int:
+                seqs[rank] = seq + 1
+        yield rec
 
 
 def replay_progress(pe_records: Sequence[Dict], mode: str = "incoming",
@@ -207,21 +327,51 @@ class Replayer:
     ``mode`` overrides the engine mode (default: the recorded one);
     ``progress_mode`` picks the queue discipline for progress-engine lane
     events (default: leave them out unless the trace has any, then replay
-    as ``"incoming"``)."""
+    as ``"incoming"``). ``check_matches=False`` selects the batched
+    streaming path (no per-op outcome verification — see the module
+    docstring)."""
 
     def __init__(self, mode: Optional[str] = None,
                  progress_mode: Optional[str] = None,
-                 phase_ns: int = PHASE_NS):
+                 phase_ns: int = PHASE_NS, check_matches: bool = True):
         self.mode = mode
         self.progress_mode = progress_mode
         self.phase_ns = phase_ns
+        self.check_matches = check_matches
 
-    def run(self, source: Union[str, Tuple[Dict, List[Dict]]]
-            ) -> ReplayResult:
+    def _open(self, source
+              ) -> Tuple[Dict, Iterable[Dict]]:
+        """(header, record stream). Paths stream through a
+        :class:`~repro.trace.io.TraceReader` (raw for the batched path,
+        expanded for verification); ``(header, records)`` tuples and
+        open readers are consumed as given."""
+        if isinstance(source, TraceReader):
+            records: Iterable[Dict] = source
+            if self.check_matches and not source.expand:
+                # the verifying loop speaks per-op records only — a raw
+                # reader's chunks must be expanded inline
+                records = _expand_stream(records)
+            return source.header, records
         if isinstance(source, (tuple, list)):
             header, records = source
-        else:
-            header, records = read_trace(source)
+            if self.check_matches:
+                records = _expand_stream(records)
+            return header, records
+        reader = iter_trace(str(source), expand=self.check_matches)
+        return reader.header, reader
+
+    def run(self, source: Union[str, TraceReader,
+                                Tuple[Dict, Sequence[Dict]]]
+            ) -> ReplayResult:
+        header, records = self._open(source)
+        if self.check_matches:
+            return self._run_checked(header, records)
+        return self._run_batched(header, records)
+
+    # -- per-op verification path -----------------------------------------
+
+    def _run_checked(self, header: Dict,
+                     records: Iterable[Dict]) -> ReplayResult:
         mode = canonical_mode(self.mode or header.get("mode", "binned"))
 
         registry = CounterRegistry()
@@ -293,19 +443,272 @@ class Replayer:
         flush_phase()
 
         progress_mode = self.progress_mode
+        progress_events: List[Event] = []
         if pe_records:
             progress_mode = progress_mode or "incoming"
-            events.extend(replay_progress(pe_records, progress_mode))
+            progress_events = replay_progress(pe_records, progress_mode)
+            events.extend(progress_events)
 
         return ReplayResult(
             mode=mode, progress_mode=progress_mode, header=header,
             matches=matches, divergences=divergences, phases=phases,
-            events=events, registry=registry,
-            recorded_stats=recorded_stats)
+            events=events, progress_events=progress_events,
+            pe_records=pe_records, registry=registry,
+            recorded_stats=recorded_stats, n_ops=len(matches))
+
+    # -- batched streaming path -------------------------------------------
+
+    def _run_batched(self, header: Dict,
+                     records: Iterable[Dict]) -> ReplayResult:
+        """Decode straight into the batch engine APIs: chunk columns
+        become flat ``run_ops`` quint streams per rank, dispatched once
+        per (rank, phase). Recorded ``seq``/outcome columns are not even
+        decoded — matching outcomes are deterministic, and the
+        verification path exists when they must be re-checked."""
+        mode = canonical_mode(self.mode or header.get("mode", "binned"))
+
+        # lanes-only: every consumer of this registry reads per-rank
+        # lane deltas (the per-phase snapshots); the cross-lane
+        # aggregate would double the drain work unread
+        registry = CounterRegistry(lanes_only=True)
+        engines: Dict[int, MatchEngine] = {}
+
+        def engine(rank: int) -> MatchEngine:
+            eng = engines.get(rank)
+            if eng is None:
+                eng = engines[rank] = MatchEngine(
+                    rank=rank, mode=mode, registry=registry.lane(rank))
+            return eng
+
+        phases: List[PhaseStats] = []
+        pe_records: List[Dict] = []
+        raw_snap: Optional[Dict] = None
+        current = PhaseStats(index=0, label="prologue", op="phase")
+        # rank -> ordered dispatch segments, each one batch-engine call:
+        #   [1, tag, comm, 0,  srcs]   post_recv_batch / post_recv
+        #   [0, tag, comm, nb, srcs]   arrive_batch / arrive
+        #   [3, src, comm, 0,  tags]   post_recv_tags
+        #   [4, src, comm, nb, tags]   arrive_tags
+        #   [2, 0,   0,    0,  quints] run_ops (mixed/varying envelope)
+        pending: Dict[int, List[List]] = {}
+        get_segs = pending.get
+        wall_lo: Optional[int] = None    # t_wall span of current phase
+        wall_hi = 0
+        n_ops = 0
+
+        def flush_ops() -> None:
+            for rank in sorted(pending):
+                eng = engine(rank)
+                for kind_, a, comm_, nb_, items in pending[rank]:
+                    if kind_ == 1:
+                        if len(items) > 1:
+                            eng.post_recv_batch(items, a, comm_)
+                        else:
+                            eng.post_recv(items[0], a, comm_)
+                    elif kind_ == 0:
+                        if len(items) > 1:
+                            eng.arrive_batch(items, a, comm_, nb_)
+                        else:
+                            eng.arrive(items[0], a, comm_, nb_)
+                    elif kind_ == 2:
+                        eng.run_ops(items)
+                    elif kind_ == 3:
+                        eng.post_recv_tags(a, items, comm_)
+                    else:
+                        eng.arrive_tags(a, items, comm_, nb_)
+            pending.clear()
+
+        def flush_phase() -> None:
+            # streaming flush: per-rank stats come straight off the
+            # columnar counter-sink drain (snapshot_lanes) — no Event
+            # materialization, no attrs round-trip; ReplayResult builds
+            # the identical Events lazily if anything asks for them
+            nonlocal wall_lo
+            flush_ops()
+            current.stats = registry.snapshot_lanes()
+            if wall_lo is not None:
+                current.wall_ns = wall_hi - wall_lo
+                wall_lo = None
+            phases.append(current)
+
+        for rec in records:
+            kind = rec["t"]
+            if kind == REC_CHUNK:
+                n = rec["n"]
+                n_ops += n
+                w = rec.get("w")
+                if w is not None:
+                    # t_wall is monotone within a chunk: the span is
+                    # first value .. cumulative sum of the delta list
+                    if type(w) is int:
+                        lo = hi = w
+                    else:
+                        lo, hi = w[0], sum(w)
+                    if wall_lo is None:
+                        wall_lo = lo
+                    wall_hi = hi
+                p = rec["p"]
+                r = rec["r"]
+                s = rec["s"]
+                g = rec["g"]
+                c = rec.get("c", 0)
+                b = rec.get("b", 0)
+                env_const = (type(g) is int and type(c) is int
+                             and type(b) is int)
+                if type(p) is int and type(r) is int and env_const:
+                    # uniform-kind single-rank constant-envelope chunk
+                    # -> one post_recv_batch/arrive_batch segment
+                    segs = get_segs(r)
+                    if segs is None:
+                        segs = pending[r] = []
+                    segs.append([p, g, c, 0 if p else b,
+                                 [s] * n if type(s) is int
+                                 else list(accumulate(s))])
+                    continue
+                if (type(p) is int and type(r) is int
+                        and type(s) is int and type(c) is int
+                        and type(b) is int):
+                    # tag-scan chunk (fixed src, varying tags) -> one
+                    # post_recv_tags/arrive_tags segment
+                    segs = get_segs(r)
+                    if segs is None:
+                        segs = pending[r] = []
+                    segs.append([3 if p else 4, s, c, 0 if p else b,
+                                 list(accumulate(g))])
+                    continue
+                if n >= 64:
+                    # large multi-rank chunk: expand columns and group
+                    # rows by rank (cumsum over the delta lists, one
+                    # stable argsort) at C speed
+                    fa = (np.full(n, p, dtype=np.int64)
+                          if type(p) is int
+                          else np.asarray(decode_flags(p, n),
+                                          dtype=np.int64))
+                    ra = (np.full(n, r, dtype=np.int64)
+                          if type(r) is int
+                          else np.cumsum(np.asarray(r, dtype=np.int64)))
+                    sa = (np.full(n, s, dtype=np.int64)
+                          if type(s) is int
+                          else np.cumsum(np.asarray(s, dtype=np.int64)))
+                    order = np.argsort(ra, kind="stable")
+                    sr = ra[order]
+                    cuts = np.flatnonzero(sr[1:] != sr[:-1]) + 1
+                    if env_const:
+                        # per rank, split into kind runs -> batch
+                        # segments with the src block lifted wholesale
+                        for idx in np.split(order, cuts):
+                            rank = int(ra[idx[0]])
+                            segs = get_segs(rank)
+                            if segs is None:
+                                segs = pending[rank] = []
+                            subf = fa[idx]
+                            kcuts = np.flatnonzero(
+                                subf[1:] != subf[:-1]) + 1
+                            for ridx in (np.split(idx, kcuts)
+                                         if len(kcuts) else (idx,)):
+                                k_ = int(fa[ridx[0]])
+                                segs.append(
+                                    [k_, g, c, 0 if k_ else b,
+                                     sa[ridx].tolist()])
+                        continue
+                    # varying envelope: quint matrix -> run_ops segment
+                    m = np.empty((n, 5), dtype=np.int64)
+                    m[:, 0] = fa
+                    m[:, 1] = sa
+                    m[:, 2] = (g if type(g) is int
+                               else np.cumsum(np.asarray(
+                                   g, dtype=np.int64)))
+                    if type(b) is int:
+                        m[:, 3] = np.where(fa == 1, 0, b)
+                    else:
+                        m[:, 3] = 0
+                        m[fa == 0, 3] = np.cumsum(np.asarray(
+                            b, dtype=np.int64))
+                    m[:, 4] = (c if type(c) is int
+                               else np.cumsum(np.asarray(
+                                   c, dtype=np.int64)))
+                    for idx in np.split(order, cuts):
+                        rank = int(ra[idx[0]])
+                        segs = get_segs(rank)
+                        if segs is None:
+                            segs = pending[rank] = []
+                        segs.append([2, 0, 0, 0,
+                                     m[idx].ravel().tolist()])
+                    continue
+                flags = (repeat(p, n) if type(p) is int
+                         else decode_flags(p, n))
+                ranks = repeat(r, n) if type(r) is int else accumulate(r)
+                srcs = repeat(s, n) if type(s) is int else accumulate(s)
+                tags = repeat(g, n) if type(g) is int else accumulate(g)
+                comms = repeat(c, n) if type(c) is int else accumulate(c)
+                nbs = (repeat(b) if type(b) is int
+                       else iter(list(accumulate(b))))
+                for p_, r_, s_, g_, c_ in zip(flags, ranks, srcs, tags,
+                                              comms):
+                    nb_ = 0 if p_ else next(nbs)
+                    segs = get_segs(r_)
+                    if segs is None:
+                        segs = pending[r_] = [[p_, g_, c_, nb_, [s_]]]
+                        continue
+                    last = segs[-1]
+                    if (last[0] == p_ and last[1] == g_
+                            and last[2] == c_ and last[3] == nb_):
+                        last[4].append(s_)
+                    else:
+                        segs.append([p_, g_, c_, nb_, [s_]])
+                continue
+            tw = rec.get("t_wall")
+            if tw is not None:
+                if wall_lo is None:
+                    wall_lo = tw
+                wall_hi = tw
+            if kind == REC_POST or kind == REC_ARRIVE:
+                n_ops += 1
+                r = rec["rank"]
+                p_ = 1 if kind == REC_POST else 0
+                g_ = rec["tag"]
+                c_ = rec.get("comm", 0)
+                nb_ = 0 if p_ else rec.get("nb", 0)
+                s_ = rec["src"]
+                segs = get_segs(r)
+                if segs is None:
+                    pending[r] = [[p_, g_, c_, nb_, [s_]]]
+                else:
+                    last = segs[-1]
+                    if (last[0] == p_ and last[1] == g_
+                            and last[2] == c_ and last[3] == nb_):
+                        last[4].append(s_)
+                    else:
+                        segs.append([p_, g_, c_, nb_, [s_]])
+            elif kind == REC_PHASE:
+                flush_phase()
+                current = PhaseStats(
+                    index=len(phases), label=rec["label"], op=rec["op"],
+                    attrs={k: v for k, v in rec.items()
+                           if k not in ("t", "op", "label")})
+            elif kind == REC_PROGRESS:
+                pe_records.append(rec)
+            elif kind == REC_SNAPSHOT:
+                raw_snap = rec
+        flush_phase()
+
+        progress_mode = self.progress_mode
+        if pe_records:
+            progress_mode = progress_mode or "incoming"
+
+        return ReplayResult(
+            mode=mode, progress_mode=progress_mode, header=header,
+            matches=[], divergences=[], phases=phases,
+            registry=registry, pe_records=pe_records,
+            raw_snap=raw_snap, n_ops=n_ops, phase_ns=self.phase_ns)
 
 
-def replay(source: Union[str, Tuple[Dict, List[Dict]]],
+def replay(source: Union[str, TraceReader, Tuple[Dict, Sequence[Dict]]],
            mode: Optional[str] = None,
-           progress_mode: Optional[str] = None) -> ReplayResult:
-    """One-call replay: ``replay(path, mode="linear")``."""
-    return Replayer(mode=mode, progress_mode=progress_mode).run(source)
+           progress_mode: Optional[str] = None,
+           check_matches: bool = True) -> ReplayResult:
+    """One-call replay: ``replay(path, mode="linear")``;
+    ``check_matches=False`` streams batched (fast, no per-op outcome
+    verification)."""
+    return Replayer(mode=mode, progress_mode=progress_mode,
+                    check_matches=check_matches).run(source)

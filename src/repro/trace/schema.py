@@ -21,10 +21,46 @@ following line is a record tagged by its ``"t"`` field:
              nanosecond timestamps.
   ``snap``   counter snapshot: per-pid ``stats`` in the
              :meth:`repro.core.counters.CounterStat.to_attrs` encoding.
+  ``chk``    **schema v3** chunk: a run of consecutive ``post``/``arr``
+             records (kinds freely mixed), columnar-encoded (see
+             below). One chunk line replaces up to
+             :data:`~repro.trace.io.CHUNK_RECORDS` per-op lines.
+
+Chunk layout (v3). A chunk carries ``n`` (row count) plus one encoded
+column per logical field, single-letter keys::
+
+  {"t":"chk","n":N,"p":F,"r":C,"s":C,"g":C,"c":C?,"b":C?,"h":O?,
+   "m":O?,"w":C?}
+
+``p`` (is-post flags, 1 = ``post`` row, 0 = ``arr`` row) is a bare int
+when uniform, else a run-length pair list ``[v0,n0,v1,n1,...]`` — an
+exchange phase's post/arrive/late-post stages become three pairs.
+Integer columns ``C`` — ``r`` rank, ``s`` src, ``g`` tag, ``c`` comm,
+``b`` nbytes, ``w`` t_wall — are either a bare int (run-length-constant
+column: the value shared by every row) or a **delta list**
+``[v0, v1-v0, v2-v1, ...]`` (phase-local envelopes and monotone
+``t_wall`` streams make the deltas small, which is where the byte
+shrink comes from). Outcome columns ``O`` (``h`` = post ``hit``, ``m``
+= arr ``match``) are nullable and never delta-encoded: the raw value
+list, or omitted when every value is null (the common miss/park case).
+``c`` defaults to 0 when absent. ``b``/``h`` apply only to their kind's
+rows and have that sub-population's length (``b``/``m`` over arr rows,
+``h`` over post rows); ``w`` is present only when the compacted records
+carried timing.
+
+Per-op ``seq`` numbers are **derived, not stored**: every engine
+numbers its ops densely from 0 in emission order, so the decoder
+reconstructs ``seq`` with one per-rank counter threaded across the
+whole stream (bare ``post``/``arr`` records re-seed their rank's
+counter from their explicit ``seq``). The writer verifies the invariant
+per record and falls back to bare records whenever a producer's seqs
+are not dense, so expanding a chunk reproduces the per-op records
+exactly — key order included — and converting a v2 trace to v3 and
+back is byte-identical.
 
 Version history:
 
-  * **v1** — the record types above, no per-op timing.
+  * **v1** — the per-op record types above, no per-op timing.
   * **v2** — ``post``/``arr``/``pe`` records may carry ``t_wall``:
     live wall-clock nanoseconds since the writer opened, stamped by
     :class:`repro.trace.io.TraceWriter` (``wall_clock=True``, the
@@ -32,18 +68,29 @@ Version history:
     v1 traces never have it — so readers treat it as advisory timing
     (the replayer surfaces it as measured per-phase wall time /
     dilation).
+  * **v3** — compact chunked encoding: the post/arrive streams are
+    delta-encoded into columnar ``chk`` records. Bare ``post``/``arr``
+    records remain legal in a v3 file (the writer falls back to them
+    for single-record runs and nonconforming producer dicts); readers
+    expand chunks transparently, so every consumer of v1/v2 records
+    keeps working unchanged.
 
 Schema changes MUST bump :data:`SCHEMA_VERSION`; readers accept every
-version in :data:`SUPPORTED_VERSIONS` (currently v1 and v2 — v2 only
-adds an optional field) and reject anything newer
-(``scripts/verify.sh`` gates on this round-tripping).
+version in :data:`SUPPORTED_VERSIONS` and reject anything newer
+(``scripts/verify.sh`` gates on this round-tripping). Writers speak
+:data:`WRITABLE_VERSIONS` — ``scripts/trace_convert.py`` re-encodes a
+trace in either direction.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from itertools import accumulate
+from typing import Dict, List, Optional
 
-SCHEMA_VERSION = 2
-SUPPORTED_VERSIONS = (1, 2)
+SCHEMA_VERSION = 3
+SUPPORTED_VERSIONS = (1, 2, 3)
+# versions a TraceWriter can emit: 2 = per-op records (the pre-compaction
+# encoding, byte-identical to the PR 4 writer), 3 = chunked
+WRITABLE_VERSIONS = (2, 3)
 TRACE_FORMAT = "repro.trace"
 
 REC_HEADER = "hdr"
@@ -52,6 +99,7 @@ REC_ARRIVE = "arr"
 REC_PHASE = "phase"
 REC_PROGRESS = "pe"
 REC_SNAPSHOT = "snap"
+REC_CHUNK = "chk"
 
 # required fields per record type (beyond "t")
 _REQUIRED = {
@@ -60,6 +108,7 @@ _REQUIRED = {
     REC_PHASE: ("op", "label"),
     REC_PROGRESS: ("ev", "ts"),
     REC_SNAPSHOT: ("stats",),
+    REC_CHUNK: ("n", "p", "r", "s", "g"),
 }
 
 
@@ -67,9 +116,26 @@ class TraceSchemaError(ValueError):
     """A trace file does not conform to the schema this reader speaks."""
 
 
-def make_header(mode: str, meta: Optional[Dict] = None) -> Dict:
+class TraceFormatError(TraceSchemaError):
+    """A trace file is malformed at a specific line: truncated or corrupt
+    JSON, an unsupported version, or an invalid record/chunk shape. The
+    reader raises this (with ``path`` and 1-based ``line``) instead of
+    letting ``json.JSONDecodeError`` / bare ``ValueError`` leak
+    mid-stream; it subclasses :class:`TraceSchemaError` so existing
+    handlers keep working."""
+
+    def __init__(self, message: str, path: Optional[str] = None,
+                 line: Optional[int] = None):
+        where = f"{path or '<trace>'}:{line if line is not None else '?'}"
+        super().__init__(f"{where}: {message}")
+        self.path = path
+        self.line = line
+
+
+def make_header(mode: str, meta: Optional[Dict] = None,
+                schema: int = SCHEMA_VERSION) -> Dict:
     return {"t": REC_HEADER, "format": TRACE_FORMAT,
-            "schema": SCHEMA_VERSION, "mode": mode, "meta": meta or {}}
+            "schema": schema, "mode": mode, "meta": meta or {}}
 
 
 def validate_header(rec: Dict) -> Dict:
@@ -87,12 +153,163 @@ def validate_header(rec: Dict) -> Dict:
     return rec
 
 
+_REQUIRED_SETS = {kind: frozenset(fields)
+                  for kind, fields in _REQUIRED.items()}
+
+
 def validate_record(rec: Dict) -> Dict:
     kind = rec.get("t")
-    if kind not in _REQUIRED:
+    req = _REQUIRED_SETS.get(kind)
+    if req is None:
         raise TraceSchemaError(f"unknown record type {kind!r}")
-    missing = [f for f in _REQUIRED[kind] if f not in rec]
-    if missing:
+    # one C-level subset check per record on the happy path; the field
+    # list is only reconstructed to name what's missing
+    if not req <= rec.keys():
+        missing = [f for f in _REQUIRED[kind] if f not in rec]
         raise TraceSchemaError(
             f"{kind!r} record missing required field(s) {missing}")
     return rec
+
+
+# -- v3 column codec -------------------------------------------------------
+
+def encode_ints(values: List[int]):
+    """Encode one integer column: a bare int when the column is constant
+    (run-length on constant columns), else the delta list
+    ``[v0, v1-v0, ...]``. Inverse of :func:`decode_ints`."""
+    first = values[0]
+    out = [first]
+    prev = first
+    constant = True
+    for v in values[1:]:
+        out.append(v - prev)
+        constant = constant and v == prev
+        prev = v
+    return first if constant else out
+
+
+def decode_ints(enc, n: int, name: str = "column") -> List[int]:
+    """Expand one encoded integer column back to its ``n`` row values."""
+    if type(enc) is list:
+        if len(enc) != n:
+            raise TraceSchemaError(
+                f"chunk {name} column has {len(enc)} entries for "
+                f"{n} rows")
+        return list(accumulate(enc))
+    if type(enc) is not int:
+        raise TraceSchemaError(
+            f"chunk {name} column must be an int or a delta list, "
+            f"got {type(enc).__name__}")
+    return [enc] * n
+
+
+def encode_outcomes(values: List[Optional[int]]):
+    """Encode one nullable outcome column (``hit``/``match``): ``None``
+    when every row is null, else the raw value list (outcomes are
+    recorded seqs with null gaps — deltas would not round-trip)."""
+    for v in values:
+        if v is not None:
+            return list(values)
+    return None
+
+
+def decode_outcomes(enc, n: int, name: str = "outcome"
+                    ) -> List[Optional[int]]:
+    if enc is None:
+        return [None] * n
+    if type(enc) is not list or len(enc) != n:
+        raise TraceSchemaError(
+            f"chunk {name} column must be null or a {n}-entry list")
+    return enc
+
+
+def encode_flags(values: List[int]):
+    """Encode the is-post column: a bare int when uniform, else
+    run-length pairs ``[v0, n0, v1, n1, ...]`` (an op stream is runs of
+    posts and runs of arrivals — pairs beat per-row deltas)."""
+    first = values[0]
+    out: List[int] = []
+    run_v, run_n = first, 0
+    uniform = True
+    for v in values:
+        if v == run_v:
+            run_n += 1
+        else:
+            out += (run_v, run_n)
+            run_v, run_n = v, 1
+            uniform = False
+    if uniform:
+        return first
+    out += (run_v, run_n)
+    return out
+
+
+def decode_flags(enc, n: int) -> List[int]:
+    """Expand the is-post column back to one 0/1 flag per row."""
+    if type(enc) is int:
+        if enc not in (0, 1):
+            raise TraceSchemaError(f"chunk p flag must be 0 or 1, "
+                                   f"got {enc!r}")
+        return [enc] * n
+    if type(enc) is not list or len(enc) % 2:
+        raise TraceSchemaError(
+            "chunk p column must be an int or [value, run, ...] pairs")
+    out: List[int] = []
+    it = iter(enc)
+    for v, run in zip(it, it):
+        if v not in (0, 1) or type(run) is not int or run < 1:
+            raise TraceSchemaError(
+                f"invalid chunk p run ({v!r}, {run!r})")
+        out += [v] * run
+    if len(out) != n:
+        raise TraceSchemaError(
+            f"chunk p runs cover {len(out)} rows, chunk has {n}")
+    return out
+
+
+def decode_chunk(rec: Dict, seqs: Optional[Dict[int, int]] = None
+                 ) -> List[Dict]:
+    """Expand a validated ``chk`` record into its per-op records (exact
+    v2 key order, ``t_wall`` last when present). ``seqs`` is the
+    per-rank next-seq counter threaded across the stream by the caller
+    (:class:`repro.trace.io.TraceReader`); it is updated in place. With
+    ``seqs=None`` a fresh numbering starts at this chunk — only correct
+    for a chunk inspected in isolation."""
+    n = rec["n"]
+    if type(n) is not int or n < 1:
+        raise TraceSchemaError(f"chunk row count must be a positive int, "
+                               f"got {n!r}")
+    if seqs is None:
+        seqs = {}
+    try:
+        flags = decode_flags(rec["p"], n)
+        ranks = decode_ints(rec["r"], n, "r")
+        srcs = decode_ints(rec["s"], n, "s")
+        tags = decode_ints(rec["g"], n, "g")
+    except KeyError as e:
+        raise TraceSchemaError(f"chunk missing column {e.args[0]!r}") \
+            from None
+    comms = decode_ints(rec.get("c", 0), n, "c")
+    n_post = sum(flags)
+    n_arr = n - n_post
+    nbs = iter(decode_ints(rec.get("b", 0), n_arr, "b") if n_arr
+               else ())
+    hits = iter(decode_outcomes(rec.get("h"), n_post, "h"))
+    matches = iter(decode_outcomes(rec.get("m"), n_arr, "m"))
+    tws = (iter(decode_ints(rec["w"], n, "w")) if "w" in rec
+           else None)
+    out: List[Dict] = []
+    for p, r, s, g, c in zip(flags, ranks, srcs, tags, comms):
+        q = seqs.get(r, 0)
+        seqs[r] = q + 1
+        if p:
+            op = {"t": REC_POST, "rank": r, "src": s, "tag": g,
+                  "comm": c, "seq": q, "hit": next(hits)}
+        else:
+            op = {"t": REC_ARRIVE, "rank": r, "src": s, "tag": g,
+                  "comm": c, "nb": next(nbs), "seq": q,
+                  "match": next(matches)}
+        if tws is not None:
+            op["t_wall"] = next(tws)
+        out.append(op)
+    return out

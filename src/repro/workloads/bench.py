@@ -138,12 +138,14 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
                  progress_mode: str = "incoming", seed: int = 0,
                  size: str = "full", params: Optional[Params] = None,
                  trace_path: Optional[str] = None,
-                 wall_clock: bool = True) -> ScenarioRun:
+                 wall_clock: bool = True,
+                 trace_schema: Optional[int] = None) -> ScenarioRun:
     """Run one scenario end-to-end under one engine/progress config:
     drive the fabric, snapshot counters, model the progress lanes, run
     every detector. With ``trace_path`` the run is recorded to a
     replayable JSONL trace (``wall_clock=False`` for the byte-identical
-    deterministic form)."""
+    deterministic form; ``trace_schema=2`` for the pre-compaction
+    per-op encoding the committed goldens are frozen at)."""
     if isinstance(sc, str):
         sc = get(sc)
     p = sc.params(size, **(params or {}))
@@ -156,6 +158,7 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
     if trace_path is not None:
         writer = TraceWriter(
             trace_path, mode=engine_mode, wall_clock=wall_clock,
+            schema=trace_schema,
             meta={"scenario": sc.name, "seed": seed, "size": size,
                   "params": dict(sorted(p.items())),
                   "progress_mode": progress_mode})

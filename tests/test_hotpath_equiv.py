@@ -68,7 +68,9 @@ def test_golden_traces_are_byte_identical(tmp_path):
         path = str(tmp_path / "t.jsonl")
         run = workloads.run_scenario(name, engine_mode=mode,
                                      seed=g["seed"], size=size,
-                                     trace_path=path, wall_clock=False)
+                                     trace_path=path, wall_clock=False,
+                                     trace_schema=g.get("trace_schema",
+                                                        2))
         digest = hashlib.sha256(open(path, "rb").read()).hexdigest()
         assert digest == want["sha256"], key
         assert run.finding_kinds == want["findings"], key
@@ -84,7 +86,8 @@ def test_committed_golden_trace_file(tmp_path):
     ref = os.path.join(GOLDEN_DIR, g["golden_trace"]["file"])
     path = str(tmp_path / "t.jsonl")
     workloads.run_scenario(name, engine_mode=mode, seed=g["seed"],
-                           size=size, trace_path=path, wall_clock=False)
+                           size=size, trace_path=path, wall_clock=False,
+                           trace_schema=g.get("trace_schema", 2))
     assert open(path, "rb").read() == open(ref, "rb").read()
     header, records = read_trace(ref)       # and it parses
     assert records

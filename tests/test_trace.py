@@ -19,10 +19,11 @@ DETERMINISTIC = ("match.expected", "match.unexpected", "match.umq.hit",
                  "match.umq.length")
 
 
-def record_workload(path, mode="binned", rounds=3, registry=None):
+def record_workload(path, mode="binned", rounds=3, registry=None,
+                    schema=None):
     """Collectives + a wildcard-heavy direct-engine mix, traced."""
     reg = registry if registry is not None else CounterRegistry()
-    with record_fabric(path, mode=mode, registry=reg,
+    with record_fabric(path, mode=mode, registry=reg, schema=schema,
                        unexpected_every=2, wildcard_every=3) as fab:
         for r in range(rounds):
             fab.all_reduce(8, nbytes=1 << 12)
@@ -219,13 +220,13 @@ def test_lanes_survive_snapshot_delta_semantics():
     assert merged["d"].count == 2 and merged["d"].total == 10
 
 
-# ------------------------------------------------- wall-clock (schema v2)
+# ------------------------------------------------ wall-clock (schema v2+)
 
-def test_v2_records_carry_t_wall(tmp_path):
+def test_records_carry_t_wall(tmp_path):
     path = str(tmp_path / "t.jsonl")
     record_workload(path, rounds=1)
     header, records = read_trace(path)
-    assert header["schema"] == SCHEMA_VERSION == 2
+    assert header["schema"] == SCHEMA_VERSION == 3
     ops = [r for r in records if r["t"] in ("post", "arr")]
     assert ops and all("t_wall" in r for r in ops)
     walls = [r["t_wall"] for r in ops]
@@ -253,7 +254,7 @@ def test_reader_accepts_v1_traces(tmp_path):
     """Backward compat: a v1 trace (no t_wall anywhere) still reads and
     replays; measured wall time is simply absent."""
     path = str(tmp_path / "t.jsonl")
-    record_workload(path, rounds=1)
+    record_workload(path, rounds=1, schema=2)   # v1 = per-op records
     lines = open(path).read().splitlines()
     hdr = json.loads(lines[0])
     hdr["schema"] = 1
