@@ -3,8 +3,9 @@ PYTHON ?= python
 .PHONY: verify test bench-match bench-replay replay-smoke \
 	bench-scenarios scenario-smoke scenario-baseline bench-hotpath \
 	hotpath-smoke hotpath-baseline bench-replay-hotpath \
-	replay-hotpath-smoke replay-baseline tour-timeline tour-match \
-	tour-replay
+	replay-hotpath-smoke replay-baseline bench-telemetry \
+	telemetry-smoke tour-timeline tour-match tour-replay \
+	tour-telemetry telemetry-tour
 
 verify:
 	./scripts/verify.sh
@@ -58,6 +59,14 @@ replay-baseline:
 	PYTHONPATH=src $(PYTHON) benchmarks/replay_bench.py --write-baseline
 	PYTHONPATH=src $(PYTHON) benchmarks/replay_bench.py --smoke --write-baseline
 
+# live-telemetry gate: bridged match throughput >= 0.95x unbridged
+# (paired-median, in-run) + umq_flood must surface on /findings mid-run
+bench-telemetry:
+	PYTHONPATH=src $(PYTHON) benchmarks/telemetry_bench.py
+
+telemetry-smoke:
+	PYTHONPATH=src $(PYTHON) benchmarks/telemetry_bench.py --smoke
+
 tour-timeline:
 	PYTHONPATH=src:. $(PYTHON) examples/timeline_tour.py
 
@@ -66,3 +75,8 @@ tour-match:
 
 tour-replay:
 	PYTHONPATH=src:. $(PYTHON) examples/replay_tour.py
+
+tour-telemetry:
+	PYTHONPATH=src:. $(PYTHON) examples/telemetry_tour.py
+
+telemetry-tour: tour-telemetry

@@ -59,14 +59,37 @@ def main() -> int:
                          "chosen size)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="regenerate the baseline from this sweep")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="stream every cell's counters live over HTTP/SSE "
+                         "while the sweep runs (gated metrics unchanged)")
+    ap.add_argument("--telemetry-port", type=int, default=0,
+                    help="bind port for --telemetry (default: ephemeral)")
     args = ap.parse_args()
     size = "smoke" if args.smoke else "full"
 
     from benchmarks.common import RESULTS, save_json
     os.makedirs(RESULTS, exist_ok=True)
 
+    bridge = server = None
+    if args.telemetry:
+        from repro.telemetry import TelemetryBridge, TelemetryServer
+        bridge = TelemetryBridge(session=f"scenario_sweep[{size}]")
+        server = TelemetryServer(bridge, port=args.telemetry_port).start()
+        bridge.start()
+        print(f"telemetry: {server.url}/metrics | /stream | /findings")
+
     print(f"== scenario sweep (size={size}, seed={args.seed}) ==")
-    results = workloads.sweep(size=size, seed=args.seed)
+    try:
+        results = workloads.sweep(size=size, seed=args.seed,
+                                  telemetry=bridge)
+    finally:
+        if bridge is not None:
+            bridge.stop()
+            print(f"telemetry: {bridge.polls} polls, "
+                  f"{bridge.deltas_total} deltas, "
+                  f"{len(bridge.findings_json())} live findings")
+            server.stop()
+            bridge.close()
 
     print(f"{'scenario':20s} {'cell':22s} {'us/op':>8s} "
           f"{'depth p50/p90/max':>18s} {'umq max':>8s}  findings")

@@ -1,0 +1,98 @@
+"""Telemetry gate: live-bridge overhead + mid-run finding liveness.
+
+    PYTHONPATH=src python benchmarks/telemetry_bench.py [--smoke]
+                                                        [--min-ratio X]
+
+Measures the :class:`repro.telemetry.TelemetryBridge` two ways with
+:mod:`repro.workloads.telemetry` and writes the versioned
+``results/bench/telemetry.json``:
+
+1. **overhead** — per scenario, the fabric drive with the bridge
+   attached at its default poll period vs detached, interleaved in
+   pairs (paired-median harness, same as the hotpath gate): the median
+   bridged/unbridged throughput ratio must be >= ``--min-ratio``
+   (default 0.95 — the "<5% cost" acceptance);
+2. **liveness** — a throttled leaky-UMQ ``unexpected_storm`` with a
+   client thread polling the HTTP ``/findings`` endpoint: the
+   ``umq_flood`` finding must surface *before* the workload completes.
+
+Both also assert attach/poll/detach leaves nothing behind (no watched
+sources leaked, no deltas pending). Exit status is non-zero on any
+failed condition (``make telemetry-smoke``; ``scripts/verify.sh`` runs
+the smoke size).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import argparse
+from typing import List
+
+from repro.workloads import telemetry
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized scenario parameters")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="interleaved on/off pairs per scenario")
+    ap.add_argument("--period", type=float,
+                    default=telemetry.DEFAULT_PERIOD_S,
+                    help="bridge poll period for the overhead gate")
+    ap.add_argument("--min-ratio", type=float,
+                    default=telemetry.MIN_THROUGHPUT_RATIO,
+                    help="required median bridged/unbridged throughput")
+    args = ap.parse_args()
+    size = "smoke" if args.smoke else "full"
+
+    from benchmarks.common import RESULTS, save_json
+    os.makedirs(RESULTS, exist_ok=True)
+
+    print(f"== telemetry bench (size={size}, seed={args.seed}, "
+          f"{args.repeats} pairs, period {args.period * 1e3:g} ms) ==")
+    results = telemetry.bench(size=size, seed=args.seed,
+                              repeats=args.repeats, period_s=args.period)
+
+    ov = results["overhead"]
+    print(f"{'scenario':22s} {'ops':>6s} {'off Mops/s':>11s} "
+          f"{'on Mops/s':>10s} {'on/off':>7s}")
+    for name, cell in sorted(ov["cells"].items()):
+        print(f"{name:22s} {cell['n_ops']:6d} "
+              f"{cell['off_ops_per_s'] / 1e6:11.3f} "
+              f"{cell['on_ops_per_s'] / 1e6:10.3f} "
+              f"{cell['throughput_ratio']:7.3f}")
+    print(f"\noverhead: median ratio {ov['median_ratio']:.3f} "
+          f"(min {ov['min_ratio']:.3f}) over {ov['polls']} polls, "
+          f"{ov['deltas_total']} deltas streamed "
+          f"(gate: >= {args.min_ratio:g})")
+
+    live = results["live"]
+    when = (f"surfaced at +{live['t_first_finding_s']:g} s"
+            if live["surfaced"] else "NEVER surfaced")
+    print(f"liveness: umq_flood {when} "
+          f"of a {live['wall_s']:g} s run "
+          f"({live['live_findings']} live findings, "
+          f"{live['pending_after']} deltas pending after)")
+
+    failures: List[str] = telemetry.check(results,
+                                          min_ratio=args.min_ratio)
+    path = save_json("telemetry.json", results)
+    print(f"results saved: {path}")
+
+    if failures:
+        print("\nFAILED telemetry gate:")
+        for f in failures:
+            print(" - " + f)
+        return 1
+    print("\ntelemetry gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -74,3 +74,9 @@ echo "== replay-pipeline gate (batched v3 vs frozen per-op pipeline, in-run) =="
 # full-size gate is 2.5x (make bench-replay-hotpath); CI-sized bar is
 # noise-tolerant; the 3x bytes/op footprint gate applies at both sizes
 python benchmarks/replay_bench.py --smoke --min-speedup 2.0
+
+echo "== live-telemetry gate (bridged overhead paired-median + mid-run finding) =="
+# bridge attach/poll/detach must be leak-free, bridged throughput
+# >= 0.95x unbridged at the default poll period (in-run pairs), and the
+# leaky-UMQ storm's umq_flood must reach /findings before the run ends
+python benchmarks/telemetry_bench.py --smoke

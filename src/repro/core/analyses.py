@@ -32,7 +32,7 @@ import statistics
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .counters import COUNTER_CATEGORY, counter_stats
+from .counters import COUNTER_CATEGORY, CounterStat, counter_stats
 from .events import Event
 
 
@@ -43,9 +43,19 @@ class Finding:
     message: str
     severity: float           # seconds of suspect time
     events: List[Event] = dataclasses.field(default_factory=list)
+    pid: Optional[int] = None  # offending rank, when the detector knows it
 
     def __str__(self) -> str:
         return f"[{self.kind}] ({self.severity * 1e3:.3f} ms) {self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-ready payload (events are dropped — they don't serialize
+        compactly and live consumers only need the verdict)."""
+        out: Dict[str, object] = {"kind": self.kind, "message": self.message,
+                                  "severity": self.severity}
+        if self.pid is not None:
+            out["pid"] = self.pid
+        return out
 
 
 def _by_name(events: Sequence[Event]) -> Dict[str, List[Event]]:
@@ -123,6 +133,7 @@ def contention(
                                 ),
                                 severity=ov / 1e9,
                                 events=[a, ev],
+                                pid=pid,
                             )
                         )
                 active.append(ev)
@@ -218,6 +229,64 @@ def _counter_events_by_pid(
 NS_PER_QUEUE_ENTRY = 100.0
 
 
+def _long_traversal_finding(
+    pid: int,
+    stats: Dict[str, "CounterStat"],
+    mean_depth: float,
+    min_samples: int,
+) -> Optional[Finding]:
+    """Threshold test over one pid's counter stats; shared by the post-hoc
+    event detector and the live telemetry bridge so both surface identical
+    findings from the same lane statistics."""
+    depth = stats.get("match.prq.traversal_depth")
+    if depth is None or depth.count < min_samples:
+        return None
+    if depth.mean < mean_depth:
+        return None
+    search = stats.get("match.prq.search_ns")
+    suspect_ns = (search.total if search is not None
+                  else (depth.total - depth.count) * NS_PER_QUEUE_ENTRY)
+    return Finding(
+        kind="long_traversal",
+        message=(
+            f"PRQ traversal depth mean {depth.mean:.1f} "
+            f"(max {depth.vmax:.0f}) over {depth.count} matches on "
+            f"pid {pid} — posted-receive queue is searched linearly"
+        ),
+        severity=suspect_ns / 1e9,
+        pid=pid,
+    )
+
+
+def _umq_flood_finding(
+    pid: int,
+    stats: Dict[str, "CounterStat"],
+    max_length: float,
+    mean_length: float,
+) -> Optional[Finding]:
+    length = stats.get("match.umq.length")
+    if length is None or length.count == 0:
+        return None
+    if length.vmax < max_length or length.mean < mean_length:
+        return None
+    leaked = stats.get("match.umq.leaked")
+    search = stats.get("match.umq.search_ns")
+    suspect_ns = (search.total if search is not None
+                  else length.total * NS_PER_QUEUE_ENTRY)
+    detail = (f", {leaked.total:.0f} entries leaked"
+              if leaked is not None and leaked.total else "")
+    return Finding(
+        kind="umq_flood",
+        message=(
+            f"UMQ length mean {length.mean:.1f} grew to "
+            f"{length.vmax:.0f} on pid {pid} — unexpected-message "
+            f"queue is not reclaimed{detail}"
+        ),
+        severity=suspect_ns / 1e9,
+        pid=pid,
+    )
+
+
 def long_traversal(
     events: Sequence[Event],
     mean_depth: float = 8.0,
@@ -228,28 +297,28 @@ def long_traversal(
     ``match.prq.traversal_depth`` histogram out of counter snapshots."""
     out: List[Finding] = []
     for pid, evs in _counter_events_by_pid(events).items():
-        stats = counter_stats(evs)
-        depth = stats.get("match.prq.traversal_depth")
-        if depth is None or depth.count < min_samples:
-            continue
-        if depth.mean < mean_depth:
-            continue
-        search = stats.get("match.prq.search_ns")
-        suspect_ns = (search.total if search is not None
-                      else (depth.total - depth.count) * NS_PER_QUEUE_ENTRY)
-        out.append(
-            Finding(
-                kind="long_traversal",
-                message=(
-                    f"PRQ traversal depth mean {depth.mean:.1f} "
-                    f"(max {depth.vmax:.0f}) over {depth.count} matches on "
-                    f"pid {pid} — posted-receive queue is searched linearly"
-                ),
-                severity=suspect_ns / 1e9,
-                events=[e for e in evs
-                        if e.name == "counter/match.prq.traversal_depth"],
-            )
-        )
+        f = _long_traversal_finding(pid, counter_stats(evs),
+                                    mean_depth, min_samples)
+        if f is not None:
+            f.events = [e for e in evs
+                        if e.name == "counter/match.prq.traversal_depth"]
+            out.append(f)
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def long_traversal_lanes(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    mean_depth: float = 8.0,
+    min_samples: int = 32,
+) -> List[Finding]:
+    """:func:`long_traversal` directly over per-pid lane statistics
+    (``CounterRegistry.snapshot_lanes`` shape) — no event
+    materialization, so the live bridge can run it every poll."""
+    out = [f for pid in sorted(lanes)
+           for f in (_long_traversal_finding(pid, lanes[pid],
+                                             mean_depth, min_samples),)
+           if f is not None]
     out.sort(key=lambda f: -f.severity)
     return out
 
@@ -264,31 +333,26 @@ def umq_flood(
     ``match.umq.length`` histogram out of counter snapshots."""
     out: List[Finding] = []
     for pid, evs in _counter_events_by_pid(events).items():
-        stats = counter_stats(evs)
-        length = stats.get("match.umq.length")
-        if length is None or length.count == 0:
-            continue
-        if length.vmax < max_length or length.mean < mean_length:
-            continue
-        leaked = stats.get("match.umq.leaked")
-        search = stats.get("match.umq.search_ns")
-        suspect_ns = (search.total if search is not None
-                      else length.total * NS_PER_QUEUE_ENTRY)
-        detail = (f", {leaked.total:.0f} entries leaked"
-                  if leaked is not None and leaked.total else "")
-        out.append(
-            Finding(
-                kind="umq_flood",
-                message=(
-                    f"UMQ length mean {length.mean:.1f} grew to "
-                    f"{length.vmax:.0f} on pid {pid} — unexpected-message "
-                    f"queue is not reclaimed{detail}"
-                ),
-                severity=suspect_ns / 1e9,
-                events=[e for e in evs
-                        if e.name == "counter/match.umq.length"],
-            )
-        )
+        f = _umq_flood_finding(pid, counter_stats(evs),
+                               max_length, mean_length)
+        if f is not None:
+            f.events = [e for e in evs
+                        if e.name == "counter/match.umq.length"]
+            out.append(f)
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def umq_flood_lanes(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    max_length: float = 64.0,
+    mean_length: float = 8.0,
+) -> List[Finding]:
+    """:func:`umq_flood` directly over per-pid lane statistics."""
+    out = [f for pid in sorted(lanes)
+           for f in (_umq_flood_finding(pid, lanes[pid],
+                                        max_length, mean_length),)
+           if f is not None]
     out.sort(key=lambda f: -f.severity)
     return out
 

@@ -213,6 +213,11 @@ class CounterRegistry:
         self.pid = pid
         self.lanes_only = lanes_only
         self._registry_lock = threading.Lock()   # cold path only
+        # serializes *consumers* (drain/snapshot callers) against each
+        # other: a live telemetry poller and the run's own end-of-phase
+        # drain may race, and the merge phase mutates shared stat dicts.
+        # Producers never touch this lock — the hot path stays lock-free.
+        self._drain_lock = threading.Lock()
         self._buffers: Dict[int, List] = {}      # flat quads per thread
         self._merged: Dict[str, CounterStat] = {}
         # per-lane stats, nested pid -> name -> stat (tuple keys would
@@ -224,6 +229,12 @@ class CounterRegistry:
         # producers that cache the buffer reference (MatchEngine) know
         # to refetch; plain int read on the hot path
         self.epoch = 0
+        # drain-epoch accounting (cumulative over the registry's life):
+        # completed drains and logical deltas merged (column records
+        # expanded) — with these, concurrent pollers can assert no-loss
+        # delta accounting (sum of snapshot deltas == deltas_merged)
+        self.drains = 0
+        self.deltas_merged = 0
 
     # -- producer side (hot path, lock-free after first call per thread) --
 
@@ -289,10 +300,12 @@ class CounterRegistry:
         pairs: Dict[int, Dict[str, tuple]] = {}   # pid -> name -> pair
         cpid = None
         cpairs: Dict[str, tuple] = {}
+        nd = 0                            # logical deltas this batch
         it = iter(flat)
         for pid, name, value, obs in zip(it, it, it, it):
             if type(obs) is str:          # column record: name=spec,
-                per = by_pid.get(pid)     # value=row-major values
+                nd += len(value)          # value=row-major values
+                per = by_pid.get(pid)
                 if per is None:
                     per = by_pid[pid] = {}
                 if len(value) >= 24:
@@ -390,6 +403,7 @@ class CounterRegistry:
             # producing lane, so the (aggregate, lane) stat pair is
             # resolved through a per-pid cache — one dict get per delta
             # instead of three
+            nd += 1
             if pid != cpid:
                 cpid = pid
                 cpairs = pairs.get(pid)
@@ -430,6 +444,7 @@ class CounterRegistry:
                     pst.vmax = value
                 bins = pst.bins
                 bins[b] = bins.get(b, 0) + 1
+        self.deltas_merged += nd
 
     def _merge_lanes(self, flat: Iterable) -> None:
         """:meth:`_merge` for ``lanes_only`` registries: identical fold,
@@ -439,6 +454,7 @@ class CounterRegistry:
         by_pid = self._merged_by_pid
         cpid = None
         cper: Dict[str, CounterStat] = {}
+        nd = 0                            # logical deltas this batch
         it = iter(flat)
         for pid, name, value, obs in zip(it, it, it, it):
             if pid != cpid:
@@ -449,6 +465,7 @@ class CounterRegistry:
             per = cper
             if type(obs) is str:          # column record
                 nv = len(value)
+                nd += nv
                 a = None
                 if nv >= 96:
                     try:
@@ -557,6 +574,7 @@ class CounterRegistry:
             pst = per.get(name)
             if pst is None:
                 pst = per[name] = _fresh_stat(name)
+            nd += 1
             pst.count += 1
             pst.total += value
             if obs:
@@ -569,6 +587,7 @@ class CounterRegistry:
                     pst.vmax = value
                 bins = pst.bins
                 bins[b] = bins.get(b, 0) + 1
+        self.deltas_merged += nd
 
     def drain(self) -> Dict[str, CounterStat]:
         """Merge all buffered deltas into the aggregate stats and return
@@ -584,7 +603,16 @@ class CounterRegistry:
         their lock-free ``fetch buffer -> append`` window, so those are
         consumed in place with the atomic idiom the producers rely on:
         read ``[0, n)`` (appends only ever land at the tail) and then
-        drop the consumed prefix with a single atomic ``del``."""
+        drop the consumed prefix with a single atomic ``del``.
+
+        Concurrent *consumers* (a live telemetry poller racing the
+        run's own drain) are serialized on a consumer-side lock; the
+        producer hot path never touches it."""
+        with self._drain_lock:
+            return self._drain_consume()
+
+    def _drain_consume(self) -> Dict[str, CounterStat]:
+        """The drain body; callers hold ``_drain_lock``."""
         me = threading.get_ident()
         own: List[List] = []
         foreign: List[Tuple[List, int]] = []
@@ -605,6 +633,7 @@ class CounterRegistry:
         for buf, n in foreign:
             merge(islice(buf, n))
             del buf[:n]
+        self.drains += 1
         return dict(self._merged)
 
     def pending_deltas(self) -> int:
@@ -619,12 +648,24 @@ class CounterRegistry:
                     total += len(value) if type(obs) is str else 1
         return total
 
+    def drain_stats(self) -> Dict[str, int]:
+        """Drain-epoch accounting: the current ``epoch``, completed
+        ``drains``, cumulative logical ``deltas_merged`` (column records
+        expanded — the same unit :meth:`pending_deltas` counts) and the
+        deltas still ``pending`` in producer buffers. ``deltas_merged +
+        pending`` is every delta ever recorded, so two concurrent
+        consumers can assert no-loss accounting."""
+        return {"epoch": self.epoch, "drains": self.drains,
+                "deltas_merged": self.deltas_merged,
+                "pending": self.pending_deltas()}
+
     def drain_lanes(self) -> Dict[int, Dict[str, CounterStat]]:
         """Per-pid statistics (drains first). The aggregate returned by
         :meth:`drain` is the merge of these lanes."""
-        self.drain()
-        return {pid: dict(per)
-                for pid, per in self._merged_by_pid.items()}
+        with self._drain_lock:
+            self._drain_consume()
+            return {pid: dict(per)
+                    for pid, per in self._merged_by_pid.items()}
 
     def value(self, name: str) -> float:
         """Total of one counter (drains first, aggregated across lanes)."""
@@ -650,12 +691,34 @@ class CounterRegistry:
         parse per (lane, counter). Ownership of the returned lane dicts
         transfers to the caller (the registry starts fresh ones), so a
         per-phase snapshot costs no copying."""
-        self.drain()
-        with self._registry_lock:
-            lanes = self._merged_by_pid
-            self._merged = {}
-            self._merged_by_pid = {}
+        with self._drain_lock:
+            self._drain_consume()
+            with self._registry_lock:
+                lanes = self._merged_by_pid
+                self._merged = {}
+                self._merged_by_pid = {}
         return lanes
+
+    def snapshot(self) -> Dict[str, object]:
+        """One delta snapshot with drain-epoch metadata: ``{"lanes":
+        {pid: {name: CounterStat}}, "meta": {"epoch", "drains",
+        "deltas_merged", "pending"}}``. Lanes are the
+        :meth:`snapshot_lanes` delta (ownership transfers); the meta
+        counters are cumulative, so a poller chain can assert no-loss
+        accounting across concurrent drains: the sum of delta counts
+        over every snapshot ever taken equals ``deltas_merged`` (and
+        ``pending`` names what is still buffered). The live telemetry
+        bridge polls this."""
+        with self._drain_lock:
+            self._drain_consume()
+            with self._registry_lock:
+                lanes = self._merged_by_pid
+                self._merged = {}
+                self._merged_by_pid = {}
+            meta = {"epoch": self.epoch, "drains": self.drains,
+                    "deltas_merged": self.deltas_merged}
+        meta["pending"] = self.pending_deltas()
+        return {"lanes": lanes, "meta": meta}
 
     def snapshot_events(self, t_ns: Optional[int] = None,
                         path_root: str = "counters") -> List[Event]:
@@ -667,22 +730,54 @@ class CounterRegistry:
         paper's counters are drained, not read, per interval). Lane deltas
         keep their pid, so per-rank lanes come out as separate timeline
         tracks."""
-        t = t_ns if t_ns is not None else time.perf_counter_ns()
-        out: List[Event] = []
-        lanes = self.snapshot_lanes()
-        for pid in sorted(lanes):
-            for name, st in sorted(lanes[pid].items()):
-                out.append(Event(
-                    name=COUNTER_PREFIX + name,
-                    path=(path_root,) + tuple(name.split(".")),
-                    category=COUNTER_CATEGORY,
-                    t_start=t,
-                    t_end=t,
-                    pid=pid,
-                    tid=0,
-                    attrs=st.to_attrs(),
-                ))
-        return out
+        return lane_events(self.snapshot_lanes(), t_ns=t_ns,
+                           path_root=path_root)
+
+
+def lane_events(lanes: Dict[int, Dict[str, CounterStat]],
+                t_ns: Optional[int] = None,
+                path_root: str = "counters") -> List[Event]:
+    """Serialize per-pid lane statistics as the zero-duration counter
+    Events :meth:`CounterRegistry.snapshot_events` emits (same names,
+    paths, ordering and attrs) — shared by the registry and by consumers
+    that accumulate lane deltas elsewhere (the telemetry bridge), so
+    detector findings are identical however the stats traveled."""
+    t = t_ns if t_ns is not None else time.perf_counter_ns()
+    out: List[Event] = []
+    for pid in sorted(lanes):
+        for name, st in sorted(lanes[pid].items()):
+            out.append(Event(
+                name=COUNTER_PREFIX + name,
+                path=(path_root,) + tuple(name.split(".")),
+                category=COUNTER_CATEGORY,
+                t_start=t,
+                t_end=t,
+                pid=pid,
+                tid=0,
+                attrs=st.to_attrs(),
+            ))
+    return out
+
+
+def merge_lane_stats(dst: Dict[int, Dict[str, CounterStat]],
+                     src: Dict[int, Dict[str, CounterStat]]) -> int:
+    """Merge per-pid lane deltas ``src`` into cumulative ``dst`` in
+    place (``dst`` takes ownership of stats it adopts). Returns the
+    number of logical deltas merged (the sum of stat counts), the unit
+    drain accounting speaks."""
+    nd = 0
+    for pid, per in src.items():
+        d = dst.get(pid)
+        if d is None:
+            d = dst[pid] = {}
+        for name, st in per.items():
+            nd += st.count
+            cur = d.get(name)
+            if cur is None:
+                d[name] = st
+            else:
+                cur.merge(st)
+    return nd
 
 
 def counter_stats(events: Iterable[Event]) -> Dict[str, CounterStat]:

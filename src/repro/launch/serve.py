@@ -30,6 +30,11 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="serve live counter/region telemetry over "
+                         "HTTP/SSE while prefill/decode run")
+    ap.add_argument("--telemetry-port", type=int, default=0,
+                    help="bind port for --telemetry (default: ephemeral)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, args.preset)
@@ -44,7 +49,18 @@ def main(argv=None):
     prefill = jax.jit(make_prefill_step(cfg))
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 
-    reset_global_collector()
+    collector = reset_global_collector()
+    bridge = server = None
+    if args.telemetry:
+        from ..core.counters import global_registry
+        from ..telemetry import TelemetryBridge, TelemetryServer
+        bridge = TelemetryBridge(session=f"serve[{cfg.name}]")
+        bridge.watch(global_registry(), name="counters")
+        bridge.watch_events(collector, name="regions")
+        server = TelemetryServer(bridge, port=args.telemetry_port).start()
+        bridge.start()
+        print(f"telemetry: {server.url}/metrics | /stream | /findings")
+
     with regions.annotate("serve/prefill", category="api"):
         logits, caches = prefill(params, {"tokens": prompts})
         jax.block_until_ready(logits)
@@ -77,6 +93,12 @@ def main(argv=None):
     print(f"decode throughput: {B * G / dt:.1f} tok/s "
           f"({dt / G * 1e3:.1f} ms/step)")
     print("sample:", gen[0, :16].tolist())
+    if bridge is not None:
+        bridge.stop()
+        print(f"telemetry: {bridge.polls} polls, {bridge.deltas_total} "
+              f"deltas, {len(bridge.findings_json())} live findings")
+        server.stop()
+        bridge.close()
     gf = GraphFrame.from_events(global_collector().drain())
     print(gf.tree(metric="sum", fmt="{:.3f}", max_depth=1))
     return gen

@@ -14,8 +14,8 @@ from .replay import (LOCK_REGION, PhaseStats, Replayer, ReplayResult,
                      replay, replay_progress)
 from .schema import (SCHEMA_VERSION, SUPPORTED_VERSIONS, TRACE_FORMAT,
                      WRITABLE_VERSIONS, TraceFormatError,
-                     TraceSchemaError, decode_chunk, make_header,
-                     validate_header, validate_record)
+                     TraceSchemaError, decode_chunk, decode_pe_chunk,
+                     make_header, validate_header, validate_record)
 
 __all__ = [
     "PhaseDelta", "TraceDiff", "diff",
@@ -27,5 +27,6 @@ __all__ = [
     "replay_progress",
     "SCHEMA_VERSION", "SUPPORTED_VERSIONS", "TRACE_FORMAT",
     "WRITABLE_VERSIONS", "TraceFormatError", "TraceSchemaError",
-    "decode_chunk", "make_header", "validate_header", "validate_record",
+    "decode_chunk", "decode_pe_chunk", "make_header", "validate_header",
+    "validate_record",
 ]

@@ -34,11 +34,12 @@ import time
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from ..core.counters import CounterRegistry
-from .schema import (REC_ARRIVE, REC_CHUNK, REC_POST, SCHEMA_VERSION,
-                     WRITABLE_VERSIONS, TraceFormatError,
-                     TraceSchemaError, decode_chunk, encode_flags,
-                     encode_ints, encode_outcomes, make_header,
-                     validate_header, validate_record)
+from .schema import (REC_ARRIVE, REC_CHUNK, REC_PE_CHUNK, REC_POST,
+                     REC_PROGRESS, SCHEMA_VERSION, WRITABLE_VERSIONS,
+                     TraceFormatError, TraceSchemaError, decode_chunk,
+                     decode_pe_chunk, encode_flags, encode_ints,
+                     encode_outcomes, make_header, validate_header,
+                     validate_record)
 
 # record types that carry live wall-clock timing in schema v2+
 _TIMED = ("post", "arr", "pe")
@@ -62,15 +63,26 @@ _CHUNK_KEYS = {
     REC_ARRIVE: (_ARR_KEYS, frozenset(_ARR_KEYS | {"t_wall"})),
 }
 
+# chunkable key sets for progress-lane ("pe") records, by event kind
+_SUBMIT_KEYS = frozenset(("t", "ev", "ts", "wait"))
+_PROC_KEYS = frozenset(("t", "ev", "ts", "dur"))
+_PE_KEYS = {
+    "submit": (_SUBMIT_KEYS, frozenset(_SUBMIT_KEYS | {"t_wall"})),
+    "proc": (_PROC_KEYS, frozenset(_PROC_KEYS | {"t_wall"})),
+}
+
 # one shared encoder: json.dumps(..., separators=...) builds a fresh
 # JSONEncoder per call, which is pure overhead at trace volume
 _encode = json.JSONEncoder(separators=(",", ":")).encode
 
 
-def _open(path: str, write: bool):
+def _open(path: str, write: bool, append: bool = False):
     if path.endswith(".gz"):
-        return gzip.open(path, "wt" if write else "rt")
-    return open(path, "w" if write else "r")
+        # appending opens a new gzip member; readers decode the
+        # concatenated members transparently
+        return gzip.open(path, ("at" if append else "wt") if write
+                         else "rt")
+    return open(path, ("a" if append else "w") if write else "r")
 
 
 class TraceWriter:
@@ -93,34 +105,106 @@ class TraceWriter:
     suite's determinism tests pin down.
 
     ``schema`` picks the encoding: 3 (the default) compacts post/arrive
-    runs into columnar chunks; 2 writes the per-op records of the
-    pre-compaction format byte-identically (the committed golden traces
-    stay frozen at v2). ``buffer_records`` bounds the emission buffer
-    (1 = write-through; chunks count as one buffered record).
+    runs into columnar chunks (and progress-lane runs into ``pec``
+    chunks); 2 writes the per-op records of the pre-compaction format
+    byte-identically (the committed golden traces stay frozen at v2).
+    ``buffer_records`` bounds the emission buffer (1 = write-through;
+    chunks count as one buffered record).
+
+    ``append=True`` re-opens an **existing** trace and continues it:
+    the header is validated, the stream is scanned to re-seed the
+    per-rank derived-seq counters from the tail (so later chunks keep
+    reconstructing correctly), ``n_records`` resumes from the existing
+    count, and new ``t_wall`` stamps continue monotonically after the
+    largest recorded one. ``mode``/``meta`` are ignored (the existing
+    header stands) and ``wall_clock`` is inferred from the recorded
+    stream — a deterministic trace stays byte-deterministic across
+    sessions, a wall-clock one keeps stamping. ``schema`` defaults to
+    the file's version; an
+    explicit *lower* writable version is allowed (bare v2 records are
+    legal inside a v3 file), a higher one is rejected.
     """
 
     def __init__(self, path: str, mode: str = "binned",
                  meta: Optional[Dict] = None, wall_clock: bool = True,
                  buffer_records: int = BUFFER_RECORDS,
-                 schema: Optional[int] = None):
+                 schema: Optional[int] = None, append: bool = False):
         self.path = str(path)
         self.wall_clock = wall_clock
+        self._lock = threading.Lock()
+        self._buf: List[Dict] = []
+        self._cap = max(int(buffer_records), 1)
+        self._chunk: List[Dict] = []     # pending chunkable records
+        self._cflags: List[int] = []     # op: 1 = post row, 0 = arr row
+        #                                  pe: 1 = submit,   0 = proc
+        self._ctimed = False             # pending chunk carries t_wall
+        self._ckind = "op"               # pending chunk kind: op | pe
+        self._seqs: Dict[int, int] = {}  # per-rank next expected seq
+        if append:
+            try:
+                (hdr, seqs, n_records, max_tw,
+                 saw_tw) = self._scan_existing()
+            except FileNotFoundError:
+                raise TraceFormatError(
+                    "cannot append: no existing trace at this path "
+                    "(open without append=True to start one)",
+                    path=self.path) from None
+            # adopt the file's clock discipline: a deterministic trace
+            # (no t_wall anywhere) must stay byte-deterministic across
+            # append sessions; an empty trace keeps the caller's choice
+            if n_records > 1:
+                self.wall_clock = saw_tw
+            file_schema = hdr.get("schema")
+            if file_schema not in WRITABLE_VERSIONS:
+                raise TraceSchemaError(
+                    f"cannot append to a schema v{file_schema} trace "
+                    f"(appendable: {WRITABLE_VERSIONS})")
+            self.schema = (file_schema if schema is None
+                           else int(schema))
+            if self.schema not in WRITABLE_VERSIONS:
+                raise TraceSchemaError(
+                    f"cannot write schema v{self.schema} (writable: "
+                    f"{WRITABLE_VERSIONS})")
+            if self.schema > file_schema:
+                raise TraceSchemaError(
+                    f"cannot append v{self.schema} records to a "
+                    f"v{file_schema} trace (bare lower-version records "
+                    f"are legal in a newer file, not the reverse)")
+            self._seqs = seqs
+            self.n_records = n_records
+            self._f = _open(self.path, write=True, append=True)
+            # continue the live clock where the recorded one stopped
+            self._t0 = time.perf_counter_ns() - max_tw
+            return
         self.schema = SCHEMA_VERSION if schema is None else int(schema)
         if self.schema not in WRITABLE_VERSIONS:
             raise TraceSchemaError(
                 f"cannot write schema v{self.schema} (writable: "
                 f"{WRITABLE_VERSIONS})")
-        self._lock = threading.Lock()
         self._f = _open(self.path, write=True)
-        self._buf: List[Dict] = []
-        self._cap = max(int(buffer_records), 1)
-        self._chunk: List[Dict] = []     # pending chunkable op records
-        self._cflags: List[int] = []     # 1 = post row, 0 = arr row
-        self._ctimed = False             # pending chunk carries t_wall
-        self._seqs: Dict[int, int] = {}  # per-rank next expected seq
         self.n_records = 0
         self._t0 = time.perf_counter_ns()
         self.emit(make_header(mode, meta, schema=self.schema))
+
+    def _scan_existing(self):
+        """Stream-validate the trace being appended to: returns
+        ``(header, per-rank next seqs, logical record count including
+        the header, max t_wall seen)``. Chunks are expanded so the
+        count matches what ``emit`` would have accumulated."""
+        n = 1                            # the header line
+        max_tw = 0
+        saw_tw = False
+        with TraceReader(self.path, expand=True) as r:
+            hdr = r.header
+            for rec in r:
+                n += 1
+                tw = rec.get("t_wall")
+                if tw is not None:
+                    saw_tw = True
+                    if type(tw) is int and tw > max_tw:
+                        max_tw = tw
+            seqs = dict(r._seqs)
+        return hdr, seqs, n, max_tw, saw_tw
 
     def _flush_chunk_locked(self) -> None:
         recs = self._chunk
@@ -132,6 +216,9 @@ class TraceWriter:
         if len(recs) == 1:
             # a bare record is smaller than a 1-row chunk
             self._buf.append(recs[0])
+            return
+        if self._ckind == "pe":
+            self._flush_pe_chunk(recs, flags)
             return
         out: Dict = {"t": REC_CHUNK, "n": len(recs),
                      "p": encode_flags(flags)}
@@ -171,6 +258,32 @@ class TraceWriter:
             out["w"] = encode_ints(tws)
         self._buf.append(out)
 
+    def _flush_pe_chunk(self, recs: List[Dict],
+                        flags: List[int]) -> None:
+        """Columnar-encode a run of chunkable ``pe`` records (``flags``:
+        1 = submit row, 0 = proc row) as one ``pec`` line."""
+        tss = [r["ts"] for r in recs]
+        waits = [r["wait"] for r, e in zip(recs, flags) if e]
+        durs = [r["dur"] for r, e in zip(recs, flags) if not e]
+        tws = [r["t_wall"] for r in recs] if self._ctimed else []
+        if any(type(v) is not int for v in tss + waits + durs + tws):
+            # non-int payload: the delta codec only round-trips ints
+            self._buf.extend(recs)
+            return
+        out: Dict = {"t": REC_PE_CHUNK, "n": len(recs),
+                     "e": encode_flags(flags), "s": encode_ints(tss)}
+        if waits:
+            uenc = encode_ints(waits)
+            if uenc != 0:                # waits omitted when all-zero
+                out["u"] = uenc
+        if durs:
+            denc = encode_ints(durs)
+            if denc != 0:
+                out["d"] = denc
+        if tws:
+            out["w"] = encode_ints(tws)
+        self._buf.append(out)
+
     def _flush_locked(self) -> None:
         self._flush_chunk_locked()
         buf = self._buf
@@ -200,9 +313,11 @@ class TraceWriter:
                         and seq == seqs.get(rank, 0)):
                     # chunkable: seq is derivable (dense per-rank
                     # numbering), so it is dropped from the encoding
-                    if timed != self._ctimed and self._chunk:
+                    if ((timed != self._ctimed
+                            or self._ckind != "op") and self._chunk):
                         self._flush_chunk_locked()
                     self._ctimed = timed
+                    self._ckind = "op"
                     seqs[rank] = seq + 1
                     self._chunk.append(rec)
                     self._cflags.append(1 if is_post else 0)
@@ -215,6 +330,26 @@ class TraceWriter:
                 # later chunk rows keep reconstructing correctly
                 if type(rank) is int and type(seq) is int:
                     seqs[rank] = seq + 1
+            elif self.schema >= 3 and kind == REC_PROGRESS:
+                keys = _PE_KEYS.get(rec.get("ev"))
+                if keys is not None:
+                    rk = rec.keys()
+                    timed = rk == keys[1]
+                    if timed or rk == keys[0]:
+                        if ((timed != self._ctimed
+                                or self._ckind != "pe")
+                                and self._chunk):
+                            self._flush_chunk_locked()
+                        self._ctimed = timed
+                        self._ckind = "pe"
+                        self._chunk.append(rec)
+                        self._cflags.append(
+                            1 if rec["ev"] == "submit" else 0)
+                        if len(self._chunk) >= CHUNK_RECORDS:
+                            self._flush_chunk_locked()
+                            if len(self._buf) >= self._cap:
+                                self._flush_locked()
+                        return
             self._flush_chunk_locked()
             self._buf.append(rec)
             if len(self._buf) >= self._cap:
@@ -229,13 +364,18 @@ class TraceWriter:
                 self._flush_locked()
                 self._f.flush()
 
-    def snapshot(self, registry: CounterRegistry) -> None:
+    def snapshot(self, registry: Optional[CounterRegistry],
+                 lanes=None) -> None:
         """Write the registry's per-lane counter statistics as a ``snap``
         record (drains, so the snapshot reflects everything recorded so
         far; lane pids key the stats). In deterministic mode the
         wall-clock-measured ``*_ns`` statistics are dropped — they are
-        the only nondeterministic content of a snapshot."""
-        lanes = registry.drain_lanes()
+        the only nondeterministic content of a snapshot. When a live
+        telemetry bridge was draining the registry concurrently, pass
+        its cumulative ``lanes`` instead (registry may be None then):
+        the registry's own remainder would be a partial view."""
+        if lanes is None:
+            lanes = registry.drain_lanes()
         stats = {str(pid): {name: st.to_attrs()
                             for name, st in sorted(per.items())
                             if self.wall_clock or not name.endswith("_ns")}
@@ -328,6 +468,9 @@ class TraceReader:
                         kind = rec.get("t")
                         if expand and kind == REC_CHUNK:
                             yield from decode_chunk(rec, self._seqs)
+                            continue
+                        if expand and kind == REC_PE_CHUNK:
+                            yield from decode_pe_chunk(rec)
                             continue
                         if kind == REC_POST or kind == REC_ARRIVE:
                             # bare op: re-seed the rank's derived-seq

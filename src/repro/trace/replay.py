@@ -51,9 +51,9 @@ from ..core.counters import CounterRegistry, CounterStat, counter_stats
 from ..core.events import Event
 from ..match import MatchEngine, canonical_mode
 from .io import TraceReader, iter_trace
-from .schema import (REC_ARRIVE, REC_CHUNK, REC_PHASE, REC_POST,
-                     REC_PROGRESS, REC_SNAPSHOT, decode_chunk,
-                     decode_flags)
+from .schema import (REC_ARRIVE, REC_CHUNK, REC_PE_CHUNK, REC_PHASE,
+                     REC_POST, REC_PROGRESS, REC_SNAPSHOT, decode_chunk,
+                     decode_flags, decode_pe_chunk)
 
 # mirrors repro.comm.progress.LOCK_REGION without importing the comm layer
 # (which would pull in JAX — replay stays JAX-free)
@@ -220,6 +220,9 @@ def _expand_stream(records: Iterable[Dict]) -> Iterable[Dict]:
         kind = rec.get("t")
         if kind == REC_CHUNK:
             yield from decode_chunk(rec, seqs)
+            continue
+        if kind == REC_PE_CHUNK:
+            yield from decode_pe_chunk(rec)
             continue
         if kind == REC_POST or kind == REC_ARRIVE:
             rank, seq = rec.get("rank"), rec.get("seq")
@@ -688,6 +691,15 @@ class Replayer:
                            if k not in ("t", "op", "label")})
             elif kind == REC_PROGRESS:
                 pe_records.append(rec)
+            elif kind == REC_PE_CHUNK:
+                expanded = decode_pe_chunk(rec)
+                pe_records.extend(expanded)
+                for pe in expanded:
+                    tw = pe.get("t_wall")
+                    if tw is not None:
+                        if wall_lo is None:
+                            wall_lo = tw
+                        wall_hi = tw
             elif kind == REC_SNAPSHOT:
                 raw_snap = rec
         flush_phase()

@@ -25,6 +25,9 @@ following line is a record tagged by its ``"t"`` field:
              records (kinds freely mixed), columnar-encoded (see
              below). One chunk line replaces up to
              :data:`~repro.trace.io.CHUNK_RECORDS` per-op lines.
+  ``pec``    **schema v3** progress-lane chunk: a run of consecutive
+             ``pe`` records (``submit``/``proc`` freely mixed),
+             columnar-encoded with the same codecs as ``chk``.
 
 Chunk layout (v3). A chunk carries ``n`` (row count) plus one encoded
 column per logical field, single-letter keys::
@@ -48,6 +51,20 @@ rows and have that sub-population's length (``b``/``m`` over arr rows,
 ``h`` over post rows); ``w`` is present only when the compacted records
 carried timing.
 
+Progress-lane chunk layout (v3)::
+
+  {"t":"pec","n":N,"e":F,"s":C,"u":C?,"d":C?,"w":C?}
+
+``e`` (is-submit flags, 1 = ``submit`` row, 0 = ``proc`` row) uses the
+same run-length form as ``p``. ``s`` is the ``ts`` column (delta-encoded
+— submit timestamps are monotone, so deltas are small). ``u`` (submit
+``wait``) spans the submit rows only and ``d`` (processing ``dur``) the
+proc rows only; each is omitted when its sub-population is empty or
+all-zero (waits usually are). ``w`` is ``t_wall``, present only when
+the compacted records carried timing. ``pe`` records have no ``seq``,
+so expansion needs no cross-chunk state — decoding reproduces the
+per-op records exactly, key order included.
+
 Per-op ``seq`` numbers are **derived, not stored**: every engine
 numbers its ops densely from 0 in emission order, so the decoder
 reconstructs ``seq`` with one per-rank counter threaded across the
@@ -69,9 +86,10 @@ Version history:
     (the replayer surfaces it as measured per-phase wall time /
     dilation).
   * **v3** — compact chunked encoding: the post/arrive streams are
-    delta-encoded into columnar ``chk`` records. Bare ``post``/``arr``
-    records remain legal in a v3 file (the writer falls back to them
-    for single-record runs and nonconforming producer dicts); readers
+    delta-encoded into columnar ``chk`` records and the progress-lane
+    stream into ``pec`` records. Bare ``post``/``arr``/``pe`` records
+    remain legal in a v3 file (the writer falls back to them for
+    single-record runs and nonconforming producer dicts); readers
     expand chunks transparently, so every consumer of v1/v2 records
     keeps working unchanged.
 
@@ -100,6 +118,7 @@ REC_PHASE = "phase"
 REC_PROGRESS = "pe"
 REC_SNAPSHOT = "snap"
 REC_CHUNK = "chk"
+REC_PE_CHUNK = "pec"
 
 # required fields per record type (beyond "t")
 _REQUIRED = {
@@ -109,6 +128,7 @@ _REQUIRED = {
     REC_PROGRESS: ("ev", "ts"),
     REC_SNAPSHOT: ("stats",),
     REC_CHUNK: ("n", "p", "r", "s", "g"),
+    REC_PE_CHUNK: ("n", "e", "s"),
 }
 
 
@@ -309,6 +329,39 @@ def decode_chunk(rec: Dict, seqs: Optional[Dict[int, int]] = None
             op = {"t": REC_ARRIVE, "rank": r, "src": s, "tag": g,
                   "comm": c, "nb": next(nbs), "seq": q,
                   "match": next(matches)}
+        if tws is not None:
+            op["t_wall"] = next(tws)
+        out.append(op)
+    return out
+
+
+def decode_pe_chunk(rec: Dict) -> List[Dict]:
+    """Expand a validated ``pec`` record into its per-event ``pe``
+    records (exact v2 key order: ``t``, ``ev``, ``ts``, then ``wait`` or
+    ``dur``, ``t_wall`` last when present). Progress records carry no
+    seq, so no cross-chunk state is threaded."""
+    n = rec["n"]
+    if type(n) is not int or n < 1:
+        raise TraceSchemaError(f"pe chunk row count must be a positive "
+                               f"int, got {n!r}")
+    flags = decode_flags(rec["e"], n)
+    tss = decode_ints(rec["s"], n, "s")
+    n_sub = sum(flags)
+    n_proc = n - n_sub
+    waits = iter(decode_ints(rec.get("u", 0), n_sub, "u") if n_sub
+                 else ())
+    durs = iter(decode_ints(rec.get("d", 0), n_proc, "d") if n_proc
+                else ())
+    tws = (iter(decode_ints(rec["w"], n, "w")) if "w" in rec
+           else None)
+    out: List[Dict] = []
+    for e, ts in zip(flags, tss):
+        if e:
+            op = {"t": REC_PROGRESS, "ev": "submit", "ts": ts,
+                  "wait": next(waits)}
+        else:
+            op = {"t": REC_PROGRESS, "ev": "proc", "ts": ts,
+                  "dur": next(durs)}
         if tws is not None:
             op["t_wall"] = next(tws)
         out.append(op)

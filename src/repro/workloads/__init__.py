@@ -15,6 +15,7 @@ from .bench import (DEFECT_KINDS, ENGINE_MODES, PE_REQUESTS,
                     defect_coverage, hist_percentile, make_baseline,
                     run_scenario, sweep)
 from . import hotpath  # noqa: F401  (throughput bench + perf gate)
+from . import telemetry  # noqa: F401  (live-bridge overhead + liveness gate)
 
 __all__ = [
     "DEFECT_DETECTOR", "Scenario", "all_scenarios", "get", "names",
@@ -23,5 +24,5 @@ __all__ = [
     "ScenarioRun", "build_fabric", "cell_key", "check",
     "compare_to_baseline", "count_ops", "defect_coverage",
     "hist_percentile", "hotpath", "make_baseline", "run_scenario",
-    "sweep",
+    "sweep", "telemetry",
 ]

@@ -30,7 +30,8 @@ import time
 from typing import Dict, List, Optional, Sequence, Union
 
 from ..core import analyses
-from ..core.counters import CounterRegistry, CounterStat, counter_stats
+from ..core.counters import (CounterRegistry, CounterStat, counter_stats,
+                             lane_events)
 from ..match import Fabric, canonical_mode
 from ..trace.io import TraceWriter
 from ..trace.replay import replay_progress
@@ -139,13 +140,20 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
                  size: str = "full", params: Optional[Params] = None,
                  trace_path: Optional[str] = None,
                  wall_clock: bool = True,
-                 trace_schema: Optional[int] = None) -> ScenarioRun:
+                 trace_schema: Optional[int] = None,
+                 telemetry=None) -> ScenarioRun:
     """Run one scenario end-to-end under one engine/progress config:
     drive the fabric, snapshot counters, model the progress lanes, run
     every detector. With ``trace_path`` the run is recorded to a
     replayable JSONL trace (``wall_clock=False`` for the byte-identical
     deterministic form; ``trace_schema=2`` for the pre-compaction
-    per-op encoding the committed goldens are frozen at)."""
+    per-op encoding the committed goldens are frozen at). With a
+    ``telemetry`` :class:`~repro.telemetry.TelemetryBridge`, the run's
+    registry is watched for the duration of the drive — deltas stream
+    live — and the final counter events come from the bridge's
+    cumulative lanes, so every gated metric and detector finding is
+    identical to an unbridged run (the bridge only changes *when* the
+    deltas are folded, never what they sum to)."""
     if isinstance(sc, str):
         sc = get(sc)
     p = sc.params(size, **(params or {}))
@@ -163,6 +171,7 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
                   "params": dict(sorted(p.items())),
                   "progress_mode": progress_mode})
     fab = build_fabric(sc, engine_mode, registry=reg, trace=writer)
+    src = telemetry.watch(reg) if telemetry is not None else None
     rng = random.Random(seed)
     t0 = time.perf_counter_ns()
     sc.drive(fab, rng, p)
@@ -171,13 +180,17 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
     # deterministic progress-engine lane schedule (same rng continuation
     # for every engine mode, so the stream is mode-independent)
     pe_records = progress_schedule(rng, PE_REQUESTS)
+    lanes = telemetry.unwatch(src) if telemetry is not None else None
     if writer is not None:
         for rec in pe_records:
             writer.emit(dict(rec))
-        writer.snapshot(reg)
+        writer.snapshot(reg, lanes=lanes)
         writer.close()
 
-    events = reg.snapshot_events(t_ns=0)
+    if lanes is not None:
+        events = lane_events(lanes, t_ns=0)
+    else:
+        events = reg.snapshot_events(t_ns=0)
     events += replay_progress(pe_records, mode=progress_mode)
     findings = analyses.analyze_all(events)
     kinds = sorted({f.kind for f in findings})
@@ -211,10 +224,12 @@ def cell_key(scenario: str, engine_mode: str, progress_mode: str) -> str:
 def sweep(size: str = "full", seed: int = 0,
           engine_modes: Sequence[str] = ENGINE_MODES,
           progress_modes: Sequence[str] = PROGRESS_MODES,
-          scenarios: Optional[Sequence[Union[str, Scenario]]] = None
-          ) -> Dict:
+          scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
+          telemetry=None) -> Dict:
     """Every scenario x engine mode x progress mode; returns the
-    versioned ``scenario_sweep.json`` payload."""
+    versioned ``scenario_sweep.json`` payload. A ``telemetry`` bridge
+    streams every cell's counters live without changing any gated
+    metric (see :func:`run_scenario`)."""
     scs = ([get(s) if isinstance(s, str) else s for s in scenarios]
            if scenarios is not None else all_scenarios())
     out: Dict = {
@@ -232,7 +247,8 @@ def sweep(size: str = "full", seed: int = 0,
         for em in engine_modes:
             for pm in progress_modes:
                 run = run_scenario(sc, engine_mode=em, progress_mode=pm,
-                                   seed=seed, size=size)
+                                   seed=seed, size=size,
+                                   telemetry=telemetry)
                 entry["cells"][f"{em}+{pm}"] = run.row()
         out["scenarios"][sc.name] = entry
     out["defect_coverage"] = defect_coverage(out)
