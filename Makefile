@@ -4,7 +4,8 @@ PYTHON ?= python
 	bench-scenarios scenario-smoke scenario-baseline bench-hotpath \
 	hotpath-smoke hotpath-baseline bench-replay-hotpath \
 	replay-hotpath-smoke replay-baseline bench-telemetry \
-	telemetry-smoke tour-timeline tour-match tour-replay \
+	telemetry-smoke bench-corpus corpus-smoke corpus-run \
+	corpus-baseline tour-timeline tour-match tour-replay \
 	tour-telemetry telemetry-tour
 
 verify:
@@ -66,6 +67,26 @@ bench-telemetry:
 
 telemetry-smoke:
 	PYTHONPATH=src $(PYTHON) benchmarks/telemetry_bench.py --smoke
+
+# trace-corpus + parallel-replay gate: committed-corpus regression,
+# sharded-vs-serial equivalence, paired serial/parallel sweep speedup
+# (the speedup bar only arms on hosts with >= 2 usable cores)
+bench-corpus:
+	PYTHONPATH=src $(PYTHON) benchmarks/corpus_bench.py
+
+corpus-smoke:
+	PYTHONPATH=src $(PYTHON) benchmarks/corpus_bench.py --smoke
+
+# replay the committed corpus against the current engine (fast gate)
+corpus-run:
+	PYTHONPATH=src $(PYTHON) scripts/corpus_run.py
+
+# after an intentional engine-behavior change: re-record the corpus
+# traces + expectations, then regenerate both bench baselines
+corpus-baseline:
+	PYTHONPATH=src $(PYTHON) scripts/make_trace_goldens.py --corpus
+	PYTHONPATH=src $(PYTHON) benchmarks/corpus_bench.py --write-baseline
+	PYTHONPATH=src $(PYTHON) benchmarks/corpus_bench.py --smoke --write-baseline
 
 tour-timeline:
 	PYTHONPATH=src:. $(PYTHON) examples/timeline_tour.py

@@ -76,6 +76,13 @@ def main() -> int:
                     help="phase alignment for the differ: 'index' "
                          "(same-trace what-ifs, the default) or 'label' "
                          "(cross-run diffs whose phase indices diverge)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="also replay the trace through the sharded "
+                         "parallel path with N workers and assert "
+                         "stat/finding identity with the serial replays")
+    ap.add_argument("--partition", choices=("rank", "phase"),
+                    default="rank",
+                    help="shard partitioning for --jobs")
     args = ap.parse_args()
     rounds = args.rounds or (12 if args.smoke else 20)
 
@@ -160,6 +167,35 @@ def main() -> int:
             failures.append(f"healthy replay diff flagged: {kinds}")
         if want is not None and want not in kinds:
             failures.append(f"diff fifo->{name} missing {want} flag")
+
+    if args.jobs and args.jobs > 1:
+        import time
+        from repro.corpus import (ReplayPool, finding_kinds,
+                                  parallel_replay, signature)
+        print(f"\n== parallel sharded replay (jobs={args.jobs}, "
+              f"partition={args.partition}) ==")
+        results["parallel"] = {"jobs": args.jobs,
+                               "partition": args.partition, "modes": {}}
+        with ReplayPool(jobs=args.jobs) as pool:
+            for mode in REPLAY_MODES:
+                t0 = time.perf_counter()
+                par = parallel_replay(trace_path, mode=mode,
+                                      jobs=args.jobs,
+                                      partition=args.partition,
+                                      pool=pool)
+                dt = time.perf_counter() - t0
+                serial = replays[mode]
+                same = (signature(par) == signature(serial)
+                        and finding_kinds(par) == finding_kinds(serial)
+                        and par.n_ops == serial.n_ops)
+                results["parallel"]["modes"][mode] = {
+                    "seconds": round(dt, 4), "identical": same}
+                print(f"mode={mode:10s}: {par.n_ops} ops in {dt*1e3:.1f} "
+                      f"ms — {'stat-identical to serial' if same else 'DIVERGED'}")
+                if not same:
+                    failures.append(
+                        f"parallel replay ({mode}, {args.partition}, "
+                        f"jobs={args.jobs}) diverged from serial")
 
     try:
         from benchmarks.common import save_json

@@ -18,6 +18,12 @@ both the PR 4 engine overhaul and the PR 5 trace compaction.
 Regenerate ONLY after an intentional trace-visible behavior change (new
 counters, schema bump, scenario edits) — never to paper over an
 equivalence failure.
+
+``--corpus`` instead (re)seeds the committed trace corpus under
+``tests/corpus/``: deterministic **v3** traces for every scenario x
+engine mode plus ``manifest.json`` with serial-replay expectations (the
+regression surface ``scripts/corpus_run.py`` gates). Same regeneration
+discipline as the goldens; ``make corpus-baseline`` is the front door.
 """
 from __future__ import annotations
 
@@ -40,8 +46,22 @@ GOLDEN_TRACE_CELL = ("sparse_neighbors", "fifo", "smoke")
 GOLDEN_TRACE_FILE = os.path.join(GOLDEN_DIR,
                                  "sparse_neighbors_fifo_smoke.jsonl")
 
+CORPUS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "..", "tests", "corpus")
+
 ENGINE_MODES = ("fifo", "linear", "leaky_umq")
 SEED = 0
+
+
+def seed_corpus_main(root: str, size: str) -> int:
+    from repro.corpus import seed_corpus
+    store = seed_corpus(root, modes=ENGINE_MODES, size=size, seed=SEED)
+    for e in store.entries:
+        print(f"{e.id:36s} {e.n_ops:6d} ops {e.n_phases:4d} phases "
+              f"{e.sha256[:16]}  {e.expected['findings']}")
+    print(f"\n{len(store.entries)} corpus entries written: "
+          f"{store.manifest_path}")
+    return 0
 
 
 def capture(scenario: str, mode: str, size: str, scratch: str,
@@ -61,7 +81,16 @@ def main() -> int:
     ap.add_argument("--schema", type=int, choices=(2, 3), default=2,
                     help="trace schema for the captured goldens "
                          "(committed goldens are frozen at 2)")
+    ap.add_argument("--corpus", action="store_true",
+                    help="seed tests/corpus/ (v3 traces + manifest "
+                         "expectations) instead of the goldens")
+    ap.add_argument("--corpus-dir", default=CORPUS_DIR,
+                    help="corpus root (default: tests/corpus)")
+    ap.add_argument("--size", default="smoke",
+                    help="scenario size for --corpus (default: smoke)")
     args = ap.parse_args()
+    if args.corpus:
+        return seed_corpus_main(args.corpus_dir, args.size)
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     scratch = tempfile.mkdtemp(prefix="goldens_")
     cells = {}

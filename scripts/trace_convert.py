@@ -14,6 +14,12 @@ chunks (typically 3-5x fewer bytes/op on scenario traces).
 the per-phase/per-rank deterministic counter statistics and detector
 findings are equal — the replay-stat round-trip guarantee the perf gate
 (``benchmarks/replay_bench.py``) enforces fleet-wide.
+
+**Directory mode**: when IN is a directory, every ``*.jsonl`` /
+``*.jsonl.gz`` in it is converted into the directory OUT (created if
+missing, same file names), with per-file ``--check`` applied and a
+summary line per file; the exit status is non-zero if *any* file fails
+— bulk-migrating a trace corpus is one command.
 """
 from __future__ import annotations
 
@@ -39,27 +45,45 @@ def main() -> int:
     from repro.workloads.replaybench import (finding_kinds,
                                              phase_signature)
 
-    n_records, n_ops = convert_trace(args.src, args.dst,
-                                     schema=args.schema)
-    s_in = os.path.getsize(args.src)
-    s_out = os.path.getsize(args.dst)
-    print(f"{args.src} -> {args.dst}: {n_records} records "
-          f"({n_ops} engine ops), {s_in:,} -> {s_out:,} bytes "
-          f"({s_in / max(s_out, 1):.2f}x)")
+    def convert_one(src: str, dst: str) -> bool:
+        n_records, n_ops = convert_trace(src, dst, schema=args.schema)
+        s_in = os.path.getsize(src)
+        s_out = os.path.getsize(dst)
+        print(f"{src} -> {dst}: {n_records} records "
+              f"({n_ops} engine ops), {s_in:,} -> {s_out:,} bytes "
+              f"({s_in / max(s_out, 1):.2f}x)")
+        if args.check:
+            a = replay(src, check_matches=False)
+            b = replay(dst, check_matches=False)
+            ok = (phase_signature(a) == phase_signature(b)
+                  and finding_kinds(a) == finding_kinds(b)
+                  and a.n_ops == b.n_ops)
+            if not ok:
+                print(f"CHECK FAILED: replay statistics differ between "
+                      f"{src} and {dst}")
+                return False
+            print(f"  check passed: {len(a.phases)} phases, {a.n_ops} "
+                  f"ops — replay stats and findings identical")
+        return True
 
-    if args.check:
-        a = replay(args.src, check_matches=False)
-        b = replay(args.dst, check_matches=False)
-        ok = (phase_signature(a) == phase_signature(b)
-              and finding_kinds(a) == finding_kinds(b)
-              and a.n_ops == b.n_ops)
-        if not ok:
-            print("CHECK FAILED: replay statistics differ between "
-                  "source and converted trace")
+    if os.path.isdir(args.src):
+        names = sorted(n for n in os.listdir(args.src)
+                       if n.endswith((".jsonl", ".jsonl.gz")))
+        if not names:
+            print(f"no traces (*.jsonl[.gz]) in {args.src}")
             return 1
-        print(f"check passed: {len(a.phases)} phases, {a.n_ops} ops — "
-              "replay stats and findings identical")
-    return 0
+        if os.path.exists(args.dst) and not os.path.isdir(args.dst):
+            print(f"{args.src} is a directory, so {args.dst} must be one")
+            return 1
+        os.makedirs(args.dst, exist_ok=True)
+        bad = [n for n in names
+               if not convert_one(os.path.join(args.src, n),
+                                  os.path.join(args.dst, n))]
+        print(f"\n{len(names) - len(bad)}/{len(names)} traces converted"
+              + (f", {len(bad)} FAILED: {bad}" if bad else ""))
+        return 1 if bad else 0
+
+    return 0 if convert_one(args.src, args.dst) else 1
 
 
 if __name__ == "__main__":

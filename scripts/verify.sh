@@ -80,3 +80,11 @@ echo "== live-telemetry gate (bridged overhead paired-median + mid-run finding) 
 # >= 0.95x unbridged at the default poll period (in-run pairs), and the
 # leaky-UMQ storm's umq_flood must reach /findings before the run ends
 python benchmarks/telemetry_bench.py --smoke
+
+echo "== corpus + parallel-replay gate (committed corpus, shard equivalence, sweep speedup) =="
+# the committed tests/corpus manifest must replay clean against the
+# current engine, sharded parallel replay must be stat-identical to
+# serial on every entry, and the paired serial/parallel sweep speedup
+# (>= 1.3x smoke / 2x full) is gated when >= 2 cores are usable —
+# on single-core hosts the ratio is recorded with a loud SKIP note
+python benchmarks/corpus_bench.py --smoke

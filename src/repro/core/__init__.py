@@ -9,7 +9,8 @@ from . import (analyses, comparison, compat, counters, graphframe, hlo,
 from .collector import Collector, global_collector, reset_global_collector
 from .counters import (CounterLane, CounterRegistry, CounterStat,
                        counter_stats, global_registry, lane_events,
-                       merge_lane_stats, reset_global_registry)
+                       merge_lane_stats, reduce_lanes,
+                       reset_global_registry)
 from .comparison import (ComparisonResult, ProfileReport, ReportRow,
                          compare, compare_frames, profile_runs)
 from .events import Event
@@ -22,7 +23,7 @@ __all__ = [
     "hlo_cost", "regions", "timeline", "Collector", "global_collector",
     "reset_global_collector", "CounterLane", "CounterRegistry", "CounterStat",
     "counter_stats", "global_registry", "lane_events", "merge_lane_stats",
-    "reset_global_registry",
+    "reduce_lanes", "reset_global_registry",
     "ComparisonResult", "ProfileReport", "ReportRow", "compare",
     "compare_frames", "profile_runs", "Event",
     "GraphFrame", "annotate", "annotate_jax", "configure", "profiled",

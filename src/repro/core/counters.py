@@ -780,6 +780,19 @@ def merge_lane_stats(dst: Dict[int, Dict[str, CounterStat]],
     return nd
 
 
+def reduce_lanes(parts: Iterable[Dict[int, Dict[str, CounterStat]]]
+                 ) -> Dict[int, Dict[str, CounterStat]]:
+    """Reduce per-pid lane stat maps from independent shards into one map
+    (the lane-merge step of :mod:`repro.corpus` sharded replay). Shards
+    own disjoint pid sets under rank partitioning, so this is a plain
+    union there; overlapping pids merge stat-by-stat. The result adopts
+    (takes ownership of) the stats it absorbs."""
+    out: Dict[int, Dict[str, CounterStat]] = {}
+    for part in parts:
+        merge_lane_stats(out, part)
+    return out
+
+
 def counter_stats(events: Iterable[Event]) -> Dict[str, CounterStat]:
     """Inverse of :meth:`CounterRegistry.snapshot_events`: collect counter
     Events (merging multiple snapshots of the same name) back into stats."""

@@ -64,10 +64,34 @@ class TelemetryBridge:
                  umq_mean_length: float = 8.0,
                  prq_mean_depth: float = 8.0,
                  prq_min_samples: int = 32,
-                 contention_window_s: float = 0.25):
+                 contention_window_s: float = 0.25,
+                 adaptive: bool = False,
+                 min_period_s: Optional[float] = None,
+                 max_period_s: Optional[float] = None,
+                 backoff: float = 1.5):
         if period_s <= 0:
             raise ValueError("poll period must be positive")
         self.period_s = period_s
+        # Adaptive pacing (opt-in; default off so the fixed-period
+        # overhead-gate semantics are untouched): each zero-delta poll
+        # backs the period off by `backoff` toward max_period_s — an
+        # idle workload costs ever fewer snapshots — and each poll that
+        # adopts deltas tightens it by the same factor toward
+        # min_period_s, so a dense frame stream is sampled finely.
+        self.adaptive = adaptive
+        self.backoff = backoff
+        self.min_period_s = (min_period_s if min_period_s is not None
+                             else period_s / 4.0)
+        self.max_period_s = (max_period_s if max_period_s is not None
+                             else period_s * 16.0)
+        if adaptive:
+            if backoff <= 1.0:
+                raise ValueError("adaptive backoff must be > 1")
+            if not 0 < self.min_period_s <= self.max_period_s:
+                raise ValueError("need 0 < min_period_s <= max_period_s")
+        self.current_period_s = min(max(period_s, self.min_period_s),
+                                    self.max_period_s) \
+            if adaptive else period_s
         self.session = session
         self.detectors = detectors
         self.umq_max_length = umq_max_length
@@ -190,13 +214,16 @@ class TelemetryBridge:
 
     # -- polling -----------------------------------------------------------
 
-    def poll(self) -> None:
+    def poll(self) -> int:
         """One synchronous poll of every watched source (the background
-        thread calls this; tests and unthreaded callers may too)."""
+        thread calls this; tests and unthreaded callers may too).
+        Returns the number of logical deltas adopted by this poll — the
+        signal the adaptive pacer steers on."""
         with self._lock:
-            self._poll_locked()
+            return self._poll_locked()
 
-    def _poll_locked(self, only: Optional[str] = None) -> None:
+    def _poll_locked(self, only: Optional[str] = None) -> int:
+        nd_poll = 0
         if not self._header_sent:
             self._send_header_locked()
         ts = now_ms()
@@ -216,6 +243,7 @@ class TelemetryBridge:
                 nd = merge_lane_stats(self.cumulative[name], lanes)
                 frame["m"]["nd"] = nd
                 self.deltas_total += nd
+                nd_poll += nd
                 self._push(frame)
             if self.detectors:
                 self._detect_lanes_locked(name, ts)
@@ -224,6 +252,7 @@ class TelemetryBridge:
                 for name, col in list(self._collectors.items()):
                     self._detect_contention_locked(name, col, ts)
             self.polls += 1
+        return nd_poll
 
     def _send_header_locked(self) -> None:
         names = list(self._registries) + list(self._collectors)
@@ -283,11 +312,20 @@ class TelemetryBridge:
         return self
 
     def _run(self) -> None:
-        while not self._stop.wait(self.period_s):
+        while not self._stop.wait(self.current_period_s):
             try:
-                self.poll()
+                nd = self.poll()
             except Exception:
                 self.poll_errors += 1
+                continue
+            if self.adaptive:
+                self._adapt(nd)
+
+    def _adapt(self, nd: int) -> None:
+        p = self.current_period_s
+        p = p / self.backoff if nd else p * self.backoff
+        self.current_period_s = min(max(p, self.min_period_s),
+                                    self.max_period_s)
 
     def stop(self) -> None:
         """Stop the poll thread, run one final poll (nothing buffered at

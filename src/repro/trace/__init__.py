@@ -10,8 +10,9 @@ from .io import (TraceReader, TraceWriter, convert_trace, iter_trace,
                  read_trace)
 from .legacy_replay import LegacyReplayer, legacy_replay
 from .recorder import record_collectives, record_fabric
-from .replay import (LOCK_REGION, PhaseStats, Replayer, ReplayResult,
-                     replay, replay_progress)
+from .replay import (LOCK_REGION, PartitionScan, PhaseStats, Replayer,
+                     ReplayResult, replay, replay_progress,
+                     scan_partition)
 from .schema import (SCHEMA_VERSION, SUPPORTED_VERSIONS, TRACE_FORMAT,
                      WRITABLE_VERSIONS, TraceFormatError,
                      TraceSchemaError, decode_chunk, decode_pe_chunk,
@@ -23,8 +24,8 @@ __all__ = [
     "read_trace",
     "LegacyReplayer", "legacy_replay",
     "record_collectives", "record_fabric",
-    "LOCK_REGION", "PhaseStats", "Replayer", "ReplayResult", "replay",
-    "replay_progress",
+    "LOCK_REGION", "PartitionScan", "PhaseStats", "Replayer",
+    "ReplayResult", "replay", "replay_progress", "scan_partition",
     "SCHEMA_VERSION", "SUPPORTED_VERSIONS", "TRACE_FORMAT",
     "WRITABLE_VERSIONS", "TraceFormatError", "TraceSchemaError",
     "decode_chunk", "decode_pe_chunk", "make_header", "validate_header",

@@ -43,7 +43,8 @@ from __future__ import annotations
 
 import dataclasses
 from itertools import accumulate, repeat
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+from typing import (Dict, FrozenSet, Iterable, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -134,6 +135,19 @@ class ReplayResult:
             self._recorded_stats = _parse_snap(self._raw_snap)
             self._raw_snap = None
         return self._recorded_stats
+
+    @property
+    def pe_records(self) -> List[Dict]:
+        """The recorded progress-engine lane records (expanded), as fed
+        to :func:`replay_progress` — the transportable form sharded
+        replay merges across workers."""
+        return self._pe_records
+
+    @property
+    def raw_snapshot(self) -> Optional[Dict]:
+        """The unparsed final ``snap`` record, if the trace carried one
+        and :attr:`recorded_stats` has not consumed it yet."""
+        return self._raw_snap
 
     @property
     def progress_events(self) -> List[Event]:
@@ -324,6 +338,55 @@ def replay_progress(pe_records: Sequence[Dict], mode: str = "incoming",
     return events
 
 
+@dataclasses.dataclass
+class PartitionScan:
+    """Cheap pre-scan of a trace for shard planning (no replay, no chunk
+    expansion): which ranks appear and how many ops each carries, how
+    many phases the stream is cut into, and the total op count."""
+
+    header: Dict
+    rank_ops: Dict[int, int]
+    n_phases: int
+    n_ops: int
+
+    @property
+    def ranks(self) -> List[int]:
+        return sorted(self.rank_ops)
+
+
+def scan_partition(source: Union[str, TraceReader]) -> PartitionScan:
+    """Scan a trace once (raw chunks, columns never expanded) and return
+    the partitionable structure :func:`repro.corpus.parallel_replay`
+    plans shards from."""
+    reader = (source if isinstance(source, TraceReader)
+              else iter_trace(str(source), expand=False))
+    rank_ops: Dict[int, int] = {}
+    n_phases = 1
+    n_ops = 0
+    for rec in reader:
+        kind = rec["t"]
+        if kind == REC_CHUNK:
+            n = rec["n"]
+            n_ops += n
+            r = rec["r"]
+            if type(r) is int:
+                rank_ops[r] = rank_ops.get(r, 0) + n
+            else:
+                vals, counts = np.unique(
+                    np.cumsum(np.asarray(r, dtype=np.int64)),
+                    return_counts=True)
+                for rank, cnt in zip(vals.tolist(), counts.tolist()):
+                    rank_ops[rank] = rank_ops.get(rank, 0) + cnt
+        elif kind == REC_POST or kind == REC_ARRIVE:
+            n_ops += 1
+            rank = rec["rank"]
+            rank_ops[rank] = rank_ops.get(rank, 0) + 1
+        elif kind == REC_PHASE:
+            n_phases += 1
+    return PartitionScan(header=reader.header, rank_ops=rank_ops,
+                         n_phases=n_phases, n_ops=n_ops)
+
+
 class Replayer:
     """Re-drive a recorded trace through an alternate engine config.
 
@@ -332,15 +395,43 @@ class Replayer:
     events (default: leave them out unless the trace has any, then replay
     as ``"incoming"``). ``check_matches=False`` selects the batched
     streaming path (no per-op outcome verification — see the module
-    docstring)."""
+    docstring).
+
+    The batched path can additionally replay a *partition* of the stream
+    (the primitive under :mod:`repro.corpus` sharded replay):
+
+      * ``ranks`` — replay only these ranks' ops. Sound because every
+        rank's engine is fully independent: filtering is exact, not
+        approximate, and the per-phase stats for the selected ranks are
+        identical to a full replay's.
+      * ``phase_range=(lo, hi)`` — record only phases ``lo..hi-1``.
+        Engine state (UMQ leaks, posted receives) legitimately crosses
+        phase boundaries, so earlier phases are still *driven* as warmup
+        with counters disabled; the stream is abandoned once ``hi`` is
+        reached unless the range extends to the end (the tail shard also
+        owns the trailing progress records and snapshot).
+
+    Both require ``check_matches=False`` (the verification path compares
+    per-op outcomes against the full recorded stream and would report
+    every filtered op as a divergence)."""
 
     def __init__(self, mode: Optional[str] = None,
                  progress_mode: Optional[str] = None,
-                 phase_ns: int = PHASE_NS, check_matches: bool = True):
+                 phase_ns: int = PHASE_NS, check_matches: bool = True,
+                 ranks: Optional[Iterable[int]] = None,
+                 phase_range: Optional[Tuple[int, int]] = None):
         self.mode = mode
         self.progress_mode = progress_mode
         self.phase_ns = phase_ns
         self.check_matches = check_matches
+        self.ranks: Optional[FrozenSet[int]] = (
+            None if ranks is None else frozenset(ranks))
+        self.phase_range = phase_range
+        if check_matches and (self.ranks is not None
+                              or phase_range is not None):
+            raise ValueError(
+                "partitioned replay (ranks/phase_range) requires "
+                "check_matches=False")
 
     def _open(self, source
               ) -> Tuple[Dict, Iterable[Dict]]:
@@ -483,9 +574,22 @@ class Replayer:
                     rank=rank, mode=mode, registry=registry.lane(rank))
             return eng
 
+        rsel = self.ranks
+        prange = self.phase_range
+        lo, hi = prange if prange is not None else (0, None)
+        # rec_on: current phase is inside the recorded range. Warmup
+        # phases (phase partitioning) are driven with counters disabled —
+        # the engine checks ``registry.enabled`` per counting site, so
+        # queue state evolves identically while stats stay silent.
+        rec_on = prange is None or lo <= 0
+        if prange is not None:
+            registry.enabled = rec_on
+        stopped = False
+
         phases: List[PhaseStats] = []
         pe_records: List[Dict] = []
         raw_snap: Optional[Dict] = None
+        pidx = 0
         current = PhaseStats(index=0, label="prologue", op="phase")
         # rank -> ordered dispatch segments, each one batch-engine call:
         #   [1, tag, comm, 0,  srcs]   post_recv_batch / post_recv
@@ -525,33 +629,43 @@ class Replayer:
             # streaming flush: per-rank stats come straight off the
             # columnar counter-sink drain (snapshot_lanes) — no Event
             # materialization, no attrs round-trip; ReplayResult builds
-            # the identical Events lazily if anything asks for them
+            # the identical Events lazily if anything asks for them.
+            # Warmup phases (outside phase_range) still dispatch and
+            # reset the wall span, but record nothing.
             nonlocal wall_lo
             flush_ops()
-            current.stats = registry.snapshot_lanes()
-            if wall_lo is not None:
-                current.wall_ns = wall_hi - wall_lo
-                wall_lo = None
-            phases.append(current)
+            if rec_on:
+                current.stats = registry.snapshot_lanes()
+                if wall_lo is not None:
+                    current.wall_ns = wall_hi - wall_lo
+                phases.append(current)
+            wall_lo = None
 
         for rec in records:
             kind = rec["t"]
             if kind == REC_CHUNK:
                 n = rec["n"]
-                n_ops += n
                 w = rec.get("w")
                 if w is not None:
                     # t_wall is monotone within a chunk: the span is
                     # first value .. cumulative sum of the delta list
                     if type(w) is int:
-                        lo = hi = w
+                        wlo = whi = w
                     else:
-                        lo, hi = w[0], sum(w)
+                        wlo, whi = w[0], sum(w)
                     if wall_lo is None:
-                        wall_lo = lo
-                    wall_hi = hi
+                        wall_lo = wlo
+                    wall_hi = whi
                 p = rec["p"]
                 r = rec["r"]
+                if rsel is not None and type(r) is int and r not in rsel:
+                    continue
+                # op accounting: whole constant-rank chunks (and every
+                # chunk when unfiltered) count here; rank-varying chunks
+                # under a rank filter count per group below
+                split_count = rsel is not None and type(r) is not int
+                if rec_on and not split_count:
+                    n_ops += n
                 s = rec["s"]
                 g = rec["g"]
                 c = rec.get("c", 0)
@@ -601,6 +715,10 @@ class Replayer:
                         # segments with the src block lifted wholesale
                         for idx in np.split(order, cuts):
                             rank = int(ra[idx[0]])
+                            if rsel is not None and rank not in rsel:
+                                continue
+                            if rec_on and split_count:
+                                n_ops += len(idx)
                             segs = get_segs(rank)
                             if segs is None:
                                 segs = pending[rank] = []
@@ -632,6 +750,10 @@ class Replayer:
                                    c, dtype=np.int64)))
                     for idx in np.split(order, cuts):
                         rank = int(ra[idx[0]])
+                        if rsel is not None and rank not in rsel:
+                            continue
+                        if rec_on and split_count:
+                            n_ops += len(idx)
                         segs = get_segs(rank)
                         if segs is None:
                             segs = pending[rank] = []
@@ -649,6 +771,10 @@ class Replayer:
                 for p_, r_, s_, g_, c_ in zip(flags, ranks, srcs, tags,
                                               comms):
                     nb_ = 0 if p_ else next(nbs)
+                    if rsel is not None and r_ not in rsel:
+                        continue
+                    if rec_on and split_count:
+                        n_ops += 1
                     segs = get_segs(r_)
                     if segs is None:
                         segs = pending[r_] = [[p_, g_, c_, nb_, [s_]]]
@@ -666,8 +792,11 @@ class Replayer:
                     wall_lo = tw
                 wall_hi = tw
             if kind == REC_POST or kind == REC_ARRIVE:
-                n_ops += 1
                 r = rec["rank"]
+                if rsel is not None and r not in rsel:
+                    continue
+                if rec_on:
+                    n_ops += 1
                 p_ = 1 if kind == REC_POST else 0
                 g_ = rec["tag"]
                 c_ = rec.get("comm", 0)
@@ -685,13 +814,28 @@ class Replayer:
                         segs.append([p_, g_, c_, nb_, [s_]])
             elif kind == REC_PHASE:
                 flush_phase()
+                pidx += 1
                 current = PhaseStats(
-                    index=len(phases), label=rec["label"], op=rec["op"],
+                    index=pidx, label=rec["label"], op=rec["op"],
                     attrs={k: v for k, v in rec.items()
                            if k not in ("t", "op", "label")})
+                if prange is not None:
+                    rec_on = lo <= pidx < hi
+                    registry.enabled = rec_on
+                    if pidx >= hi:
+                        # range fully recorded and it does not extend to
+                        # the stream tail: nothing left for this shard
+                        stopped = True
+                        break
             elif kind == REC_PROGRESS:
-                pe_records.append(rec)
+                # under phase partitioning, aux records (progress lanes,
+                # final snapshot) belong to the shard whose range covers
+                # them; the merge concatenates shards in phase order
+                if rec_on:
+                    pe_records.append(rec)
             elif kind == REC_PE_CHUNK:
+                if not rec_on:
+                    continue
                 expanded = decode_pe_chunk(rec)
                 pe_records.extend(expanded)
                 for pe in expanded:
@@ -701,8 +845,10 @@ class Replayer:
                             wall_lo = tw
                         wall_hi = tw
             elif kind == REC_SNAPSHOT:
-                raw_snap = rec
-        flush_phase()
+                if rec_on:
+                    raw_snap = rec
+        if not stopped:
+            flush_phase()
 
         progress_mode = self.progress_mode
         if pe_records:

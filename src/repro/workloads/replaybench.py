@@ -43,6 +43,7 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core import analyses
+from ..corpus.codec import DETERMINISTIC_COUNTERS
 from ..match import canonical_mode
 from ..trace.io import convert_trace
 from ..trace.legacy_replay import LegacyReplayer
@@ -61,10 +62,9 @@ GATED_MODE = "binned"
 REPLAY_MODES = ("binned", "linear", "leaky_umq")
 
 # counters whose values are pure functions of the recorded op stream
-DETERMINISTIC = ("match.expected", "match.unexpected", "match.umq.hit",
-                 "match.umq.leaked", "match.prq.traversal_depth",
-                 "match.umq.traversal_depth", "match.prq.length",
-                 "match.umq.length")
+# (canonical home: repro.corpus.codec — the corpus service commits and
+# compares exactly this surface)
+DETERMINISTIC = DETERMINISTIC_COUNTERS
 
 
 def record_pair(sc: Union[str, Scenario], size: str = "full",

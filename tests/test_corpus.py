@@ -1,0 +1,284 @@
+"""Parallel sharded replay + trace-corpus regression service.
+
+The load-bearing property: ``parallel_replay`` is *stat-identical* to
+serial ``replay()`` — same per-phase/per-rank deterministic counter
+signature, same detector findings, same op count — for every partition
+strategy, job count and engine mode. The matrix runs through
+:class:`InlinePool` (in-process, exercises the identical shard/merge
+code without process-spawn cost); a module-scoped real spawn
+:class:`ReplayPool` covers the actual multiprocessing transport once.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.corpus import (CorpusStore, InlinePool, ReplayPool,
+                          finding_kinds, parallel_replay, plan_shards,
+                          run_corpus, signature, signature_phases)
+from repro.corpus.codec import (decode_phases, encode_phases,
+                                result_from_signature)
+from repro.trace.replay import Replayer, scan_partition
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+CORPUS_ROOT = os.path.join(HERE, "corpus")
+REPO = os.path.dirname(HERE)
+
+# the equivalence matrix's corpus slice: every engine mode, a
+# single-rank trace (rank partition degenerates to one shard) and a
+# wide 16-rank one
+MATRIX_ENTRIES = ("ring_allreduce__fifo", "ring_allreduce__linear",
+                  "ring_allreduce__leaky_umq", "master_worker__fifo",
+                  "sparse_neighbors__leaky_umq")
+
+
+@pytest.fixture(scope="module")
+def store():
+    return CorpusStore.load(CORPUS_ROOT)
+
+
+@pytest.fixture(scope="module")
+def spawn_pool():
+    with ReplayPool(jobs=2) as pool:
+        yield pool
+
+
+def _serial(path):
+    return Replayer(check_matches=False).run(path)
+
+
+# ------------------------------------------------------ partitioning
+
+
+def test_scan_partition_matches_serial_replay(store):
+    entry = store.get("halo3d__fifo")
+    path = store.path(entry)
+    scan = scan_partition(path)
+    res = _serial(path)
+    assert scan.n_ops == res.n_ops == entry.n_ops
+    assert sum(scan.rank_ops.values()) == scan.n_ops
+    assert scan.n_phases == len(res.phases) == entry.n_phases
+    # every pid that produced stats is a scanned rank
+    pids = {pid for ph in res.phases for pid in ph.stats}
+    assert pids <= set(scan.ranks)
+
+
+@pytest.mark.parametrize("jobs", (1, 2, 4))
+def test_plan_shards_rank_partition_is_exact_cover(store, jobs):
+    scan = scan_partition(store.path(store.get("sparse_neighbors__fifo")))
+    shards = plan_shards(scan, jobs, "rank")
+    assert 1 <= len(shards) <= jobs
+    seen = []
+    for kind, spec in shards:
+        assert kind == "rank"
+        seen.extend(spec)
+    assert sorted(seen) == list(scan.ranks)      # disjoint exact cover
+
+
+@pytest.mark.parametrize("jobs", (1, 2, 4))
+def test_plan_shards_phase_partition_is_contiguous(store, jobs):
+    scan = scan_partition(store.path(store.get("halo3d__fifo")))
+    shards = plan_shards(scan, jobs, "phase")
+    assert 1 <= len(shards) <= jobs
+    cursor = 0
+    for kind, (lo, hi) in shards:
+        assert kind == "phase"
+        assert lo == cursor and hi > lo
+        cursor = hi
+    assert cursor == scan.n_phases
+
+
+# ------------------------------------------- sharded-vs-serial matrix
+
+
+@pytest.mark.parametrize("entry_id", MATRIX_ENTRIES)
+@pytest.mark.parametrize("partition", ("rank", "phase"))
+@pytest.mark.parametrize("jobs", (1, 2, 4))
+def test_parallel_replay_stat_identical(store, entry_id, partition,
+                                        jobs):
+    entry = store.get(entry_id)
+    path = store.path(entry)
+    serial = _serial(path)
+    with InlinePool() as pool:
+        par = parallel_replay(path, jobs=jobs, partition=partition,
+                              pool=pool)
+    assert par.n_ops == serial.n_ops
+    assert signature(par) == signature(serial)
+    assert finding_kinds(par) == finding_kinds(serial)
+
+
+def test_parallel_replay_mode_override(store):
+    """Sharded what-if replay: overriding the engine mode shards the
+    same way and still matches the serial replay under that mode."""
+    path = store.path(store.get("master_worker__fifo"))
+    serial = Replayer(mode="linear", check_matches=False).run(path)
+    with InlinePool() as pool:
+        par = parallel_replay(path, mode="linear", jobs=3,
+                              partition="phase", pool=pool)
+    assert signature(par) == signature(serial)
+    assert "long_traversal" in finding_kinds(par)
+
+
+def test_parallel_replay_through_spawn_pool(store, spawn_pool):
+    """The real multiprocessing transport: spawn workers, pickled
+    shard payloads, merged lanes — still bit-identical."""
+    for entry_id in ("ring_allreduce__leaky_umq", "master_worker__fifo"):
+        path = store.path(store.get(entry_id))
+        serial = _serial(path)
+        par = parallel_replay(path, jobs=2, partition="rank",
+                              pool=spawn_pool)
+        assert signature(par) == signature(serial)
+        assert finding_kinds(par) == finding_kinds(serial)
+        assert par.n_ops == serial.n_ops
+
+
+# ---------------------------------------------------------- the codec
+
+
+def test_encode_decode_phases_round_trip(store):
+    res = _serial(store.path(store.get("wildcard_pipeline__fifo")))
+    back = decode_phases(encode_phases(res.phases))
+    assert len(back) == len(res.phases)
+    for a, b in zip(res.phases, back):
+        assert (a.index, a.label, a.op, a.wall_ns) == \
+               (b.index, b.label, b.op, b.wall_ns)
+        assert encode_phases([a]) == encode_phases([b])
+
+
+def test_signature_round_trip_preserves_deterministic_stats(store):
+    res = _serial(store.path(store.get("unexpected_storm__leaky_umq")))
+    sig = signature(res)
+    back = signature_phases(sig)
+    rebuilt = result_from_signature(sig, mode=res.mode)
+    assert signature(rebuilt) == sig
+    assert [p.label for p in back] == [p.label for p in res.phases]
+    # reconstructed stats feed the differ/detectors identically
+    assert finding_kinds(rebuilt) == finding_kinds(res)
+
+
+# ------------------------------------------------------ corpus runner
+
+
+def test_run_corpus_clean_on_committed_corpus(store):
+    with InlinePool() as pool:
+        result = run_corpus(store, pool=pool)
+    assert result.ok, result.failures
+    assert len(result.results) == len(store.entries)
+    assert "entries clean" in result.render()
+    assert not result.report.regressed()
+
+
+def test_run_corpus_entry_selection(store):
+    with InlinePool() as pool:
+        result = run_corpus(store, pool=pool,
+                            entries=["master_worker__fifo"])
+    assert [r.id for r in result.results] == ["master_worker__fifo"]
+    with pytest.raises(KeyError):
+        run_corpus(store, pool=InlinePool(), entries=["no_such_entry"])
+
+
+def test_run_corpus_divergence_injection_fails_loudly(store):
+    """A defective engine must not pass: overriding fifo entries to the
+    linear engine diverges, and the failure is pointed — a label-aligned
+    diff naming the defect shape."""
+    with InlinePool() as pool:
+        result = run_corpus(store, pool=pool, mode_override="linear",
+                            entries=["master_worker__fifo"])
+    assert not result.ok
+    (res,) = result.results
+    assert any("signature diverges" in f for f in res.failures)
+    assert "long_traversal" in res.flags
+    assert res.diff_text            # the pointed per-cell diff report
+    assert "FAIL" in result.render()
+
+
+def test_run_corpus_detects_tampered_and_missing_traces(store, tmp_path):
+    root = tmp_path / "corpus"
+    shutil.copytree(CORPUS_ROOT, root)
+    with open(root / "master_worker__fifo.jsonl", "a") as f:
+        f.write("\n")                        # one byte of tamper
+    os.remove(root / "halo3d__fifo.jsonl")
+    tampered = CorpusStore.load(str(root))
+    with InlinePool() as pool:
+        result = run_corpus(tampered, pool=pool,
+                            entries=["master_worker__fifo",
+                                     "halo3d__fifo"])
+    verdicts = {r.id: r for r in result.results}
+    assert not result.ok
+    assert any("sha256 mismatch" in f
+               for f in verdicts["master_worker__fifo"].failures)
+    assert any("unreadable" in f
+               for f in verdicts["halo3d__fifo"].failures)
+
+
+def test_corpus_runner_through_spawn_pool(store, spawn_pool):
+    sel = ["ring_allreduce__fifo", "ring_allreduce__linear",
+           "ring_allreduce__leaky_umq"]
+    result = run_corpus(store, pool=spawn_pool, entries=sel)
+    assert result.ok, result.failures
+
+
+# ------------------------------------------------------------- store
+
+
+def test_store_manifest_round_trip(store, tmp_path):
+    root = tmp_path / "corpus"
+    shutil.copytree(CORPUS_ROOT, root)
+    loaded = CorpusStore.load(str(root))
+    loaded.save()
+    again = CorpusStore.load(str(root))
+    assert [e.to_json() for e in again.entries] == \
+           [e.to_json() for e in store.entries]
+
+
+def test_store_rejects_wrong_format(tmp_path):
+    root = tmp_path / "corpus"
+    root.mkdir()
+    (root / "manifest.json").write_text(json.dumps(
+        {"format": "something_else", "version": 1, "entries": []}))
+    with pytest.raises(ValueError):
+        CorpusStore.load(str(root))
+
+
+# ------------------------------------------------------------ the CLIs
+
+
+def _run_cli(args, cwd=REPO):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run([sys.executable] + args, cwd=cwd, env=env,
+                          capture_output=True, text=True, timeout=240)
+
+
+def test_corpus_run_cli_pass_and_divergence():
+    ok = _run_cli(["scripts/corpus_run.py", "--jobs", "1", "--entries",
+                   "master_worker__fifo", "wildcard_pipeline__linear"])
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert "corpus gate passed" in ok.stdout
+    bad = _run_cli(["scripts/corpus_run.py", "--jobs", "1", "--entries",
+                    "master_worker__fifo", "--mode", "linear"])
+    assert bad.returncode == 1
+    assert "CORPUS GATE FAILED" in bad.stderr
+    assert "long_traversal" in bad.stdout
+
+
+def test_trace_convert_directory_mode(tmp_path):
+    src = tmp_path / "in"
+    src.mkdir()
+    for name in ("master_worker__fifo.jsonl", "ring_allreduce__fifo.jsonl"):
+        shutil.copy(os.path.join(CORPUS_ROOT, name), src / name)
+    dst = tmp_path / "out"
+    res = _run_cli(["scripts/trace_convert.py", str(src), str(dst),
+                    "--schema", "2", "--check"])
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "2/2 traces converted" in res.stdout
+    assert sorted(os.listdir(dst)) == ["master_worker__fifo.jsonl",
+                                       "ring_allreduce__fifo.jsonl"]
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    res2 = _run_cli(["scripts/trace_convert.py", str(empty), str(dst)])
+    assert res2.returncode == 1

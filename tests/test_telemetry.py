@@ -220,6 +220,52 @@ def test_bridge_finding_parity_with_post_hoc():
                     ("long_traversal", 0), ("long_traversal", 3)}
 
 
+def test_adaptive_pacer_backs_off_idle_and_tightens_dense():
+    """Zero-delta polls walk the period up to max_period_s; delta-bearing
+    polls walk it back down to min_period_s — clamped at both ends."""
+    reg = CounterRegistry()
+    bridge = TelemetryBridge(period_s=0.01, adaptive=True, backoff=2.0)
+    src = bridge.watch(reg)
+    assert bridge.current_period_s == 0.01
+    for _ in range(12):                      # idle: nothing to drain
+        bridge._adapt(bridge.poll())
+    assert bridge.current_period_s == bridge.max_period_s == 0.16
+    _produce(reg, 0, 8)
+    bridge._adapt(bridge.poll())
+    assert bridge.current_period_s < bridge.max_period_s
+    for _ in range(12):                      # dense: deltas every poll
+        _produce(reg, 0, 4)
+        bridge._adapt(bridge.poll())
+    assert bridge.current_period_s == bridge.min_period_s == 0.0025
+    lanes = bridge.unwatch(src)
+    assert lanes[0]["match.posted"].count == 8 + 12 * 4
+
+
+def test_adaptive_defaults_off_and_validates():
+    fixed = TelemetryBridge(period_s=0.01)
+    assert fixed.adaptive is False
+    assert fixed.current_period_s == 0.01   # pacer never touches it
+    with pytest.raises(ValueError):
+        TelemetryBridge(adaptive=True, backoff=1.0)
+    with pytest.raises(ValueError):
+        TelemetryBridge(adaptive=True, min_period_s=0.5,
+                        max_period_s=0.1)
+
+
+def test_adaptive_bridge_accounting_identical():
+    """Adaptive pacing changes *when* polls land, never what they sum
+    to: cumulative lanes and findings match the fixed-period run."""
+    off = run_scenario("unexpected_storm", engine_mode="leaky_umq",
+                       size="smoke")
+    bridge = TelemetryBridge(period_s=0.005, adaptive=True)
+    with bridge:
+        on = run_scenario("unexpected_storm", engine_mode="leaky_umq",
+                          size="smoke", telemetry=bridge)
+    for m in ("n_ops", "depth_mean", "depth_max", "umq_mean", "umq_max",
+              "finding_kinds", "defect_kinds"):
+        assert getattr(off, m) == getattr(on, m), m
+
+
 def test_run_scenario_parity_with_bridge():
     off = run_scenario("unexpected_storm", engine_mode="leaky_umq",
                        size="smoke")
