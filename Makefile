@@ -1,7 +1,8 @@
 PYTHON ?= python
 
 .PHONY: verify test bench-match bench-replay replay-smoke \
-	bench-scenarios scenario-smoke scenario-baseline bench-hotpath \
+	bench-scenarios scenario-smoke faults-smoke bench-faults \
+	scenario-baseline bench-hotpath \
 	hotpath-smoke hotpath-baseline bench-replay-hotpath \
 	replay-hotpath-smoke replay-baseline bench-telemetry \
 	telemetry-smoke bench-corpus corpus-smoke corpus-run \
@@ -29,10 +30,19 @@ bench-scenarios:
 scenario-smoke:
 	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke
 
-# after an intentional behavior change: regenerate both committed baselines
+# fault-injection axis: every scenario x fault kind under the canonical
+# plans, with detector-coverage + fault-free-cleanliness gates
+faults-smoke:
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --faults
+
+bench-faults:
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --faults
+
+# after an intentional behavior change: regenerate both committed
+# baselines (fault cells included)
 scenario-baseline:
-	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --write-baseline
-	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --write-baseline
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --faults --write-baseline
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --faults --write-baseline
 
 # hot-path throughput gate: >= 3x the frozen pre-overhaul engine,
 # measured in-run (machine-load-proof ratio)

@@ -19,6 +19,14 @@ one versioned ``results/bench/scenario_sweep.json``, and enforces:
    exactly (timing is advisory). ``--write-baseline`` regenerates it
    after an intentional behavior change.
 
+With ``--faults`` the sweep adds the fault axis (``make faults-smoke``;
+the verify gate runs ``--smoke --faults``): each scenario also runs once
+per injected fault kind (``repro.faults.KINDS``) under fifo+incoming,
+and the gate additionally enforces that every scenario's declared
+``fault_expect`` kinds are flagged by their dedicated detector, that
+each fault kind is caught in at least 2 scenarios, and that all
+fault-free cells stay free of fault-class findings.
+
 Exit status is non-zero on any failed condition, so this file doubles
 as a regression gate (``make bench-scenarios``; ``scripts/verify.sh``
 runs the smoke size).
@@ -59,6 +67,10 @@ def main() -> int:
                          "chosen size)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="regenerate the baseline from this sweep")
+    ap.add_argument("--faults", action="store_true",
+                    help="add the fault-injection axis: one faulted cell "
+                         "per scenario x fault kind, with coverage and "
+                         "cleanliness gates")
     ap.add_argument("--telemetry", action="store_true",
                     help="stream every cell's counters live over HTTP/SSE "
                          "while the sweep runs (gated metrics unchanged)")
@@ -81,7 +93,7 @@ def main() -> int:
     print(f"== scenario sweep (size={size}, seed={args.seed}) ==")
     try:
         results = workloads.sweep(size=size, seed=args.seed,
-                                  telemetry=bridge)
+                                  telemetry=bridge, faults=args.faults)
     finally:
         if bridge is not None:
             bridge.stop()
@@ -100,11 +112,28 @@ def main() -> int:
                   f"{cell['depth_max']:6.0f} {cell['umq_max']:8.0f}  "
                   f"{cell['findings']}")
 
+    if args.faults:
+        print("\n== faulted cells (fifo+incoming, canonical plan per "
+              "kind) ==")
+        for name, entry in sorted(results["scenarios"].items()):
+            for kind, cell in sorted(entry.get("fault_cells",
+                                               {}).items()):
+                print(f"{name:20s} fault:{kind:10s} "
+                      f"{cell['us_per_op']:8.2f} "
+                      f"faults={cell['faults']}")
+
     print("\n== seeded-defect coverage (detector fired under the "
           "defect's own mode) ==")
     for defect, flagged in sorted(results["defect_coverage"].items()):
         print(f"{defect:10s} -> {workloads.DEFECT_DETECTOR[defect]:15s} "
               f"in {len(flagged)} scenario(s): {flagged}")
+
+    if args.faults:
+        print("\n== fault coverage (dedicated detector fired under the "
+              "injected kind) ==")
+        for kind, flagged in sorted(results["fault_coverage"].items()):
+            print(f"{kind:10s} -> {workloads.FAULT_DETECTOR[kind]:18s} "
+                  f"in {len(flagged)} scenario(s): {flagged}")
 
     failures: List[str] = workloads.check(results)
 

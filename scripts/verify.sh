@@ -62,8 +62,8 @@ python benchmarks/matching_sweep.py
 echo "== replay what-if acceptance gate =="
 python benchmarks/replay_sweep.py --smoke
 
-echo "== workload scenario sweep gate (baseline regression + seeded-defect coverage) =="
-python benchmarks/scenario_sweep.py --smoke
+echo "== workload scenario sweep gate (baseline regression + seeded-defect + fault-injection coverage) =="
+python benchmarks/scenario_sweep.py --smoke --faults
 
 echo "== hot-path throughput gate (vs frozen pre-overhaul engine, in-run) =="
 # full-size gate is 3x (make bench-hotpath); the CI-sized run uses a

@@ -88,3 +88,37 @@ def hot_rank_pairs(n: int, hot: int = 0,
     messages to the single hot rank."""
     return tuple((w, hot) for w in range(n) if w != hot
                  for _ in range(per_worker))
+
+
+@lru_cache(maxsize=None)
+def tree_pairs(n: int, root: int = 0) -> Sequence[Sequence[Pair]]:
+    """Binomial reduction tree toward ``root``: one tuple of (src, dst)
+    pairs per level, leaves first — level ``s`` folds each surviving
+    rank at offset ``2**s`` into its partner, halving the participant
+    set until only the root holds the result. Reverse the levels (and
+    swap each pair) for the matching broadcast."""
+    levels = []
+    span = 1
+    while span < n:
+        level = tuple(((i + span + root) % n, (i + root) % n)
+                      for i in range(0, n, span * 2) if i + span < n)
+        if level:
+            levels.append(level)
+        span *= 2
+    return tuple(levels)
+
+
+@lru_cache(maxsize=None)
+def butterfly_pairs(n: int) -> Sequence[Sequence[Pair]]:
+    """Recursive-doubling butterfly: one tuple of (src, dst) pairs per
+    stage; at stage ``s`` every rank exchanges with its partner
+    ``i XOR 2**s``. All ranks stay busy every stage (the allreduce
+    shape), unlike :func:`tree_pairs` where participation shrinks.
+    For non-power-of-two ``n`` the pairs whose partner falls outside
+    the set are skipped."""
+    stages = []
+    d = 1
+    while d < n:
+        stages.append(tuple((i, i ^ d) for i in range(n) if (i ^ d) < n))
+        d *= 2
+    return tuple(stages)

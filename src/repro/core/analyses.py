@@ -14,6 +14,16 @@ as zero-duration ``category="counter"`` events) get two more detectors:
   * deep posted-receive-queue traversals    -> :func:`long_traversal`
   * runaway unexpected-message queue        -> :func:`umq_flood`
 
+and four more for the transport-level fault classes
+:mod:`repro.faults` injects (each derived from the same matching
+counters, so they fire on production traces the same way they fire on
+injected faults):
+
+  * posted receives nothing ever matched    -> :func:`orphan_posts`
+  * arrivals no receive ever claimed        -> :func:`duplicate_match`
+  * displaced deliveries inflating UMQ digs -> :func:`reorder_inflation`
+  * one rank starving or lagging its peers  -> :func:`straggler_rank`
+
 Both group counter events by pid before testing thresholds; since a
 :class:`repro.match.Fabric` records one counter lane per rank, the
 ``min_samples`` / ``max_length`` defaults apply *per rank* — lower them
@@ -39,7 +49,9 @@ from .events import Event
 @dataclasses.dataclass
 class Finding:
     kind: str                 # "large_wait" | "contention" | "irregular" |
-                              # "gap" | "long_traversal" | "umq_flood"
+                              # "gap" | "long_traversal" | "umq_flood" |
+                              # "orphan_posts" | "duplicate_match" |
+                              # "reorder_inflation" | "straggler_rank"
     message: str
     severity: float           # seconds of suspect time
     events: List[Event] = dataclasses.field(default_factory=list)
@@ -357,6 +369,324 @@ def umq_flood_lanes(
     return out
 
 
+# -- fault-class detectors (repro.faults) --------------------------------
+#
+# All four run off the matching-counter algebra of one finished (or
+# cumulative) run. The invariants they test hold exactly at run end for
+# every balanced workload:
+#
+#   posts   = match.umq.traversal_depth.count   (every post observes it)
+#   arrivals= match.prq.traversal_depth.count   (every arrival observes it)
+#   posts   = match.umq.hit + match.prq parks, and every park is
+#             eventually matched by an arrival (match.expected) — so
+#             orphans  = posts - umq.hit - expected  is 0 when healthy;
+#   arrivals= match.expected + match.unexpected, and every unexpected
+#             park is eventually consumed by a post (match.umq.hit) — so
+#             residue  = unexpected - umq.hit        is 0 when healthy.
+#
+# Dropped deliveries push ``orphans`` positive (a posted receive whose
+# message vanished stalls forever); duplicated deliveries push
+# ``residue`` positive (the second copy parks with no post left to
+# claim it). Wildcard cross-matches push *both* up by the same amount
+# on the same lane, so each detector thresholds its imbalance net of
+# the other. Note the incremental ``_lanes`` variants see *in-flight*
+# posts/parks as nonzero orphans/residue mid-run — the live bridge
+# treats them as leading indicators, the post-hoc gate runs at
+# end-of-run where the algebra is exact.
+
+
+def _orphan_residue(stats: Dict[str, "CounterStat"]
+                    ) -> Tuple[float, float]:
+    """Per-lane end-of-run imbalances: (unmatched posted receives,
+    unclaimed parked arrivals). A wildcard receive that cross-matches a
+    message intended for a specific post leaves *one of each* on the
+    same lane, so the two detectors below judge the net difference —
+    the paired wildcard noise cancels while real drops (pure orphans)
+    and real duplicates (pure residue) survive."""
+    posts = stats.get("match.umq.traversal_depth")
+    hits = stats.get("match.umq.hit")
+    exp = stats.get("match.expected")
+    unexp = stats.get("match.unexpected")
+    n_posts = posts.count if posts is not None else 0
+    n_hits = hits.total if hits is not None else 0
+    orphans = n_posts - n_hits - (exp.total if exp is not None else 0)
+    residue = (unexp.total if unexp is not None else 0) - n_hits
+    return orphans, residue
+
+
+def _orphan_posts_finding(
+    pid: int,
+    stats: Dict[str, "CounterStat"],
+    min_orphans: int,
+    min_frac: float,
+) -> Optional[Finding]:
+    posts = stats.get("match.umq.traversal_depth")
+    if posts is None or posts.count == 0:
+        return None
+    orphans, residue = _orphan_residue(stats)
+    net = orphans - max(residue, 0)
+    if net < min_orphans or net < min_frac * posts.count:
+        return None
+    return Finding(
+        kind="orphan_posts",
+        message=(
+            f"{net:.0f} of {posts.count} posted receives on pid "
+            f"{pid} never matched any arrival — deliveries dropped or "
+            f"sender gone"
+        ),
+        severity=net * NS_PER_QUEUE_ENTRY / 1e9,
+        pid=pid,
+    )
+
+
+def _duplicate_match_finding(
+    pid: int,
+    stats: Dict[str, "CounterStat"],
+    min_residue: int,
+    min_frac: float,
+) -> Optional[Finding]:
+    arrivals = stats.get("match.prq.traversal_depth")
+    if arrivals is None or arrivals.count == 0:
+        return None
+    orphans, residue = _orphan_residue(stats)
+    net = residue - max(orphans, 0)
+    if net < min_residue or net < min_frac * arrivals.count:
+        return None
+    return Finding(
+        kind="duplicate_match",
+        message=(
+            f"{net:.0f} of {arrivals.count} arrivals on pid {pid} "
+            f"parked unexpected and were never claimed by a receive — "
+            f"deliveries duplicated"
+        ),
+        severity=net * NS_PER_QUEUE_ENTRY / 1e9,
+        pid=pid,
+    )
+
+
+def _reorder_inflation_findings(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    min_bin: int,
+    min_hits: int,
+    min_frac: float,
+) -> List[Finding]:
+    # Cross-lane by construction: displaced delivery is a transport
+    # property — traffic that rotates its fan-in target (a moving hot
+    # shard) spreads the depth tail thinly over many ranks, so the
+    # thresholds apply to the run-wide histogram, with the deepest lane
+    # named for attribution.
+    count = tail = 0
+    excess = 0.0
+    vmax = 0.0
+    worst_pid, worst_tail = -1, -1
+    for pid in sorted(lanes):
+        stats = lanes[pid]
+        leaked = stats.get("match.umq.leaked")
+        if leaked is not None and leaked.total:
+            # tombstone-inflated depths are umq_flood's story
+            return []
+        depth = stats.get("match.umq.traversal_depth")
+        if depth is None or depth.count == 0:
+            continue
+        count += depth.count
+        excess += depth.total - depth.count
+        vmax = max(vmax, depth.vmax)
+        t = sum(c for b, c in depth.bins.items() if b >= min_bin)
+        tail += t
+        if t > worst_tail:
+            worst_pid, worst_tail = pid, t
+    if count == 0 or tail < min_hits or tail < min_frac * count:
+        return []
+    return [Finding(
+        kind="reorder_inflation",
+        message=(
+            f"{tail} of {count} UMQ searches dug >= {min_bin} entries "
+            f"deep (max {vmax:.0f}, deepest on pid {worst_pid}) — "
+            f"deliveries arriving far out of post order"
+        ),
+        severity=excess * NS_PER_QUEUE_ENTRY / 1e9,
+        pid=worst_pid,
+    )]
+
+
+def _lane_ops(stats: Dict[str, "CounterStat"]) -> int:
+    posts = stats.get("match.umq.traversal_depth")
+    arrivals = stats.get("match.prq.traversal_depth")
+    return ((posts.count if posts is not None else 0)
+            + (arrivals.count if arrivals is not None else 0))
+
+
+def _straggler_findings(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    skew_frac: float,
+    min_ops: int,
+    min_lanes: int,
+    min_deferred: int,
+) -> List[Finding]:
+    """Two straggler signals over the whole lane set: direct evidence
+    (``fault.delay.deferred`` — the injector's count of this rank's
+    held-back deliveries, the live-run analog of a NIC backing off) and
+    participation skew (a lane doing a small fraction of the median
+    lane's matching ops: a rank that died, joined late, or is starved).
+    """
+    out: List[Finding] = []
+    ops: Dict[int, int] = {}
+    flagged = set()
+    for pid in sorted(lanes):
+        stats = lanes[pid]
+        ops[pid] = _lane_ops(stats)
+        deferred = stats.get("fault.delay.deferred")
+        if deferred is not None and deferred.total >= min_deferred:
+            flagged.add(pid)
+            out.append(Finding(
+                kind="straggler_rank",
+                message=(
+                    f"{deferred.total:.0f} deliveries from pid {pid} "
+                    f"were held back in flight — straggling sender"
+                ),
+                severity=deferred.total * NS_PER_QUEUE_ENTRY / 1e9,
+                pid=pid,
+            ))
+    if len(ops) >= min_lanes:
+        med = statistics.median(ops.values())
+        if med >= min_ops:
+            for pid, n in sorted(ops.items()):
+                if pid in flagged or n >= skew_frac * med:
+                    continue
+                out.append(Finding(
+                    kind="straggler_rank",
+                    message=(
+                        f"pid {pid} did {n} matching ops vs a median of "
+                        f"{med:.0f} across {len(ops)} lanes — rank left, "
+                        f"joined late, or is starved"
+                    ),
+                    severity=(med - n) * NS_PER_QUEUE_ENTRY / 1e9,
+                    pid=pid,
+                ))
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def orphan_posts(
+    events: Sequence[Event],
+    min_orphans: int = 4,
+    min_frac: float = 0.02,
+) -> List[Finding]:
+    """Posted receives that no arrival ever matched (per rank) — the
+    dropped-delivery / dead-sender fault class. Exact at end of run;
+    see the invariant notes above."""
+    out: List[Finding] = []
+    for pid, evs in _counter_events_by_pid(events).items():
+        f = _orphan_posts_finding(pid, counter_stats(evs),
+                                  min_orphans, min_frac)
+        if f is not None:
+            out.append(f)
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def orphan_posts_lanes(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    min_orphans: int = 4,
+    min_frac: float = 0.02,
+) -> List[Finding]:
+    """:func:`orphan_posts` directly over per-pid lane statistics."""
+    out = [f for pid in sorted(lanes)
+           for f in (_orphan_posts_finding(pid, lanes[pid],
+                                           min_orphans, min_frac),)
+           if f is not None]
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def duplicate_match(
+    events: Sequence[Event],
+    min_residue: int = 4,
+    min_frac: float = 0.02,
+) -> List[Finding]:
+    """Unexpected arrivals that no receive ever claimed (per rank) —
+    the duplicated-delivery fault class."""
+    out: List[Finding] = []
+    for pid, evs in _counter_events_by_pid(events).items():
+        f = _duplicate_match_finding(pid, counter_stats(evs),
+                                     min_residue, min_frac)
+        if f is not None:
+            out.append(f)
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def duplicate_match_lanes(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    min_residue: int = 4,
+    min_frac: float = 0.02,
+) -> List[Finding]:
+    """:func:`duplicate_match` directly over per-pid lane statistics."""
+    out = [f for pid in sorted(lanes)
+           for f in (_duplicate_match_finding(pid, lanes[pid],
+                                              min_residue, min_frac),)
+           if f is not None]
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def reorder_inflation(
+    events: Sequence[Event],
+    min_bin: int = 8,
+    min_hits: int = 8,
+    min_frac: float = 0.02,
+) -> List[Finding]:
+    """UMQ searches digging far deeper than healthy delivery order
+    allows — the displaced-delivery fault class. Reads the power-of-two
+    tail of the run-wide ``match.umq.traversal_depth`` histogram
+    (cross-lane, so rotating fan-in targets still accumulate one tail);
+    runs with leaked (tombstoned) UMQ entries are skipped, since their
+    depth inflation belongs to :func:`umq_flood`."""
+    lanes = {pid: counter_stats(evs)
+             for pid, evs in _counter_events_by_pid(events).items()}
+    return _reorder_inflation_findings(lanes, min_bin, min_hits,
+                                       min_frac)
+
+
+def reorder_inflation_lanes(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    min_bin: int = 8,
+    min_hits: int = 8,
+    min_frac: float = 0.02,
+) -> List[Finding]:
+    """:func:`reorder_inflation` directly over per-pid lane stats."""
+    return _reorder_inflation_findings(lanes, min_bin, min_hits,
+                                       min_frac)
+
+
+def straggler_rank(
+    events: Sequence[Event],
+    skew_frac: float = 0.25,
+    min_ops: int = 32,
+    min_lanes: int = 3,
+    min_deferred: int = 4,
+) -> List[Finding]:
+    """One rank lagging or starving its peers — the straggler / elastic
+    (leave/join) fault class. Cross-lane by construction: the skew test
+    compares each lane's matching-op count against the median lane."""
+    lanes = {pid: counter_stats(evs)
+             for pid, evs in _counter_events_by_pid(events).items()}
+    return _straggler_findings(lanes, skew_frac, min_ops, min_lanes,
+                               min_deferred)
+
+
+def straggler_rank_lanes(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    skew_frac: float = 0.25,
+    min_ops: int = 32,
+    min_lanes: int = 3,
+    min_deferred: int = 4,
+) -> List[Finding]:
+    """:func:`straggler_rank` directly over per-pid lane statistics."""
+    return _straggler_findings(lanes, skew_frac, min_ops, min_lanes,
+                               min_deferred)
+
+
 def analyze_all(events: Sequence[Event], **kwargs) -> List[Finding]:
     out: List[Finding] = []
     out.extend(large_waits(events))
@@ -365,6 +695,10 @@ def analyze_all(events: Sequence[Event], **kwargs) -> List[Finding]:
     out.extend(gaps(events, min_gap_ns=kwargs.get("min_gap_ns", 1_000_000)))
     out.extend(long_traversal(events))
     out.extend(umq_flood(events))
+    out.extend(orphan_posts(events))
+    out.extend(duplicate_match(events))
+    out.extend(reorder_inflation(events))
+    out.extend(straggler_rank(events))
     out.sort(key=lambda f: -f.severity)
     return out
 

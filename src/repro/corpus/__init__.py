@@ -14,8 +14,8 @@ from .parallel import (PARTITIONS, InlinePool, ReplayPool, default_jobs,
                        shard_worker, usable_cores)
 from .runner import CorpusRunResult, EntryResult, run_corpus
 from .store import (CORPUS_FORMAT, CORPUS_VERSION, ENGINE_MODES,
-                    MANIFEST_NAME, CorpusEntry, CorpusStore, file_sha256,
-                    refresh_expectations, seed_corpus)
+                    FAULT_CELLS, MANIFEST_NAME, CorpusEntry, CorpusStore,
+                    file_sha256, refresh_expectations, seed_corpus)
 
 __all__ = [
     "DETERMINISTIC_COUNTERS", "decode_phases", "encode_phases",
@@ -25,7 +25,7 @@ __all__ = [
     "merge_shards", "parallel_replay", "plan_shards", "shard_worker",
     "usable_cores",
     "CorpusRunResult", "EntryResult", "run_corpus",
-    "CORPUS_FORMAT", "CORPUS_VERSION", "ENGINE_MODES", "MANIFEST_NAME",
-    "CorpusEntry", "CorpusStore", "file_sha256", "refresh_expectations",
-    "seed_corpus",
+    "CORPUS_FORMAT", "CORPUS_VERSION", "ENGINE_MODES", "FAULT_CELLS",
+    "MANIFEST_NAME", "CorpusEntry", "CorpusStore", "file_sha256",
+    "refresh_expectations", "seed_corpus",
 ]

@@ -31,7 +31,7 @@ import dataclasses
 import hashlib
 import json
 import os
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..trace.replay import Replayer
 from .codec import finding_kinds, signature
@@ -40,6 +40,21 @@ MANIFEST_NAME = "manifest.json"
 CORPUS_FORMAT = "repro.corpus.manifest"
 CORPUS_VERSION = 1
 ENGINE_MODES = ("fifo", "linear", "leaky_umq")
+
+# Faulted cells the corpus commits alongside the healthy matrix: one
+# (scenario, fault kind) pair per replay-reproducible kind, each chosen
+# so the kind's dedicated detector verifiably fires at smoke size under
+# the healthy fifo engine. ``delay`` is deliberately absent — its
+# signal (``fault.delay.deferred``) is counted by the live injector and
+# cannot be reconstructed from the recorded op stream, so a delayed
+# trace replays clean.
+FAULT_CELLS: Tuple[Tuple[str, str], ...] = (
+    ("halo3d", "drop"),
+    ("ring_allreduce", "duplicate"),
+    ("power_law_burst", "reorder"),
+    ("amg_coarsen", "rank_leave"),
+    ("alltoall_transpose", "rank_join"),
+)
 
 
 def file_sha256(path: str) -> str:
@@ -65,14 +80,21 @@ class CorpusEntry:
     n_ops: int
     n_phases: int
     expected: Dict            # {"phases": <signature>, "findings": [...]}
+    fault: Optional[str] = None  # injected fault kind, if any
 
     def to_json(self) -> Dict:
-        return dataclasses.asdict(self)
+        out = dataclasses.asdict(self)
+        if self.fault is None:
+            # healthy entries serialize exactly as before the fault
+            # axis existed — keeps their manifest lines byte-stable
+            del out["fault"]
+        return out
 
     @classmethod
     def from_json(cls, obj: Dict) -> "CorpusEntry":
         return cls(**{f.name: obj[f.name]
-                      for f in dataclasses.fields(cls)})
+                      for f in dataclasses.fields(cls)
+                      if f.name in obj})
 
 
 class CorpusStore:
@@ -152,11 +174,17 @@ def seed_corpus(root: str,
                 scenarios: Optional[Sequence[str]] = None,
                 modes: Sequence[str] = ENGINE_MODES,
                 size: str = "smoke", seed: int = 0,
-                schema: int = 3) -> CorpusStore:
+                schema: int = 3,
+                faults: Optional[Sequence[Tuple[str, str]]] = FAULT_CELLS
+                ) -> CorpusStore:
     """Record the scenario × engine-mode matrix as deterministic traces
     under ``root`` and write a manifest with serial-replay expectations.
-    Deterministic end to end: same engine → byte-identical traces,
-    identical hashes, identical manifest."""
+    ``faults`` appends one fifo-mode cell per (scenario, fault kind)
+    pair with that kind's canonical plan injected — the committed
+    evidence that a faulted v3 trace replays to the same detector
+    verdicts as the live faulted run. Deterministic end to end: same
+    engine → byte-identical traces, identical hashes, identical
+    manifest."""
     # workloads (the scenario drivers) only load when seeding — replay,
     # sharding and the runner never pay this import
     from ..workloads.base import names
@@ -178,6 +206,22 @@ def seed_corpus(root: str,
                 size=size, seed=seed, schema=schema,
                 sha256=file_sha256(path), n_ops=exp["n_ops"],
                 n_phases=exp["n_phases"], expected=exp["expected"]))
+    for sc, kind in (faults or ()):
+        if scenarios is not None and sc not in scenarios:
+            continue
+        entry_id = f"{sc}__fifo__fault_{kind}"
+        fname = entry_id + ".jsonl"
+        path = os.path.join(store.root, fname)
+        run_scenario(sc, engine_mode="fifo", seed=seed, size=size,
+                     trace_path=path, wall_clock=False,
+                     trace_schema=schema, fault=kind)
+        exp = expected_for(path)
+        store.entries.append(CorpusEntry(
+            id=entry_id, file=fname, scenario=sc, engine_mode="fifo",
+            size=size, seed=seed, schema=schema,
+            sha256=file_sha256(path), n_ops=exp["n_ops"],
+            n_phases=exp["n_phases"], expected=exp["expected"],
+            fault=kind))
     store.save()
     return store
 

@@ -1,0 +1,26 @@
+"""Deterministic fault injection (``repro.faults``).
+
+Declarative, seeded fault plans (:mod:`~repro.faults.plan`) applied to
+scenario runs through the matching fabric's sanctioned rewrite seams
+(:mod:`~repro.faults.inject`): dropped / duplicated / reordered /
+delayed deliveries plus ranks leaving and joining mid-run — the
+transport-level failure modes the new detectors in
+:mod:`repro.core.analyses` (``orphan_posts``, ``duplicate_match``,
+``reorder_inflation``, ``straggler_rank``) are built to flag.
+"""
+from .inject import FaultyFabric, build_faulty, finish_faults
+from .plan import (FaultPlan, FaultSpec, JOINER_RANK, KINDS,
+                   default_plan, plans, single)
+
+__all__ = [
+    "FaultPlan",
+    "FaultSpec",
+    "FaultyFabric",
+    "JOINER_RANK",
+    "KINDS",
+    "build_faulty",
+    "default_plan",
+    "finish_faults",
+    "plans",
+    "single",
+]

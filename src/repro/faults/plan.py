@@ -1,0 +1,175 @@
+"""Declarative, seeded fault plans (the deterministic fault model).
+
+A :class:`FaultPlan` is a serializable description of transport-level
+failures to inject into a scenario run: which fault ``kind``, which
+rank it targets, how aggressively, and over which window of exchanges.
+Plans are *pure data* — all randomness lives in one
+``random.Random(plan.seed)`` stream owned by the injector
+(:mod:`repro.faults.inject`), so the same ``(scenario, seed, plan)``
+triple produces a byte-identical faulted trace, replayable and
+diffable exactly like a healthy one.
+
+Fault kinds (``KINDS``) and the defect class each one seeds:
+
+  * ``drop``       — arrivals vanish in flight: their posted receives
+    stall forever (detector ``orphan_posts``).
+  * ``duplicate``  — an arrival is delivered twice: the second copy
+    parks on the UMQ with no post to claim it (``duplicate_match``).
+  * ``reorder``    — arrivals are permuted within a bounded
+    displacement ``k``: late receives dig through ``k`` strangers to
+    find their message (``reorder_inflation``).
+  * ``delay``      — one straggler rank's messages are held back
+    ``hold`` exchanges before delivery (``straggler_rank``).
+  * ``rank_leave`` — a rank dies mid-run: it stops posting and its
+    in-flight traffic never lands (``straggler_rank`` +
+    ``orphan_posts`` on its peers).
+  * ``rank_join``  — a fresh rank joins mid-run with a trickle of
+    warm-up traffic (``straggler_rank`` flags the cold lane; the
+    elastic-mesh shapes come from :func:`repro.checkpoint.elastic
+    .viable_meshes`, see ``workloads.scenarios.elastic_ranks``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Sequence, Tuple
+
+KINDS = ("drop", "duplicate", "reorder", "delay", "rank_leave",
+         "rank_join")
+
+PLAN_FORMAT = "repro.faults.plan"
+PLAN_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault, one window.
+
+    ``rank`` scopes the fault: for ``drop``/``duplicate`` it restricts
+    the candidate arrivals to those *sent by* ``rank`` (``-1`` = any
+    sender); for ``delay``/``rank_leave``/``rank_join`` it names the
+    straggler/leaver/joiner. ``rate`` is the per-candidate injection
+    probability for ``drop``/``duplicate`` (ignored elsewhere). ``k``
+    bounds the reorder displacement. ``hold`` is how many exchanges a
+    delayed arrival is deferred. ``every`` spaces the joiner's warm-up
+    traffic (one balanced round-trip every ``every``-th exchange).
+    ``start``/``stop`` bound the affected exchange indices
+    (``stop=-1`` = until the end of the run)."""
+
+    kind: str
+    rank: int = -1
+    rate: float = 0.0
+    k: int = 0
+    hold: int = 1
+    every: int = 4
+    start: int = 0
+    stop: int = -1
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate {self.rate} outside [0, 1]")
+        if self.kind == "reorder" and self.k < 1:
+            raise ValueError("reorder needs displacement bound k >= 1")
+        if self.kind == "delay" and self.hold < 1:
+            raise ValueError("delay needs hold >= 1 exchanges")
+        if self.kind in ("delay", "rank_leave", "rank_join") \
+                and self.rank < 0:
+            raise ValueError(f"{self.kind} needs a target rank")
+        if self.kind == "rank_join" and self.every < 1:
+            raise ValueError("rank_join needs every >= 1")
+
+    def active(self, x: int) -> bool:
+        """Is this spec live at exchange index ``x``?"""
+        return x >= self.start and (self.stop < 0 or x < self.stop)
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, obj: Dict) -> "FaultSpec":
+        return cls(**{f.name: obj.get(f.name, f.default)
+                      for f in dataclasses.fields(cls)})
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An ordered set of :class:`FaultSpec` plus the injector seed."""
+
+    specs: Tuple[FaultSpec, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "specs", tuple(self.specs))
+
+    def active(self, x: int) -> List[FaultSpec]:
+        return [s for s in self.specs if s.active(x)]
+
+    @property
+    def kinds(self) -> Tuple[str, ...]:
+        return tuple(sorted({s.kind for s in self.specs}))
+
+    def to_dict(self) -> Dict:
+        return {"format": PLAN_FORMAT, "version": PLAN_VERSION,
+                "seed": self.seed,
+                "specs": [s.to_dict() for s in self.specs]}
+
+    @classmethod
+    def from_dict(cls, obj: Dict) -> "FaultPlan":
+        if obj.get("format", PLAN_FORMAT) != PLAN_FORMAT:
+            raise ValueError(f"not a fault plan: "
+                             f"format={obj.get('format')!r}")
+        return cls(specs=tuple(FaultSpec.from_dict(s)
+                               for s in obj.get("specs", ())),
+                   seed=obj.get("seed", 0))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        return cls.from_dict(json.loads(text))
+
+
+def single(kind: str, seed: int = 0, **kw) -> FaultPlan:
+    """One-spec plan: ``single("drop", rate=0.2)``."""
+    return FaultPlan(specs=(FaultSpec(kind=kind, **kw),), seed=seed)
+
+
+# The canonical one-fault-per-kind plans the scenario sweep's fault
+# axis runs (workloads.bench / benchmarks/scenario_sweep.py --faults).
+# Scenario-agnostic on purpose: rank 1 exists in every gallery
+# scenario, the joiner rank is far outside every gallery rank range,
+# and windows are expressed in exchange indices so the same plan
+# stresses a 5-exchange smoke run and a 50-exchange full run.
+JOINER_RANK = 97
+
+_DEFAULTS: Dict[str, FaultSpec] = {
+    "drop": FaultSpec(kind="drop", rate=0.15),
+    "duplicate": FaultSpec(kind="duplicate", rate=0.15),
+    "reorder": FaultSpec(kind="reorder", k=16),
+    "delay": FaultSpec(kind="delay", rank=1, hold=2),
+    # leave almost immediately: the dead rank's lane freezes near zero
+    "rank_leave": FaultSpec(kind="rank_leave", rank=1, start=2),
+    # a light warm-up trickle: the joiner's lane stays cold vs peers
+    "rank_join": FaultSpec(kind="rank_join", rank=JOINER_RANK,
+                           every=6, start=1),
+}
+
+
+def default_plan(kind: str, seed: int = 0) -> FaultPlan:
+    """The sweep's canonical single-kind plan for ``kind``."""
+    try:
+        spec = _DEFAULTS[kind]
+    except KeyError:
+        raise ValueError(f"unknown fault kind {kind!r}; "
+                         f"expected one of {KINDS}") from None
+    return FaultPlan(specs=(spec,), seed=seed)
+
+
+def plans(seed: int = 0) -> Dict[str, FaultPlan]:
+    """All canonical single-kind plans, keyed by kind."""
+    return {k: default_plan(k, seed=seed) for k in KINDS}

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import contextlib
 import time
-from collections import deque
+from collections import Counter, deque
 from typing import Deque, Dict, List, Optional, Tuple
 
 from ..comm import patterns
@@ -1273,6 +1273,12 @@ class Fabric:
         self._depth = 0                 # collective/fused-span nesting
         self._fuse: Optional[Dict[int, List]] = None
         self._fusecm = _FusedSpan(self)
+        # sanctioned fault-injection seam (repro.faults): a callable
+        # (pairs, arrivals, tag, nbytes, comm) -> arrivals applied to
+        # every exchange's arrival list *after* deliver validation — the
+        # one place an arrival list may legally stop being a permutation
+        # of the posts (drops, duplicates, deferred stragglers)
+        self.arrival_filter = None
 
     def engine(self, rank: int) -> MatchEngine:
         eng = self._engines.get(rank)
@@ -1360,9 +1366,40 @@ class Fabric:
         and counter statistics are identical to the per-message path
         while the python dispatch cost is paid once per (stage, rank).
         With a trace attached the per-message path runs instead: trace
-        records must interleave globally in dispatch order."""
+        records must interleave globally in dispatch order.
+
+        ``deliver`` must be a permutation of ``pairs`` — a typo'd pair
+        would fabricate an arrival with no matching post (or orphan a
+        post silently), which is exactly the failure mode the fault-
+        injection subsystem models *deliberately*; accidental versions
+        of it raise ``ValueError`` here. Sanctioned non-permutation
+        rewrites go through ``arrival_filter`` (see
+        :mod:`repro.faults.inject`)."""
         if not isinstance(pairs, (list, tuple)):
             pairs = list(pairs)         # iterated once per stage
+        if deliver is None:
+            arr = pairs
+        else:
+            arr = (deliver if isinstance(deliver, (list, tuple))
+                   else list(deliver))
+            if Counter(arr) != Counter(pairs):
+                raise ValueError(
+                    "exchange(deliver=) is not a permutation of pairs: "
+                    f"{len(arr)} arrivals vs {len(pairs)} posts; "
+                    "injected drops/duplicates must go through "
+                    "Fabric.arrival_filter (repro.faults), not deliver=")
+        filt = self.arrival_filter
+        if filt is not None:
+            arr = filt(pairs, arr, tag, nbytes, comm)
+        self._exchange(pairs, arr, tag, nbytes, comm)
+
+    def _exchange(self, pairs, arr, tag: int, nbytes: int,
+                  comm: int) -> None:
+        """Dispatch one validated/filtered phase: ``pairs`` drives the
+        posts (and the unexpected/wildcard tick mix), ``arr`` drives the
+        arrivals. Internal — :meth:`exchange` is the validated front
+        door; :mod:`repro.faults` calls this directly after rewriting
+        the two lists through its sanctioned seams."""
         k = self._tick
         ue = self.unexpected_every
         we = self.wildcard_every
@@ -1372,8 +1409,7 @@ class Fabric:
             # tiny to amortize a batch call each — run the whole phase
             # as one fused span (one run_ops per destination engine)
             with self._fusecm:
-                self.exchange(pairs, tag=tag, nbytes=nbytes, comm=comm,
-                              deliver=deliver)
+                self._exchange(pairs, arr, tag, nbytes, comm)
             return
         fuse = self._fuse
         if fuse is not None:
@@ -1393,7 +1429,7 @@ class Fabric:
                         grp = fuse[dst] = []
                     grp += (True, rsrc, tag, 0, comm)
             self._tick = k
-            for src, dst in (pairs if deliver is None else deliver):
+            for src, dst in arr:
                 grp = fuse.get(dst)
                 if grp is None:
                     grp = fuse[dst] = []
@@ -1423,7 +1459,7 @@ class Fabric:
                 else:
                     eng.post_recv(srcs[0], tag, comm)
             arr_g: Dict[int, List[int]] = {}
-            for src, dst in (pairs if deliver is None else deliver):
+            for src, dst in arr:
                 grp = arr_g.get(dst)
                 if grp is None:
                     grp = arr_g[dst] = []
@@ -1455,7 +1491,7 @@ class Fabric:
                 post(rsrc, tag, comm)
         self._tick = k
         arrives: Dict[int, object] = {}
-        for src, dst in (pairs if deliver is None else deliver):
+        for src, dst in arr:
             arrive = arrives.get(dst)
             if arrive is None:
                 arrive = arrives[dst] = self.engine(dst).arrive

@@ -27,7 +27,9 @@ import itertools
 import threading
 from typing import Dict, List, Optional, Union
 
-from ..core.analyses import (Finding, contention, long_traversal_lanes,
+from ..core.analyses import (Finding, contention, duplicate_match_lanes,
+                             long_traversal_lanes, orphan_posts_lanes,
+                             reorder_inflation_lanes, straggler_rank_lanes,
                              umq_flood_lanes)
 from ..core.collector import Collector
 from ..core.counters import (COUNTER_CATEGORY, CounterRegistry,
@@ -267,6 +269,14 @@ class TelemetryBridge:
                                 mean_length=self.umq_mean_length)
         found += long_traversal_lanes(cum, mean_depth=self.prq_mean_depth,
                                       min_samples=self.prq_min_samples)
+        # fault-class detectors: mid-run the orphan/residue algebra sees
+        # in-flight posts/parks, so these fire as *leading indicators*
+        # (first firing wins); the post-hoc sweep gate re-judges them at
+        # end-of-run where the algebra is exact
+        found += orphan_posts_lanes(cum)
+        found += duplicate_match_lanes(cum)
+        found += reorder_inflation_lanes(cum)
+        found += straggler_rank_lanes(cum)
         self._record_findings_locked(name, found, ts)
 
     def _detect_contention_locked(self, name: str, col: Collector,

@@ -119,6 +119,13 @@ REC_PROGRESS = "pe"
 REC_SNAPSHOT = "snap"
 REC_CHUNK = "chk"
 REC_PE_CHUNK = "pec"
+# fault-injection marker (repro.faults): one record per (exchange,
+# active fault spec), annotation-only — replay derives nothing from it
+# (the faulted op stream itself is what post/arr records carry), so
+# every replayer/converter passes it through untouched and the
+# v2 <-> v3 byte-identity rule is preserved (flt records are never
+# chunked)
+REC_FAULT = "flt"
 
 # required fields per record type (beyond "t")
 _REQUIRED = {
@@ -129,6 +136,7 @@ _REQUIRED = {
     REC_SNAPSHOT: ("stats",),
     REC_CHUNK: ("n", "p", "r", "s", "g"),
     REC_PE_CHUNK: ("n", "e", "s"),
+    REC_FAULT: ("kind",),
 }
 
 

@@ -9,20 +9,22 @@
 from .base import (DEFECT_DETECTOR, Scenario, all_scenarios, get, names,
                    progress_schedule, register, scenario)
 from . import scenarios  # noqa: F401  (registers the gallery)
-from .bench import (DEFECT_KINDS, ENGINE_MODES, PE_REQUESTS,
+from .bench import (DEFECT_KINDS, ENGINE_MODES, FAULT_DETECTOR,
+                    FAULT_FINDING_KINDS, FAULT_KINDS, PE_REQUESTS,
                     PROGRESS_MODES, ScenarioRun, build_fabric, cell_key,
                     check, compare_to_baseline, count_ops,
-                    defect_coverage, hist_percentile, make_baseline,
-                    run_scenario, sweep)
+                    defect_coverage, fault_coverage, hist_percentile,
+                    make_baseline, run_scenario, sweep)
 from . import hotpath  # noqa: F401  (throughput bench + perf gate)
 from . import telemetry  # noqa: F401  (live-bridge overhead + liveness gate)
 
 __all__ = [
     "DEFECT_DETECTOR", "Scenario", "all_scenarios", "get", "names",
     "progress_schedule", "register", "scenario",
-    "DEFECT_KINDS", "ENGINE_MODES", "PE_REQUESTS", "PROGRESS_MODES",
-    "ScenarioRun", "build_fabric", "cell_key", "check",
-    "compare_to_baseline", "count_ops", "defect_coverage",
-    "hist_percentile", "hotpath", "make_baseline", "run_scenario",
-    "sweep", "telemetry",
+    "DEFECT_KINDS", "ENGINE_MODES", "FAULT_DETECTOR",
+    "FAULT_FINDING_KINDS", "FAULT_KINDS", "PE_REQUESTS",
+    "PROGRESS_MODES", "ScenarioRun", "build_fabric", "cell_key",
+    "check", "compare_to_baseline", "count_ops", "defect_coverage",
+    "fault_coverage", "hist_percentile", "hotpath", "make_baseline",
+    "run_scenario", "sweep", "telemetry",
 ]

@@ -65,6 +65,10 @@ class Scenario:
     defaults: Params
     smoke: Params = dataclasses.field(default_factory=dict)
     expect: Tuple[str, ...] = ("shared",)
+    # fault kinds (repro.faults.KINDS) whose canonical injected plan
+    # this scenario's traffic must make detectable — the sweep's fault
+    # axis enforces FAULT_DETECTOR[kind] fires in the faulted cell
+    fault_expect: Tuple[str, ...] = ()
     # fabric knobs (deterministic unexpected/wildcard mix)
     unexpected_every: int = 3
     wildcard_every: int = 4
@@ -98,6 +102,7 @@ def register(s: Scenario) -> Scenario:
 def scenario(name: str, description: str, stresses: str,
              defaults: Params, smoke: Optional[Params] = None,
              expect: Tuple[str, ...] = ("shared",),
+             fault_expect: Tuple[str, ...] = (),
              unexpected_every: int = 3,
              wildcard_every: int = 4) -> Callable[[Drive], Drive]:
     """Decorator form: ``@scenario("halo3d", ..., defaults={...})`` over
@@ -107,7 +112,8 @@ def scenario(name: str, description: str, stresses: str,
         register(Scenario(
             name=name, description=description, stresses=stresses,
             drive=drive, defaults=defaults, smoke=smoke or {},
-            expect=expect, unexpected_every=unexpected_every,
+            expect=expect, fault_expect=fault_expect,
+            unexpected_every=unexpected_every,
             wildcard_every=wildcard_every))
         return drive
     return wrap

@@ -32,6 +32,9 @@ from typing import Dict, List, Optional, Sequence, Union
 from ..core import analyses
 from ..core.counters import (CounterRegistry, CounterStat, counter_stats,
                              lane_events)
+from ..faults import (FaultPlan, build_faulty, default_plan,
+                      finish_faults)
+from ..faults.plan import KINDS as FAULT_KINDS
 from ..match import Fabric, canonical_mode
 from ..trace.io import TraceWriter
 from ..trace.replay import replay_progress
@@ -46,6 +49,20 @@ ENGINE_MODES = ("fifo", "linear", "leaky_umq")
 PROGRESS_MODES = ("shared", "incoming")
 DEFECT_KINDS = tuple(sorted(set(DEFECT_DETECTOR.values())))
 
+# injected fault kind -> the detector that must flag it (the fault
+# analog of DEFECT_DETECTOR; a departed rank's signature is the posts
+# it orphans on every peer, while the delay/join shapes share the
+# cross-lane straggler_rank detector)
+FAULT_DETECTOR = {
+    "drop": "orphan_posts",
+    "duplicate": "duplicate_match",
+    "reorder": "reorder_inflation",
+    "delay": "straggler_rank",
+    "rank_leave": "orphan_posts",
+    "rank_join": "straggler_rank",
+}
+FAULT_FINDING_KINDS = tuple(sorted(set(FAULT_DETECTOR.values())))
+
 # number of requests in every scenario's deterministic progress-lane
 # schedule (enough backlog for the shared-queue discipline to serialize)
 PE_REQUESTS = 32
@@ -56,17 +73,19 @@ GATED_METRICS = ("n_ops", "depth_mean", "depth_max", "umq_mean", "umq_max")
 
 def build_fabric(sc: Scenario, engine_mode: str,
                  registry: Optional[CounterRegistry] = None,
-                 trace=None) -> Fabric:
+                 trace=None, fault: Optional[FaultPlan] = None) -> Fabric:
     """The fabric configuration every harness drives a scenario through
     (the sweep here, the hotpath throughput bench, golden-trace
     capture): the scenario's deterministic unexpected/wildcard mix over
-    a fresh per-run registry."""
-    return Fabric(mode=engine_mode,
-                  registry=registry if registry is not None
-                  else CounterRegistry(),
-                  trace=trace,
-                  unexpected_every=sc.unexpected_every,
-                  wildcard_every=sc.wildcard_every)
+    a fresh per-run registry. With a ``fault`` plan the returned fabric
+    is a :class:`repro.faults.FaultyFabric` applying it to every
+    exchange."""
+    return build_faulty(fault, mode=engine_mode,
+                        registry=registry if registry is not None
+                        else CounterRegistry(),
+                        trace=trace,
+                        unexpected_every=sc.unexpected_every,
+                        wildcard_every=sc.wildcard_every)
 
 
 def count_ops(stats: Dict[str, CounterStat]) -> int:
@@ -113,13 +132,15 @@ class ScenarioRun:
     umq_max: float
     finding_kinds: List[str]
     defect_kinds: List[str]
+    fault_kinds: List[str] = dataclasses.field(default_factory=list)
+    fault: Optional[str] = None       # injected fault kind, if any
     findings: List[analyses.Finding] = dataclasses.field(
         default_factory=list, repr=False)
     trace_path: Optional[str] = None
 
     def row(self) -> Dict:
         """JSON row for ``scenario_sweep.json``."""
-        return {
+        out = {
             "engine_mode": self.engine_mode,
             "progress_mode": self.progress_mode,
             "n_ops": self.n_ops,
@@ -133,6 +154,13 @@ class ScenarioRun:
             "findings": self.finding_kinds,
             "defects": self.defect_kinds,
         }
+        # only faulted runs carry the fault columns — healthy rows stay
+        # byte-identical to the pre-fault-axis goldens
+        if self.fault is not None or self.fault_kinds:
+            out["faults"] = self.fault_kinds
+        if self.fault is not None:
+            out["fault"] = self.fault
+        return out
 
 
 def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
@@ -141,7 +169,9 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
                  trace_path: Optional[str] = None,
                  wall_clock: bool = True,
                  trace_schema: Optional[int] = None,
-                 telemetry=None) -> ScenarioRun:
+                 telemetry=None,
+                 fault: Optional[Union[str, FaultPlan]] = None
+                 ) -> ScenarioRun:
     """Run one scenario end-to-end under one engine/progress config:
     drive the fabric, snapshot counters, model the progress lanes, run
     every detector. With ``trace_path`` the run is recorded to a
@@ -153,28 +183,36 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
     live — and the final counter events come from the bridge's
     cumulative lanes, so every gated metric and detector finding is
     identical to an unbridged run (the bridge only changes *when* the
-    deltas are folded, never what they sum to)."""
+    deltas are folded, never what they sum to). ``fault`` injects a
+    :class:`repro.faults.FaultPlan` (or the canonical single-kind plan
+    named by a kind string) into every exchange of the drive."""
     if isinstance(sc, str):
         sc = get(sc)
     p = sc.params(size, **(params or {}))
     engine_mode = canonical_mode(engine_mode)
     if progress_mode not in PROGRESS_MODES:
         raise ValueError(f"progress_mode must be one of {PROGRESS_MODES}")
+    if isinstance(fault, str):
+        fault = default_plan(fault, seed=seed)
 
     reg = CounterRegistry()
     writer = None
     if trace_path is not None:
+        meta = {"scenario": sc.name, "seed": seed, "size": size,
+                "params": dict(sorted(p.items())),
+                "progress_mode": progress_mode}
+        if fault is not None and fault.specs:
+            meta["fault"] = fault.to_dict()
         writer = TraceWriter(
             trace_path, mode=engine_mode, wall_clock=wall_clock,
-            schema=trace_schema,
-            meta={"scenario": sc.name, "seed": seed, "size": size,
-                  "params": dict(sorted(p.items())),
-                  "progress_mode": progress_mode})
-    fab = build_fabric(sc, engine_mode, registry=reg, trace=writer)
+            schema=trace_schema, meta=meta)
+    fab = build_fabric(sc, engine_mode, registry=reg, trace=writer,
+                       fault=fault)
     src = telemetry.watch(reg) if telemetry is not None else None
     rng = random.Random(seed)
     t0 = time.perf_counter_ns()
     sc.drive(fab, rng, p)
+    finish_faults(fab)        # land still-deferred straggler deliveries
     wall_ns = time.perf_counter_ns() - t0
 
     # deterministic progress-engine lane schedule (same rng continuation
@@ -195,6 +233,7 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
     findings = analyses.analyze_all(events)
     kinds = sorted({f.kind for f in findings})
     defects = sorted(k for k in kinds if k in DEFECT_KINDS)
+    flagged_faults = sorted(k for k in kinds if k in FAULT_FINDING_KINDS)
 
     stats = counter_stats(events)
     depth = stats.get("match.prq.traversal_depth")
@@ -213,8 +252,11 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
         depth_p50=hist_percentile(depth, 0.50),
         depth_p90=hist_percentile(depth, 0.90),
         umq_mean=hv(umq, "mean"), umq_max=hv(umq, "vmax"),
-        finding_kinds=kinds, defect_kinds=defects, findings=findings,
-        trace_path=trace_path)
+        finding_kinds=kinds, defect_kinds=defects,
+        fault_kinds=flagged_faults,
+        fault=(fault.kinds[0] if fault is not None and len(fault.kinds) == 1
+               else None),
+        findings=findings, trace_path=trace_path)
 
 
 def cell_key(scenario: str, engine_mode: str, progress_mode: str) -> str:
@@ -225,13 +267,20 @@ def sweep(size: str = "full", seed: int = 0,
           engine_modes: Sequence[str] = ENGINE_MODES,
           progress_modes: Sequence[str] = PROGRESS_MODES,
           scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
-          telemetry=None) -> Dict:
+          telemetry=None,
+          faults: Union[bool, Sequence[str]] = False) -> Dict:
     """Every scenario x engine mode x progress mode; returns the
     versioned ``scenario_sweep.json`` payload. A ``telemetry`` bridge
     streams every cell's counters live without changing any gated
-    metric (see :func:`run_scenario`)."""
+    metric (see :func:`run_scenario`). With ``faults`` (True for all
+    of ``FAULT_KINDS``, or a kind list) every scenario additionally
+    runs once per fault kind under the healthy engine (fifo+incoming)
+    with that kind's canonical plan injected — the fault axis the
+    detector-coverage gate is computed over."""
     scs = ([get(s) if isinstance(s, str) else s for s in scenarios]
            if scenarios is not None else all_scenarios())
+    fault_kinds = (list(FAULT_KINDS) if faults is True
+                   else list(faults) if faults else [])
     out: Dict = {
         "format": SWEEP_FORMAT, "version": SWEEP_VERSION,
         "size": size, "seed": seed,
@@ -239,9 +288,12 @@ def sweep(size: str = "full", seed: int = 0,
         "progress_modes": list(progress_modes),
         "scenarios": {},
     }
+    if fault_kinds:
+        out["fault_kinds"] = fault_kinds
     for sc in scs:
         entry = {"description": sc.description, "stresses": sc.stresses,
                  "expect": list(sc.expect),
+                 "fault_expect": list(sc.fault_expect),
                  "params": dict(sorted(sc.params(size).items())),
                  "cells": {}}
         for em in engine_modes:
@@ -250,8 +302,18 @@ def sweep(size: str = "full", seed: int = 0,
                                    seed=seed, size=size,
                                    telemetry=telemetry)
                 entry["cells"][f"{em}+{pm}"] = run.row()
+        if fault_kinds:
+            fcells = entry["fault_cells"] = {}
+            for kind in fault_kinds:
+                run = run_scenario(sc, engine_mode="fifo",
+                                   progress_mode="incoming", seed=seed,
+                                   size=size, telemetry=telemetry,
+                                   fault=kind)
+                fcells[kind] = run.row()
         out["scenarios"][sc.name] = entry
     out["defect_coverage"] = defect_coverage(out)
+    if fault_kinds:
+        out["fault_coverage"] = fault_coverage(out)
     return out
 
 
@@ -272,8 +334,23 @@ def defect_coverage(results: Dict) -> Dict[str, List[str]]:
     return cover
 
 
+def fault_coverage(results: Dict) -> Dict[str, List[str]]:
+    """Which scenarios surfaced each injected fault kind: the kind's
+    dedicated detector fired in that kind's faulted cell."""
+    kinds = results.get("fault_kinds", [])
+    cover: Dict[str, List[str]] = {k: [] for k in kinds}
+    for name, entry in results["scenarios"].items():
+        fcells = entry.get("fault_cells", {})
+        for kind in kinds:
+            cell = fcells.get(kind)
+            if cell and FAULT_DETECTOR[kind] in cell["faults"]:
+                cover[kind].append(name)
+    return cover
+
+
 def check(results: Dict, min_scenarios: int = 6,
-          min_coverage: int = 2) -> List[str]:
+          min_coverage: int = 2,
+          min_fault_coverage: int = 2) -> List[str]:
     """Acceptance conditions over one sweep payload (CLI + verify.sh
     exit nonzero on any)."""
     failures: List[str] = []
@@ -301,12 +378,35 @@ def check(results: Dict, min_scenarios: int = 6,
                 failures.append(
                     f"{name}: expected {detector!r} under {key} "
                     f"(seeded defect {defect!r}), got {cell['defects']}")
+        # fault-class detectors must stay silent on every fault-free
+        # cell, defect modes included — their thresholds are calibrated
+        # so only injected (or real) transport faults cross them
+        for key, cell in sorted(entry["cells"].items()):
+            noisy = sorted(k for k in cell.get("findings", [])
+                           if k in FAULT_FINDING_KINDS)
+            if noisy:
+                failures.append(f"{name}: fault-free cell {key} flagged "
+                                f"fault findings {noisy}")
+        if "fault_cells" in entry:
+            for kind in entry.get("fault_expect", []):
+                detector = FAULT_DETECTOR[kind]
+                cell = entry["fault_cells"].get(kind)
+                if cell is not None and detector not in cell["faults"]:
+                    failures.append(
+                        f"{name}: expected {detector!r} under injected "
+                        f"fault {kind!r}, got {cell['faults']}")
     for defect, flagged in results["defect_coverage"].items():
         if len(flagged) < min_coverage:
             failures.append(
                 f"seeded defect {defect!r} flagged in only "
                 f"{len(flagged)} scenario(s) {flagged} "
                 f"(need >= {min_coverage})")
+    for kind, flagged in results.get("fault_coverage", {}).items():
+        if len(flagged) < min_fault_coverage:
+            failures.append(
+                f"injected fault {kind!r} flagged in only "
+                f"{len(flagged)} scenario(s) {flagged} "
+                f"(need >= {min_fault_coverage})")
     return failures
 
 
@@ -314,13 +414,21 @@ def check(results: Dict, min_scenarios: int = 6,
 
 def make_baseline(results: Dict) -> Dict:
     """Reduce a sweep payload to the deterministic quantities a
-    committed baseline pins."""
+    committed baseline pins. Fault-axis cells (when the sweep ran one)
+    are pinned under ``<scenario>|fault:<kind>`` keys with their
+    flagged fault findings alongside the same gated metrics."""
     cells: Dict[str, Dict] = {}
     for name, entry in results["scenarios"].items():
         for key, cell in entry["cells"].items():
             em, pm = key.split("+")
             cells[cell_key(name, em, pm)] = {
                 "defects": cell["defects"],
+                **{m: cell[m] for m in GATED_METRICS},
+            }
+        for kind, cell in entry.get("fault_cells", {}).items():
+            cells[f"{name}|fault:{kind}"] = {
+                "defects": cell["defects"],
+                "faults": cell["faults"],
                 **{m: cell[m] for m in GATED_METRICS},
             }
     return {"format": BASELINE_FORMAT, "version": SWEEP_VERSION,
@@ -346,7 +454,13 @@ def compare_to_baseline(results: Dict, baseline: Dict,
                 f"size={results['size']!r} seed={results['seed']!r} "
                 "(regenerate with --write-baseline)"]
     current = make_baseline(results)["cells"]
-    for key, want in sorted(baseline.get("cells", {}).items()):
+    base_cells = baseline.get("cells", {})
+    if "fault_kinds" not in results:
+        # the sweep didn't run the fault axis: judge only the standard
+        # cells, so a plain sweep stays green against a faults baseline
+        base_cells = {k: v for k, v in base_cells.items()
+                      if "|fault:" not in k}
+    for key, want in sorted(base_cells.items()):
         got = current.get(key)
         if got is None:
             regressions.append(f"{key}: cell disappeared from the sweep")
@@ -355,6 +469,10 @@ def compare_to_baseline(results: Dict, baseline: Dict,
             regressions.append(
                 f"{key}: defect findings changed "
                 f"{want['defects']} -> {got['defects']}")
+        if "faults" in want and got.get("faults") != want["faults"]:
+            regressions.append(
+                f"{key}: fault findings changed "
+                f"{want['faults']} -> {got.get('faults')}")
         for m in GATED_METRICS:
             a, b = float(want[m]), float(got[m])
             if abs(b - a) > rel_tol * max(abs(a), 1.0):

@@ -32,6 +32,8 @@ Params = Dict[str, int]
     defaults={"ranks": 8, "steps": 40, "face_bytes": 1 << 14},
     smoke={"steps": 24},
     expect=("leaky_umq", "shared"),
+    fault_expect=("drop", "duplicate", "delay", "rank_leave",
+                  "rank_join"),
     unexpected_every=2, wildcard_every=2,
 )
 def halo3d(fab: Fabric, rng: random.Random, p: Params) -> None:
@@ -53,6 +55,8 @@ def halo3d(fab: Fabric, rng: random.Random, p: Params) -> None:
     defaults={"ranks": 8, "rounds": 8, "nbytes": 1 << 18},
     smoke={"rounds": 5},
     expect=("leaky_umq", "shared"),
+    fault_expect=("drop", "duplicate", "delay", "rank_leave",
+                  "rank_join"),
     unexpected_every=2, wildcard_every=2,
 )
 def ring_allreduce(fab: Fabric, rng: random.Random, p: Params) -> None:
@@ -71,6 +75,7 @@ def ring_allreduce(fab: Fabric, rng: random.Random, p: Params) -> None:
     defaults={"ranks": 28, "rounds": 4, "nbytes": 1 << 12},
     smoke={"rounds": 2},
     expect=("linear", "shared"),
+    fault_expect=("drop", "duplicate", "delay", "rank_join"),
     unexpected_every=4, wildcard_every=0,
 )
 def alltoall_transpose(fab: Fabric, rng: random.Random,
@@ -91,6 +96,7 @@ def alltoall_transpose(fab: Fabric, rng: random.Random,
     defaults={"ranks": 16, "degree": 3, "rounds": 10, "nbytes": 1 << 12},
     smoke={"rounds": 6},
     expect=("shared",),
+    fault_expect=("drop", "duplicate", "delay", "rank_join"),
 )
 def sparse_neighbors(fab: Fabric, rng: random.Random, p: Params) -> None:
     for r in range(p["rounds"]):
@@ -141,6 +147,7 @@ def master_worker(fab: Fabric, rng: random.Random, p: Params) -> None:
     defaults={"ranks": 8, "burst": 24, "rounds": 4},
     smoke={"rounds": 3},
     expect=("leaky_umq", "shared"),
+    fault_expect=("rank_join",),
     unexpected_every=1, wildcard_every=2,
 )
 def unexpected_storm(fab: Fabric, rng: random.Random, p: Params) -> None:
@@ -183,3 +190,198 @@ def wildcard_pipeline(fab: Fabric, rng: random.Random, p: Params) -> None:
             consumer.arrive_tags(producer,
                                  reversed(range(batch + wild)),
                                  nbytes=1 << 11)
+
+
+# -- production-shaped scenarios (the repro.faults pack) -------------------
+#
+# Five patterns mirroring the proxy-app communication signatures the
+# Caliper/Benchpark study profiles (AMG2023 shrinking-participation
+# halos, Kripke wavefront sweeps) plus three serving/elastic shapes.
+# Each declares ``fault_expect``: the injected fault kinds whose
+# canonical plan its traffic makes detectable — the sweep's fault axis
+# (scenario_sweep.py --faults) enforces the declarations.
+
+
+@scenario(
+    "amg_coarsen",
+    description="algebraic-multigrid V-cycle: ring halos over a "
+                "participant set that halves per level, then a binomial "
+                "tree fold to rank 0 and broadcast back",
+    stresses="shrinking participation — high ranks idle at coarse "
+             "levels while low ranks keep matching; tree fan-in "
+             "concentrates arrivals toward the root",
+    defaults={"ranks": 16, "cycles": 3, "steps": 2,
+              "halo_bytes": 1 << 13},
+    smoke={"cycles": 2},
+    expect=("shared",),
+    fault_expect=("drop", "duplicate", "delay", "rank_leave"),
+)
+def amg_coarsen(fab: Fabric, rng: random.Random, p: Params) -> None:
+    n = p["ranks"]
+    for c in range(p["cycles"]):
+        active, level = n, 0
+        while active >= 2:
+            fab.phase(f"amg_halo(c={c},l={level})", n=active)
+            for s in range(p["steps"]):
+                tag = (level << 4) | s
+                fab.exchange(patterns.ring_perm(active), tag=tag,
+                             nbytes=p["halo_bytes"] >> level)
+                fab.exchange(patterns.ring_perm(active, -1), tag=tag,
+                             nbytes=p["halo_bytes"] >> level)
+            active >>= 1
+            level += 1
+        # coarse solve: binomial fold to rank 0, broadcast back down
+        fab.phase(f"amg_tree(c={c})", n=n)
+        levels = patterns.tree_pairs(n)
+        for i, lv in enumerate(levels):
+            fab.exchange(lv, tag=900 + i, nbytes=p["halo_bytes"])
+        for i, lv in enumerate(reversed(levels)):
+            fab.exchange([(d, s) for s, d in lv], tag=950 + i,
+                         nbytes=p["halo_bytes"])
+
+
+@scenario(
+    "kripke_sweep",
+    description="Kripke-style wavefront sweep over a 2-D rank grid: "
+                "one exchange per diagonal, sweep corner rotating "
+                "through all four quadrants",
+    stresses="dependency-ordered delivery — each diagonal's sends gate "
+             "the next; corner rotation reverses every flow direction",
+    defaults={"gx": 4, "gy": 4, "sweeps": 10, "nbytes": 1 << 12},
+    smoke={"sweeps": 8},
+    expect=("shared",),
+    fault_expect=("delay", "rank_leave"),
+)
+def kripke_sweep(fab: Fabric, rng: random.Random, p: Params) -> None:
+    gx, gy = p["gx"], p["gy"]
+
+    def rid(x: int, y: int) -> int:
+        return x * gy + y
+
+    for s in range(p["sweeps"]):
+        cx, cy = ((0, 0), (1, 0), (1, 1), (0, 1))[s % 4]
+        fab.phase(f"sweep({s})", corner=s % 4)
+        for d in range(gx + gy - 1):
+            pairs = []
+            for x in range(gx):
+                y = d - x
+                if not 0 <= y < gy:
+                    continue
+                ax = gx - 1 - x if cx else x
+                ay = gy - 1 - y if cy else y
+                nx = ax + (-1 if cx else 1)
+                ny = ay + (-1 if cy else 1)
+                if 0 <= nx < gx:
+                    pairs.append((rid(ax, ay), rid(nx, ay)))
+                if 0 <= ny < gy:
+                    pairs.append((rid(ax, ay), rid(ax, ny)))
+            if pairs:
+                fab.exchange(pairs, tag=d, nbytes=p["nbytes"])
+
+
+@scenario(
+    "power_law_burst",
+    description="bursty fan-in with heavy-tailed sizes: each round one "
+                "hot rank absorbs a power-law-sized batch from every "
+                "peer, all of it ahead of the receives",
+    stresses="deep parked burst at a rotating hot rank: every arrival "
+             "is unexpected, every receive digs the parked set",
+    defaults={"ranks": 16, "rounds": 10, "base_bytes": 1 << 9},
+    smoke={"rounds": 8},
+    expect=("shared",),
+    fault_expect=("drop", "duplicate", "reorder", "delay"),
+    unexpected_every=1, wildcard_every=0,
+)
+def power_law_burst(fab: Fabric, rng: random.Random, p: Params) -> None:
+    n = p["ranks"]
+    for r in range(p["rounds"]):
+        hot = r % n
+        pairs = []
+        for src in range(n):
+            if src == hot:
+                continue
+            # heavy-tailed per-sender batch, capped so a healthy burst
+            # stays well under the umq_flood threshold
+            m = min(1 + int(rng.paretovariate(1.2)), 4)
+            pairs.extend([(src, hot)] * m)
+        nb = min(p["base_bytes"] * (1 << int(rng.paretovariate(1.0))),
+                 1 << 20)
+        fab.phase(f"burst({r})", hot=hot, msgs=len(pairs))
+        fab.exchange(pairs, tag=r, nbytes=nb)
+
+
+@scenario(
+    "request_reply",
+    description="serving-shaped RPC traffic: every round all clients "
+                "fan their request quota into the round's hot shard "
+                "server; replies fan back with one straggling client's "
+                "batch delivered last",
+    stresses="hot-shard fan-in parks the whole round's requests at one "
+             "server; the reply deliver= permutation holds a straggling "
+             "client's batch behind every other reply",
+    defaults={"clients": 24, "servers": 4, "quota": 3, "rounds": 6,
+              "reply_bytes": 1 << 10},
+    smoke={"rounds": 4},
+    expect=("shared",),
+    fault_expect=("drop", "duplicate", "reorder", "delay"),
+    unexpected_every=1, wildcard_every=0,
+)
+def request_reply(fab: Fabric, rng: random.Random, p: Params) -> None:
+    nc, ns, q = p["clients"], p["servers"], p["quota"]
+    for r in range(p["rounds"]):
+        shard = nc + r % ns           # this round's hot shard server
+        fab.phase(f"rpc({r})", shard=shard)
+        for w in range(q):            # one request wave per quota slot
+            tag = 2 * (r * q + w)
+            # request fan-in: every client's wave-w request lands at
+            # the hot shard (ranks nc..nc+ns-1 rotate through the role)
+            req = [(c, shard) for c in range(nc)]
+            fab.exchange(req, tag=tag, nbytes=64)
+            # replies fan back; the straggling client's reply lands
+            # after all others (a legal delivery-order permutation)
+            rep = [(d, s) for s, d in req]
+            laggard = (r + w) % nc
+            deliver = ([pr for pr in rep if pr[1] != laggard]
+                       + [pr for pr in rep if pr[1] == laggard])
+            fab.exchange(rep, tag=tag + 1, nbytes=p["reply_bytes"],
+                         deliver=deliver)
+
+
+@scenario(
+    "elastic_ranks",
+    description="elastic membership: the world shrinks and regrows "
+                "across epochs, each epoch rebuilding its mesh "
+                "(checkpoint.elastic.viable_meshes) and re-syncing the "
+                "survivors with a recursive-doubling butterfly",
+    stresses="membership churn — ranks idle whole epochs, rejoin, and "
+             "every epoch ends in an all-ranks butterfly barrier",
+    defaults={"ranks": 12, "epochs": 8, "nbytes": 1 << 12},
+    smoke={"epochs": 4},
+    expect=("shared",),
+    fault_expect=("delay", "rank_leave"),
+)
+def elastic_ranks(fab: Fabric, rng: random.Random, p: Params) -> None:
+    try:                      # lazy: checkpoint.elastic imports jax
+        from ..checkpoint.elastic import viable_meshes
+    except ImportError:       # offline fallback, same factorization
+        def viable_meshes(n, prefer_model=16):
+            return [(n // m, m)
+                    for m in range(min(prefer_model, n), 0, -1)
+                    if n % m == 0]
+    n = p["ranks"]
+    for e in range(p["epochs"]):
+        # world size churns: full, minus one, minus two, full, ...
+        w = n - (e % 3)
+        data, model = viable_meshes(w, prefer_model=4)[0]
+        fab.phase(f"epoch({e})", world=w, data=data, model=model)
+        if model > 1:
+            # model-parallel ring within each surviving mesh group
+            for g in range(data):
+                base = g * model
+                ring = [(base + i, base + (i + 1) % model)
+                        for i in range(model)]
+                fab.exchange(ring, tag=e << 4, nbytes=p["nbytes"])
+        # post-churn re-sync: butterfly allreduce across the world
+        for s, stage in enumerate(patterns.butterfly_pairs(w)):
+            fab.exchange(stage, tag=(e << 4) | (s + 1),
+                         nbytes=p["nbytes"] // 2)

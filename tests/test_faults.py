@@ -1,0 +1,243 @@
+"""Deterministic fault injection (``repro.faults``): plan
+serialization and validation, injector determinism (same plan =>
+byte-identical faulted trace), the detector fire/silent matrix over
+the canonical plans, faulted-trace replay equivalence (serial and
+sharded), and the committed corpus's faulted entries."""
+import json
+import os
+
+import pytest
+
+from repro.corpus import (CorpusEntry, CorpusStore, InlinePool,
+                          finding_kinds, parallel_replay, signature)
+from repro.corpus.store import FAULT_CELLS
+from repro.faults import (FaultPlan, FaultSpec, JOINER_RANK,
+                          build_faulty, default_plan, plans, single)
+from repro.trace import convert_trace, read_trace
+from repro.trace.replay import Replayer
+from repro.workloads import FAULT_DETECTOR, run_scenario
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+CORPUS_ROOT = os.path.join(HERE, "corpus")
+
+SMOKE = dict(size="smoke", seed=0)
+
+# (scenario, fault kind) cells where each kind's dedicated detector is
+# known to fire at smoke size (the sweep gate proves this for the whole
+# fault_expect matrix; here one representative cell per kind keeps the
+# unit suite fast). delay appears here but not in the corpus: its
+# signal is injector-side, so it only fires live.
+LIVE_CELLS = tuple(FAULT_CELLS) + (("request_reply", "delay"),)
+
+
+# ------------------------------------------------------------- the plans
+
+
+def test_plan_round_trips_through_json():
+    for kind, plan in plans(seed=7).items():
+        back = FaultPlan.from_json(plan.to_json())
+        assert back == plan
+        assert back.kinds == (kind,)
+        assert back.seed == 7
+
+
+def test_plan_dict_shape_is_versioned():
+    obj = default_plan("drop").to_dict()
+    assert obj["format"] == "repro.faults.plan"
+    assert obj["version"] == 1
+    json.dumps(obj)                              # JSON-serializable
+    with pytest.raises(ValueError):
+        FaultPlan.from_dict({"format": "something_else"})
+
+
+def test_single_builds_one_spec_plans():
+    plan = single("drop", rate=0.5, seed=3)
+    assert plan.kinds == ("drop",) and plan.seed == 3
+    assert plan.specs[0].rate == 0.5
+
+
+@pytest.mark.parametrize("bad", [
+    dict(kind="nope"),
+    dict(kind="drop", rate=1.5),
+    dict(kind="reorder", k=0),
+    dict(kind="delay", rank=1, hold=0),
+    dict(kind="delay"),                 # delay needs a target rank
+    dict(kind="rank_leave"),
+    dict(kind="rank_join", rank=1, every=0),
+])
+def test_spec_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultSpec(**bad)
+
+
+def test_default_plan_unknown_kind_raises():
+    with pytest.raises(ValueError):
+        default_plan("gamma_ray")
+
+
+def test_spec_windows():
+    s = FaultSpec(kind="drop", start=2, stop=4)
+    assert [s.active(x) for x in range(5)] == \
+        [False, False, True, True, False]
+    open_ended = FaultSpec(kind="drop", start=1)
+    assert open_ended.active(10 ** 6)
+
+
+# ------------------------------------------------------- the injector
+
+
+def test_faulted_trace_is_deterministic(tmp_path):
+    """Same (scenario, seed, plan) -> byte-identical faulted trace,
+    and the fault actually changed the stream vs the healthy run."""
+    paths = [str(tmp_path / f"f{i}.jsonl") for i in (0, 1)]
+    for p in paths:
+        run_scenario("power_law_burst", engine_mode="fifo",
+                     trace_path=p, wall_clock=False, fault="reorder",
+                     **SMOKE)
+    a, b = (open(p, "rb").read() for p in paths)
+    assert a == b and len(a) > 1000
+    healthy = str(tmp_path / "h.jsonl")
+    run_scenario("power_law_burst", engine_mode="fifo",
+                 trace_path=healthy, wall_clock=False, **SMOKE)
+    assert open(healthy, "rb").read() != a
+
+
+def test_faulted_trace_carries_flt_records_and_plan(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    run_scenario("halo3d", engine_mode="fifo", trace_path=path,
+                 wall_clock=False, fault="drop", **SMOKE)
+    header, _ = read_trace(path)
+    assert header["meta"]["fault"]["specs"][0]["kind"] == "drop"
+    with open(path) as f:
+        flt = [r for r in map(json.loads, f) if r.get("t") == "flt"]
+    assert flt and all(r["kind"] == "drop" for r in flt)
+    assert all(r["n"] >= 1 for r in flt)
+
+
+def test_faulted_trace_v2_v3_round_trip_is_byte_identical(tmp_path):
+    """The ``flt`` annotation records survive the v3 -> v2 -> v3
+    conversion cycle byte-for-byte (the schema-compat rule holds for
+    faulted traces too)."""
+    path = str(tmp_path / "t.jsonl")
+    run_scenario("ring_allreduce", engine_mode="fifo", trace_path=path,
+                 wall_clock=False, fault="duplicate", **SMOKE)
+    v2 = str(tmp_path / "v2.jsonl")
+    v3 = str(tmp_path / "v3.jsonl")
+    convert_trace(path, v2, schema=2)
+    convert_trace(v2, v3, schema=3)
+    assert open(path, "rb").read() == open(v3, "rb").read()
+
+
+def test_deliver_non_permutation_rejected():
+    """The satellite fix: a typo'd deliver= list is an error, not a
+    silent orphan — sanctioned rewrites go through arrival_filter."""
+    fab = build_faulty(None)
+    pairs = [(0, 1), (1, 0)]
+    with pytest.raises(ValueError, match="not a permutation"):
+        fab.exchange(pairs, tag=1, deliver=[(0, 1), (0, 1)])
+    with pytest.raises(ValueError, match="not a permutation"):
+        fab.exchange(pairs, tag=1, deliver=[(0, 1)])
+    fab.exchange(pairs, tag=1, deliver=list(reversed(pairs)))  # legal
+
+
+def test_build_faulty_without_plan_is_plain_fabric():
+    from repro.faults import FaultyFabric
+    assert not isinstance(build_faulty(None), FaultyFabric)
+    assert isinstance(build_faulty(default_plan("drop")), FaultyFabric)
+
+
+# ------------------------------------------- detector fire / silent
+
+
+@pytest.mark.parametrize("sc,kind", LIVE_CELLS,
+                         ids=[f"{s}-{k}" for s, k in LIVE_CELLS])
+def test_canonical_fault_fires_its_detector(sc, kind):
+    r = run_scenario(sc, engine_mode="fifo", progress_mode="incoming",
+                     fault=kind, **SMOKE)
+    assert r.fault == kind
+    assert FAULT_DETECTOR[kind] in r.fault_kinds, (sc, kind)
+    assert r.row()["fault"] == kind
+
+
+@pytest.mark.parametrize("sc", sorted({s for s, _ in LIVE_CELLS}))
+def test_healthy_run_is_fault_finding_free(sc):
+    r = run_scenario(sc, engine_mode="fifo", progress_mode="incoming",
+                     **SMOKE)
+    assert r.fault is None and r.fault_kinds == []
+    assert "fault" not in r.row() and "faults" not in r.row()
+
+
+def test_rank_join_adds_the_joiner_lane():
+    healthy = run_scenario("alltoall_transpose", engine_mode="fifo",
+                           progress_mode="incoming", **SMOKE)
+    joined = run_scenario("alltoall_transpose", engine_mode="fifo",
+                          progress_mode="incoming", fault="rank_join",
+                          **SMOKE)
+    assert joined.n_ops > healthy.n_ops
+    straggler = [f for f in joined.findings
+                 if f.kind == "straggler_rank"]
+    assert any(f.pid == JOINER_RANK for f in straggler)
+
+
+# ------------------------------------- replay + sharding equivalence
+
+
+@pytest.mark.parametrize("kind", ("drop", "duplicate", "reorder"))
+def test_faulted_trace_replays_to_live_verdicts(tmp_path, kind):
+    """Record a faulted run, replay it serially: the detector verdict
+    is reproduced from the trace alone (the faulted op stream is fully
+    self-describing for every kind but delay)."""
+    sc = {k: s for s, k in LIVE_CELLS}[kind]
+    path = str(tmp_path / "t.jsonl")
+    live = run_scenario(sc, engine_mode="fifo", trace_path=path,
+                        wall_clock=False, fault=kind, **SMOKE)
+    res = Replayer(check_matches=False).run(path)
+    assert res.n_ops == live.n_ops
+    assert FAULT_DETECTOR[kind] in finding_kinds(res)
+
+
+@pytest.mark.parametrize("partition", ("rank", "phase"))
+def test_faulted_replay_shards_stat_identical(tmp_path, partition):
+    path = str(tmp_path / "t.jsonl")
+    run_scenario("power_law_burst", engine_mode="fifo", trace_path=path,
+                 wall_clock=False, fault="reorder", **SMOKE)
+    serial = Replayer(check_matches=False).run(path)
+    with InlinePool() as pool:
+        par = parallel_replay(path, jobs=4, partition=partition,
+                              pool=pool)
+    assert par.n_ops == serial.n_ops
+    assert signature(par) == signature(serial)
+    assert finding_kinds(par) == finding_kinds(serial)
+
+
+# ------------------------------------------------ the faulted corpus
+
+
+@pytest.fixture(scope="module")
+def store():
+    return CorpusStore.load(CORPUS_ROOT)
+
+
+def test_corpus_commits_the_faulted_cells(store):
+    faulted = {(e.scenario, e.fault): e for e in store.entries
+               if e.fault is not None}
+    assert set(faulted) == set(FAULT_CELLS)
+    for (sc, kind), e in faulted.items():
+        assert e.engine_mode == "fifo"
+        assert e.id == f"{sc}__fifo__fault_{kind}"
+        assert FAULT_DETECTOR[kind] in e.expected["findings"], e.id
+    # delay is live-only (its counter is injector-side): never committed
+    assert all(e.fault != "delay" for e in store.entries)
+
+
+def test_corpus_entry_fault_field_round_trip():
+    obj = dict(id="x__fifo__fault_drop", file="x.jsonl", scenario="x",
+               engine_mode="fifo", size="smoke", seed=0, schema=3,
+               sha256="0" * 64, n_ops=1, n_phases=1,
+               expected={"phases": [], "findings": []})
+    legacy = CorpusEntry.from_json(obj)          # pre-fault manifest
+    assert legacy.fault is None
+    assert "fault" not in legacy.to_json()       # serializes as before
+    faulted = CorpusEntry.from_json(dict(obj, fault="drop"))
+    assert faulted.fault == "drop"
+    assert faulted.to_json()["fault"] == "drop"

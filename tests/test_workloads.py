@@ -30,6 +30,25 @@ def test_gallery_has_at_least_six_scenarios():
         assert "shared" in s.expect
 
 
+def test_gallery_includes_production_pack():
+    """The repro.faults scenario pack: five production-shaped patterns
+    (multigrid coarsening, wavefront sweep, power-law incast, RPC-style
+    request/reply, elastic data/model meshes) join the gallery."""
+    names = {s.name for s in all_scenarios()}
+    assert {"amg_coarsen", "kripke_sweep", "power_law_burst",
+            "request_reply", "elastic_ranks"} <= names
+    assert len(names) >= 12
+
+
+def test_fault_expectations_name_known_kinds():
+    for s in all_scenarios():
+        assert set(s.fault_expect) <= set(workloads.FAULT_DETECTOR), \
+            s.name
+    # the pack's reorder vehicles declare the hardest-to-surface kind
+    assert "reorder" in workloads.get("power_law_burst").fault_expect
+    assert "reorder" in workloads.get("request_reply").fault_expect
+
+
 def test_get_unknown_scenario_raises():
     with pytest.raises(KeyError):
         workloads.get("nope")
@@ -124,6 +143,20 @@ def test_declared_defects_are_flagged(sc):
         assert detector in r.defect_kinds, (sc.name, defect)
 
 
+@pytest.mark.parametrize(
+    "sc", [s for s in all_scenarios() if s.fault_expect],
+    ids=lambda s: s.name)
+def test_declared_faults_are_flagged(sc):
+    """Every kind a scenario declares in ``fault_expect`` is caught by
+    its dedicated detector when that kind's canonical plan is injected
+    into the healthy engine (the unit-level mirror of the sweep gate)."""
+    for kind in sc.fault_expect:
+        r = run_scenario(sc, engine_mode="fifo",
+                         progress_mode="incoming", fault=kind, **SMOKE)
+        assert workloads.FAULT_DETECTOR[kind] in r.fault_kinds, \
+            (sc.name, kind, r.fault_kinds)
+
+
 def test_hist_percentile():
     st = CounterStat(name="d")
     for v in (1, 1, 1, 1, 1, 1, 1, 1, 1, 64):
@@ -211,6 +244,46 @@ def test_committed_baselines_exist_and_have_format():
             base = json.load(f)
         assert base["format"] == workloads.bench.BASELINE_FORMAT
         assert base["cells"]
+
+
+def test_sweep_fault_axis_schema_and_baseline():
+    r = workloads.sweep(size="smoke", seed=0,
+                        scenarios=["halo3d", "ring_allreduce"],
+                        faults=["drop", "duplicate"])
+    assert r["fault_kinds"] == ["drop", "duplicate"]
+    for entry in r["scenarios"].values():
+        assert set(entry["fault_cells"]) == {"drop", "duplicate"}
+        for cell in entry["fault_cells"].values():
+            assert "faults" in cell and "us_per_op" in cell
+    assert set(r["fault_coverage"]) == {"drop", "duplicate"}
+    # no fault-gate failures (defect coverage needs the full gallery,
+    # which is scenario_sweep.py's job, not this two-scenario slice)
+    assert not [f for f in check(r, min_scenarios=2) if "fault" in f]
+    # fault cells are pinned by the baseline and round-trip clean
+    base = make_baseline(r)
+    assert any("|fault:" in k for k in base["cells"])
+    assert compare_to_baseline(r, base) == []
+    # a plain sweep stays green against a faults baseline
+    plain = workloads.sweep(size="smoke", seed=0,
+                            scenarios=["halo3d", "ring_allreduce"])
+    assert compare_to_baseline(plain, base) == []
+
+
+def test_check_gates_fault_coverage_and_cleanliness():
+    r = workloads.sweep(size="smoke", seed=0,
+                        scenarios=["halo3d", "ring_allreduce"],
+                        faults=["drop"])
+    assert not [f for f in check(r, min_scenarios=2) if "fault" in f]
+    broken = json.loads(json.dumps(r))
+    broken["fault_coverage"]["drop"] = []
+    assert any("drop" in f for f in check(broken, min_scenarios=2))
+    broken = json.loads(json.dumps(r))
+    broken["scenarios"]["halo3d"]["cells"][
+        "fifo+incoming"]["findings"] = ["orphan_posts"]
+    assert any("fault-free" in f for f in check(broken, min_scenarios=2))
+    broken = json.loads(json.dumps(r))
+    broken["scenarios"]["halo3d"]["fault_cells"]["drop"]["faults"] = []
+    assert any("fault 'drop'" in f for f in check(broken, min_scenarios=2))
 
 
 # ------------------------------------------------------- trace integration
