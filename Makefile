@@ -3,7 +3,8 @@ PYTHON ?= python
 .PHONY: verify test bench-match bench-replay replay-smoke \
 	bench-scenarios scenario-smoke faults-smoke bench-faults \
 	scenario-baseline bench-hotpath \
-	hotpath-smoke hotpath-baseline bench-replay-hotpath \
+	hotpath-smoke hotpath-baseline profile-hotpath \
+	bench-trajectory bench-replay-hotpath \
 	replay-hotpath-smoke replay-baseline bench-telemetry \
 	telemetry-smoke bench-corpus corpus-smoke corpus-run \
 	corpus-baseline tour-timeline tour-match tour-replay \
@@ -44,18 +45,28 @@ scenario-baseline:
 	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --faults --write-baseline
 	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --faults --write-baseline
 
-# hot-path throughput gate: >= 3x the frozen pre-overhaul engine,
+# hot-path throughput gate: >= 3.1x the frozen pre-overhaul engine,
 # measured in-run (machine-load-proof ratio)
 bench-hotpath:
 	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py
 
 hotpath-smoke:
-	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py --smoke --min-speedup 2.5
+	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py --smoke --min-speedup 2.7
 
 # regenerate the committed op-stream/throughput baselines
 hotpath-baseline:
 	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py --write-baseline
 	PYTHONPATH=src $(PYTHON) benchmarks/hotpath_bench.py --smoke --write-baseline
+
+# cProfile the bench inner loop (top-20 cumulative) so the next perf
+# PR starts from evidence, not guesses
+profile-hotpath:
+	PYTHONPATH=src $(PYTHON) scripts/profile_hotpath.py
+
+# consolidate the measured hotpath/replay/corpus/telemetry ratios from
+# results/bench/*.json into the committed perf trajectory
+bench-trajectory:
+	PYTHONPATH=src $(PYTHON) scripts/bench_trajectory.py --label dev
 
 # replay-pipeline perf gate: batched v3 streaming replay vs the frozen
 # per-op pipeline (paired-median, in-process) + v2->v3 footprint gate
@@ -63,7 +74,7 @@ bench-replay-hotpath:
 	PYTHONPATH=src $(PYTHON) benchmarks/replay_bench.py
 
 replay-hotpath-smoke:
-	PYTHONPATH=src $(PYTHON) benchmarks/replay_bench.py --smoke --min-speedup 2.0
+	PYTHONPATH=src $(PYTHON) benchmarks/replay_bench.py --smoke --min-speedup 2.2
 
 # regenerate the committed replay op-stream/throughput baselines
 replay-baseline:

@@ -30,9 +30,36 @@ def run_halo_child(backend: str, devices: int = 8, box: int = 16,
     return json.loads(out.stdout.splitlines()[-1])
 
 
+def bench_meta() -> dict:
+    """Host attribution stamped into every bench result: recorded
+    ratios are only comparable across machines when the substrate
+    (numpy present/absent + version) and the schedulable core count
+    travel with them."""
+    try:
+        import numpy
+        np_version: Optional[str] = numpy.__version__
+    except ImportError:
+        np_version = None
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    try:
+        from repro.corpus.parallel import usable_cores
+        cores = usable_cores()
+    finally:
+        sys.path.pop(0)
+    return {
+        "python": sys.version.split()[0],
+        "numpy": np_version,
+        "usable_cores": cores,
+    }
+
+
 def save_json(name: str, payload) -> str:
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, name)
+    if isinstance(payload, dict):
+        meta = dict(payload.get("meta") or {})
+        meta.update(bench_meta())
+        payload = dict(payload, meta=meta)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path

@@ -10,12 +10,13 @@ Measures every scenario x engine mode with :mod:`repro.workloads
 match throughput against the committed machine-local baseline
 (``benchmarks/baselines/hotpath_baseline[_smoke].json``).
 
-The committed baseline was recorded on the *pre-overhaul* engine, so the
-default gate demands the overhaul's >= 3x; after regenerating the
-baseline (``--write-baseline`` / ``make hotpath-baseline``) the bar moves
-to the then-current engine and later PRs gate at ~1x against it (pass
-``--min-speedup 0.8`` or similar to tolerate machine noise while still
-catching order-of-magnitude regressions).
+The gate itself is the *in-run* paired-median speedup of the current
+engine over the frozen pre-overhaul engine (``repro.match.legacy``), so
+it is machine-load-proof; the committed baseline pins the op stream the
+pair replays. The default bar is 3.1x — the substrate-vectorization
+PR's honestly measured 3.21x full-size aggregate minus noise margin
+(the overhaul PR measured 3.0-3.3x; the smoke size runs a
+noise-tolerant 2.7x via ``make hotpath-smoke`` / ``scripts/verify.sh``).
 
 Exit status is non-zero on any failed condition (``make bench-hotpath``;
 ``scripts/verify.sh`` runs the smoke size with a noise-tolerant bar).
@@ -52,7 +53,7 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeats", type=int, default=7,
                     help="best-of-N timing repeats per cell")
-    ap.add_argument("--min-speedup", type=float, default=3.0,
+    ap.add_argument("--min-speedup", type=float, default=3.1,
                     help="required aggregate binned match-throughput "
                          "multiple of the committed baseline")
     ap.add_argument("--baseline", default=None,

@@ -1,0 +1,129 @@
+"""Record the perf trajectory: consolidate measured bench ratios.
+
+    PYTHONPATH=src python scripts/bench_trajectory.py --label pr9 [--note ...]
+
+Reads the latest ``results/bench/{hotpath,replay,corpus,telemetry}.json``
+(whatever subset exists) and upserts one labeled entry into the
+committed ``results/bench/trajectory.json`` — the per-perf-PR history
+of what the gated ratios actually measured, so "the gate floor was
+raised to X" is always backed by a recorded number. Entries are keyed
+by label: re-running with the same label replaces that entry
+(idempotent), so a PR's final verify run wins.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO, "results", "bench")
+TRAJECTORY = os.path.join(RESULTS, "trajectory.json")
+
+
+def _load(name: str):
+    path = os.path.join(RESULTS, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def collect() -> dict:
+    """Pull the gate-relevant ratios out of each bench's latest result
+    (tolerant of missing files — only what was measured is recorded)."""
+    out: dict = {}
+    hp = _load("hotpath")
+    if hp:
+        mode = hp.get("gated_mode", "binned")
+        agg = (hp.get("aggregate") or {}).get(mode) or {}
+        out["hotpath"] = {
+            "size": hp.get("size"),
+            "mode": mode,
+            "match_ops_per_s": agg.get("match_ops_per_s"),
+            "speedup_vs_legacy": agg.get("speedup_vs_legacy"),
+            "trace_recs_per_s": agg.get("trace_recs_per_s"),
+            "drain_deltas_per_s": agg.get("drain_deltas_per_s"),
+        }
+    rp = _load("replay")
+    if rp:
+        agg = rp.get("aggregate") or {}
+        out["replay"] = {
+            "size": rp.get("size"),
+            "replay_ops_per_s": agg.get("replay_ops_per_s"),
+            "speedup_vs_legacy": agg.get("speedup_vs_legacy"),
+            "shrink_vs_v2": agg.get("shrink_vs_v2"),
+        }
+    cp = _load("corpus")
+    if cp:
+        sp = cp.get("speedup") or {}
+        out["corpus"] = {
+            "size": cp.get("size"),
+            "entries": (cp.get("corpus") or {}).get("entries"),
+            "cores": sp.get("cores"),
+            "jobs": sp.get("jobs"),
+            "serial_ops_per_s": sp.get("serial_ops_per_s"),
+            "parallel_ops_per_s": sp.get("parallel_ops_per_s"),
+            "parallel_speedup": sp.get("speedup"),
+            "speedup_gated": (sp.get("cores") or 0) >= 2,
+        }
+    tl = _load("telemetry")
+    if tl:
+        ov = tl.get("overhead") or {}
+        out["telemetry"] = {
+            "size": tl.get("size"),
+            "bridged_median_ratio": ov.get("median_ratio"),
+            "bridged_min_ratio": ov.get("min_ratio"),
+        }
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--label", required=True,
+                    help="trajectory entry key (e.g. pr9-vectorized-"
+                         "substrate); same label replaces the entry")
+    ap.add_argument("--note", default=None,
+                    help="one-line context recorded with the entry")
+    args = ap.parse_args()
+
+    ratios = collect()
+    if not ratios:
+        print("no results/bench/*.json found — run the benches first",
+              file=sys.stderr)
+        return 1
+
+    sys.path.insert(0, REPO)
+    from benchmarks.common import bench_meta
+
+    entry = {"label": args.label, "meta": bench_meta(),
+             "ratios": ratios}
+    if args.note:
+        entry["note"] = args.note
+
+    doc = {"format": "repro.bench_trajectory", "version": 1,
+           "entries": []}
+    if os.path.exists(TRAJECTORY):
+        with open(TRAJECTORY) as f:
+            doc = json.load(f)
+    entries = [e for e in doc.get("entries", [])
+               if e.get("label") != args.label]
+    entries.append(entry)
+    doc["entries"] = entries
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"trajectory entry {args.label!r} recorded "
+          f"({len(entries)} total): {TRAJECTORY}")
+    for src, vals in sorted(ratios.items()):
+        keys = ", ".join(f"{k}={v}" for k, v in vals.items()
+                         if v is not None)
+        print(f"  {src}: {keys}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

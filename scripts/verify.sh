@@ -66,14 +66,14 @@ echo "== workload scenario sweep gate (baseline regression + seeded-defect + fau
 python benchmarks/scenario_sweep.py --smoke --faults
 
 echo "== hot-path throughput gate (vs frozen pre-overhaul engine, in-run) =="
-# full-size gate is 3x (make bench-hotpath); the CI-sized run uses a
+# full-size gate is 3.1x (make bench-hotpath); the CI-sized run uses a
 # noise-tolerant bar that still catches order-of-magnitude regressions
-python benchmarks/hotpath_bench.py --smoke --min-speedup 2.5
+python benchmarks/hotpath_bench.py --smoke --min-speedup 2.7
 
 echo "== replay-pipeline gate (batched v3 vs frozen per-op pipeline, in-run) =="
 # full-size gate is 2.5x (make bench-replay-hotpath); CI-sized bar is
 # noise-tolerant; the 3x bytes/op footprint gate applies at both sizes
-python benchmarks/replay_bench.py --smoke --min-speedup 2.0
+python benchmarks/replay_bench.py --smoke --min-speedup 2.2
 
 echo "== live-telemetry gate (bridged overhead paired-median + mid-run finding) =="
 # bridge attach/poll/detach must be leak-free, bridged throughput
@@ -88,3 +88,10 @@ echo "== corpus + parallel-replay gate (committed corpus, shard equivalence, swe
 # (>= 1.3x smoke / 2x full) is gated when >= 2 cores are usable —
 # on single-core hosts the ratio is recorded with a loud SKIP note
 python benchmarks/corpus_bench.py --smoke
+
+echo "== perf trajectory (consolidate measured ratios) =="
+# upserts one labeled entry into the committed
+# results/bench/trajectory.json; per-PR entries are recorded with
+# TRAJECTORY_LABEL=prN ./scripts/verify.sh (the default label tracks
+# the latest local verify run without touching PR history)
+python scripts/bench_trajectory.py --label "${TRAJECTORY_LABEL:-verify-smoke}"

@@ -450,11 +450,20 @@ class CounterRegistry:
         """:meth:`_merge` for ``lanes_only`` registries: identical fold,
         per-lane stats only — no cross-lane aggregate maintenance. Kept
         as a separate inlined loop so neither variant pays a per-delta
-        branch (the file's usual hot-loop duplication trade)."""
+        branch (the file's usual hot-loop duplication trade).
+
+        Column records are *grouped* before folding: one batch (one
+        per-phase drain, on the replay path) typically carries many tiny
+        records sharing the same lane and column-set constant (one per
+        engine batch call), and stat folding is commutative — so same-
+        ``(pid, columns)`` value lists are concatenated first and each
+        combined column set folds once, long enough to take the bulk
+        fold paths tiny records never reach."""
         by_pid = self._merged_by_pid
         cpid = None
         cper: Dict[str, CounterStat] = {}
         nd = 0                            # logical deltas this batch
+        groups: Dict[Tuple[int, int], List] = {}
         it = iter(flat)
         for pid, name, value, obs in zip(it, it, it, it):
             if pid != cpid:
@@ -463,113 +472,12 @@ class CounterRegistry:
                 if cper is None:
                     cper = by_pid[pid] = {}
             per = cper
-            if type(obs) is str:          # column record
-                nv = len(value)
-                nd += nv
-                a = None
-                if nv >= 96:
-                    try:
-                        a = _np.asarray(value)
-                    except (OverflowError, ValueError):
-                        a = None
-                    if a is not None and a.dtype != _np.int64:
-                        a = None      # floats/bignums: exact python fold
-                if a is not None:
-                    # numpy bulk fold: column sums/extrema and the
-                    # power-of-two bin counts (frexp exponent ==
-                    # bit_length) in a handful of vector ops — engine
-                    # queue metrics are small ints, exact in float64
-                    k = len(name)
-                    a = a.reshape(-1, k) if k > 1 else a[:, None]
-                    j = 0
-                    for cname, cobs in name:
-                        col = a[:, j]
-                        j += 1
-                        pst = per.get(cname)
-                        if pst is None:
-                            pst = per[cname] = _fresh_stat(cname)
-                        pst.count += len(col)
-                        pst.total += int(col.sum())
-                        if cobs:
-                            mn = int(col.min())
-                            mx = int(col.max())
-                            pst.kind = "histogram"
-                            if mn < pst.vmin:
-                                pst.vmin = mn
-                            if mx > pst.vmax:
-                                pst.vmax = mx
-                            pbins = pst.bins
-                            pget = pbins.get
-                            pos = col[col > 0]
-                            nz = len(pos)
-                            if nz != len(col):
-                                pbins[0] = pget(0, 0) + len(col) - nz
-                            if nz:
-                                exps = _np.frexp(
-                                    pos.astype(_np.float64))[1] - 1
-                                bv, bc = _np.unique(
-                                    exps, return_counts=True)
-                                for e, cco in zip(bv.tolist(),
-                                                  bc.tolist()):
-                                    bb = 1 << e
-                                    pbins[bb] = pget(bb, 0) + cco
-                    continue
-                if nv >= 24:
-                    k = len(name)
-                    j = 0
-                    for cname, cobs in name:
-                        colv = value[j::k] if k > 1 else value
-                        j += 1
-                        pst = per.get(cname)
-                        if pst is None:
-                            pst = per[cname] = _fresh_stat(cname)
-                        pst.count += len(colv)
-                        pst.total += sum(colv)
-                        if cobs:
-                            vc: Dict[float, int] = {}
-                            vget = vc.get
-                            for v in colv:
-                                vc[v] = vget(v, 0) + 1
-                            mn = min(vc)
-                            mx = max(vc)
-                            pst.kind = "histogram"
-                            if mn < pst.vmin:
-                                pst.vmin = mn
-                            if mx > pst.vmax:
-                                pst.vmax = mx
-                            pbins = pst.bins
-                            pget = pbins.get
-                            for v, c in vc.items():
-                                iv = int(v)
-                                b = (1 << (iv.bit_length() - 1)
-                                     if iv > 0 else 0)
-                                pbins[b] = pget(b, 0) + c
-                    continue
-                cols = []
-                for cname, cobs in name:
-                    pst = per.get(cname)
-                    if pst is None:
-                        pst = per[cname] = _fresh_stat(cname)
-                    cols.append((pst, cobs))
-                k = len(cols)
-                i = 0
-                for v in value:
-                    pst, cobs = cols[i]
-                    i += 1
-                    if i == k:
-                        i = 0
-                    pst.count += 1
-                    pst.total += v
-                    if cobs:
-                        iv = int(v)
-                        b = 1 << (iv.bit_length() - 1) if iv > 0 else 0
-                        pst.kind = "histogram"
-                        if v < pst.vmin:
-                            pst.vmin = v
-                        if v > pst.vmax:
-                            pst.vmax = v
-                        bins = pst.bins
-                        bins[b] = bins.get(b, 0) + 1
+            if type(obs) is str:          # column record: defer, grouped
+                g = groups.get((pid, id(name)))
+                if g is None:
+                    groups[(pid, id(name))] = [per, name, list(value)]
+                else:
+                    g[2] += value
                 continue
             pst = per.get(name)
             if pst is None:
@@ -587,7 +495,122 @@ class CounterRegistry:
                     pst.vmax = value
                 bins = pst.bins
                 bins[b] = bins.get(b, 0) + 1
+        for per, name, value in groups.values():
+            nd += self._fold_cols(per, name, value)
         self.deltas_merged += nd
+
+    @staticmethod
+    def _fold_cols(per: Dict[str, CounterStat], name, value) -> int:
+        """Fold one (possibly concatenated) column record into a lane's
+        stats; returns the number of logical deltas folded. Same three
+        tiers as :meth:`_merge`'s inline fold: numpy bulk, python
+        column slices, tiny per-value loop."""
+        nv = len(value)
+        a = None
+        if nv >= 96:
+            try:
+                a = _np.asarray(value)
+            except (OverflowError, ValueError):
+                a = None
+            if a is not None and a.dtype != _np.int64:
+                a = None              # floats/bignums: exact python fold
+        if a is not None:
+            # numpy bulk fold: column sums/extrema and the
+            # power-of-two bin counts (frexp exponent ==
+            # bit_length) in a handful of vector ops — engine
+            # queue metrics are small ints, exact in float64
+            k = len(name)
+            a = a.reshape(-1, k) if k > 1 else a[:, None]
+            j = 0
+            for cname, cobs in name:
+                col = a[:, j]
+                j += 1
+                pst = per.get(cname)
+                if pst is None:
+                    pst = per[cname] = _fresh_stat(cname)
+                pst.count += len(col)
+                pst.total += int(col.sum())
+                if cobs:
+                    mn = int(col.min())
+                    mx = int(col.max())
+                    pst.kind = "histogram"
+                    if mn < pst.vmin:
+                        pst.vmin = mn
+                    if mx > pst.vmax:
+                        pst.vmax = mx
+                    pbins = pst.bins
+                    pget = pbins.get
+                    pos = col[col > 0]
+                    nz = len(pos)
+                    if nz != len(col):
+                        pbins[0] = pget(0, 0) + len(col) - nz
+                    if nz:
+                        exps = _np.frexp(
+                            pos.astype(_np.float64))[1] - 1
+                        bv, bc = _np.unique(
+                            exps, return_counts=True)
+                        for e, cco in zip(bv.tolist(),
+                                          bc.tolist()):
+                            bb = 1 << e
+                            pbins[bb] = pget(bb, 0) + cco
+            return nv
+        if nv >= 24:
+            k = len(name)
+            j = 0
+            for cname, cobs in name:
+                colv = value[j::k] if k > 1 else value
+                j += 1
+                pst = per.get(cname)
+                if pst is None:
+                    pst = per[cname] = _fresh_stat(cname)
+                pst.count += len(colv)
+                pst.total += sum(colv)
+                if cobs:
+                    vc: Dict[float, int] = {}
+                    vget = vc.get
+                    for v in colv:
+                        vc[v] = vget(v, 0) + 1
+                    mn = min(vc)
+                    mx = max(vc)
+                    pst.kind = "histogram"
+                    if mn < pst.vmin:
+                        pst.vmin = mn
+                    if mx > pst.vmax:
+                        pst.vmax = mx
+                    pbins = pst.bins
+                    pget = pbins.get
+                    for v, c in vc.items():
+                        iv = int(v)
+                        b = (1 << (iv.bit_length() - 1)
+                             if iv > 0 else 0)
+                        pbins[b] = pget(b, 0) + c
+            return nv
+        cols = []
+        for cname, cobs in name:
+            pst = per.get(cname)
+            if pst is None:
+                pst = per[cname] = _fresh_stat(cname)
+            cols.append((pst, cobs))
+        k = len(cols)
+        i = 0
+        for v in value:
+            pst, cobs = cols[i]
+            i += 1
+            if i == k:
+                i = 0
+            pst.count += 1
+            pst.total += v
+            if cobs:
+                iv = int(v)
+                b = 1 << (iv.bit_length() - 1) if iv > 0 else 0
+                pst.kind = "histogram"
+                if v < pst.vmin:
+                    pst.vmin = v
+                if v > pst.vmax:
+                    pst.vmax = v
+                bins = pst.bins
+                bins[b] = bins.get(b, 0) + 1
+        return nv
 
     def drain(self) -> Dict[str, CounterStat]:
         """Merge all buffered deltas into the aggregate stats and return

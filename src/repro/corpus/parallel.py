@@ -59,15 +59,42 @@ def default_jobs() -> int:
 
 # -- shard planning --------------------------------------------------------
 
-def plan_shards(scan: PartitionScan, jobs: int, partition: str = "rank"
+# Below this many ops a shard is dispatch-dominated (pickle + IPC +
+# per-shard header parse cost ~ the replay itself), so tiny traces are
+# planned into fewer, meatier shards rather than one-per-job.
+MIN_SHARD_OPS = 256
+# Planning more shards than cores can schedule only helps load
+# balancing up to a point; beyond ~4 shards per usable core the extra
+# dispatch overhead outweighs it.
+_OVERSHARD = 4
+
+
+def _shard_budget(scan: PartitionScan, jobs: int, cores: Optional[int],
+                  min_shard_ops: int) -> int:
+    if cores is None:
+        cores = usable_cores()
+    budget = min(jobs, max(1, cores) * _OVERSHARD)
+    if min_shard_ops > 0:
+        budget = min(budget, max(1, scan.n_ops // min_shard_ops))
+    return max(1, budget)
+
+
+def plan_shards(scan: PartitionScan, jobs: int, partition: str = "rank",
+                cores: Optional[int] = None,
+                min_shard_ops: int = MIN_SHARD_OPS
                 ) -> List[Tuple[str, Tuple]]:
     """Plan at most ``jobs`` shards over a scanned trace. Returns
     ``("rank", (r0, r1, ...))`` or ``("phase", (lo, hi))`` specs;
-    deterministic for a given scan."""
+    deterministic for a given scan (and a given ``cores``: pass it
+    explicitly for host-independent plans — it defaults to
+    :func:`usable_cores` so single-core hosts don't pay sharding
+    overhead they can't recoup). ``min_shard_ops`` batches small
+    traces into fewer, meatier shards; 0 disables the floor."""
     if partition == "rank":
         # greedy balance: heaviest ranks first onto the lightest shard
         ranks = sorted(scan.rank_ops, key=lambda r: (-scan.rank_ops[r], r))
-        nsh = max(1, min(jobs, len(ranks)))
+        nsh = max(1, min(_shard_budget(scan, jobs, cores, min_shard_ops),
+                         len(ranks)))
         bins: List[List[int]] = [[] for _ in range(nsh)]
         loads = [0] * nsh
         for r in ranks:
@@ -76,7 +103,8 @@ def plan_shards(scan: PartitionScan, jobs: int, partition: str = "rank"
             loads[i] += scan.rank_ops[r]
         return [("rank", tuple(sorted(b))) for b in bins if b]
     if partition == "phase":
-        nsh = max(1, min(jobs, scan.n_phases))
+        nsh = max(1, min(_shard_budget(scan, jobs, cores, min_shard_ops),
+                         scan.n_phases))
         base, rem = divmod(scan.n_phases, nsh)
         out: List[Tuple[str, Tuple]] = []
         lo = 0
@@ -141,7 +169,12 @@ class ReplayPool:
         self._pool = mp.get_context(start_method).Pool(self.jobs)
 
     def map(self, fn, tasks: Sequence) -> List:
-        return self._pool.map(fn, list(tasks), chunksize=1)
+        tasks = list(tasks)
+        # batch small tasks per worker dispatch: one IPC round per
+        # ~2 chunks per worker instead of one per shard, order
+        # preserved by Pool.map regardless of chunksize
+        chunk = max(1, len(tasks) // (self.jobs * 2))
+        return self._pool.map(fn, tasks, chunksize=chunk)
 
     def close(self) -> None:
         self._pool.close()

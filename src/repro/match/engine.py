@@ -37,9 +37,15 @@ traffic mix the paper's histograms are drawn from.
 from __future__ import annotations
 
 import contextlib
+import math
 import time
 from collections import Counter, deque
 from typing import Deque, Dict, List, Optional, Tuple
+
+try:                                  # optional: the vectorized wildcard
+    import numpy as _np               # filter and plan builders fall back
+except ImportError:                   # to the pure-python paths without it
+    _np = None
 
 from ..comm import patterns
 from ..core.counters import CounterRegistry, global_registry
@@ -109,6 +115,37 @@ class _FusedSpan:
             fuse, fab._fuse = fab._fuse, None
             for dst, ops in fuse.items():
                 fab.engine(dst).run_ops(ops)
+
+
+# Exchange-plan cache (module-global: plans are pure values — per-
+# destination op groups — keyed by pattern-tuple identity, the
+# unexpected/wildcard mix, the tick phase and the envelope, so every
+# fabric a bench or sweep builds shares one warm cache). Each plan pins
+# the tuples it was built from, which is what keeps its id()-based key
+# valid: a live pin means no other object can hold that id.
+_PLAN_CACHE: Dict = {}
+_PLAN_CACHE_MAX = 8192
+
+
+def _group_np(dsts, srcs) -> Tuple:
+    """Group a phase's (dst, src) columns by destination in one numpy
+    pass: stable-sort on dst, cut at the boundaries, return
+    ``((dst, [src, ...]), ...)`` ordered by destination rank with each
+    group's srcs in original (pair) order — the same groups the
+    pure-python grouping loop produces."""
+    n = len(dsts)
+    if not n:
+        return ()
+    order = _np.argsort(dsts, kind="stable")
+    sd = dsts[order]
+    ss = srcs[order].tolist()
+    cuts = _np.flatnonzero(sd[1:] != sd[:-1]) + 1
+    out = []
+    start = 0
+    for end in (*cuts.tolist(), n):
+        out.append((int(sd[start]), ss[start:end]))
+        start = end
+    return tuple(out)
 
 
 def canonical_mode(mode: str) -> str:
@@ -294,9 +331,28 @@ class IndexedUMQ:
     miss, the live queue length — which keeps the
     ``match.umq.traversal_depth`` histogram (and therefore deterministic
     traces and committed baselines) byte-identical to the pre-indexed
-    engine."""
+    engine.
 
-    __slots__ = ("_q", "_env", "_lazy")
+    Deep wildcard traversals additionally vectorize: parallel numpy
+    envelope columns (src / tag / comm), maintained lazily alongside
+    the arrival list, let a wildcard receive over a long queue resolve
+    as one boolean-mask ``argmax`` instead of a python attribute scan.
+    A short python prefix scan runs first so the depth-1 hit — the
+    fixed design's common case — never pays the vectorization setup.
+    The columns are pure acceleration structure: hit index and depth
+    are exactly what the linear scan reports, and when numpy is absent
+    the original scan is the code path."""
+
+    __slots__ = ("_q", "_env", "_lazy", "_cols", "_coff", "_cvalid",
+                 "_ccap")
+
+    # Vectorization thresholds (class attributes so tests can force
+    # either path): queues shorter than _VEC_MIN stay on the python
+    # scan; longer queues scan the first _SCAN_PREFIX entries in python
+    # (early-exit protection) before masking the remainder.
+    _VEC_MIN = 48
+    _SCAN_PREFIX = 16
+    _MIN_CAP = 128
 
     def __init__(self) -> None:
         self._q: List[Message] = []     # live messages, arrival order
@@ -307,6 +363,16 @@ class IndexedUMQ:
         # never pays for the index at all.
         self._env: Dict[Tuple[int, int], Dict[int, Deque[Message]]] = {}
         self._lazy = 0                  # unindexed arrival-suffix length
+        # numpy envelope columns, also lazy: _cols[k][_coff:_coff+_cvalid]
+        # mirrors (src, tag, comm) of _q[:_cvalid]. _coff counts dead
+        # leading entries (head deletions advance the window instead of
+        # shifting the arrays); a mid-queue deletion truncates _cvalid
+        # to the deletion point. While _cvalid == 0 the columns cost one
+        # integer compare per deletion and nothing per arrival.
+        self._cols = None
+        self._coff = 0
+        self._cvalid = 0
+        self._ccap = 0
 
     def __len__(self) -> int:
         return len(self._q)
@@ -331,6 +397,81 @@ class IndexedUMQ:
             dq.append(m)
         self._lazy = 0
 
+    def note_del(self, i: int) -> None:
+        """Column maintenance for a deletion of ``_q[i]`` (inlined batch
+        fast paths delete directly off the raw list). O(1), and a single
+        compare while no columns exist (``_cvalid == 0``)."""
+        if i < self._cvalid:
+            if i:
+                self._cvalid = i        # suffix shifted: revalidate lazily
+            else:
+                self._cvalid -= 1       # head pop: advance the window
+                self._coff += 1
+
+    def _sync_cols(self) -> None:
+        """Bring the envelope columns up to date with ``_q`` (extend the
+        valid prefix; grow — and compact the dead head — when out of
+        capacity)."""
+        q = self._q
+        n = len(q)
+        v = self._cvalid
+        if self._cols is None or self._coff + n > self._ccap:
+            cap = max(self._MIN_CAP, 2 * n)
+            cols = (_np.empty(cap, _np.int64),
+                    _np.empty(cap, _np.int64),
+                    _np.empty(cap, _np.int64))
+            if v:
+                off = self._coff
+                for new, old in zip(cols, self._cols):
+                    new[:v] = old[off:off + v]
+            self._cols = cols
+            self._ccap = cap
+            self._coff = 0
+        if v < n:
+            lo = self._coff + v
+            hi = self._coff + n
+            tail = q[v:]
+            cs, ct, cc = self._cols
+            cs[lo:hi] = [m.src for m in tail]
+            ct[lo:hi] = [m.tag for m in tail]
+            cc[lo:hi] = [m.comm for m in tail]
+            self._cvalid = n
+
+    def _hybrid_find(self, src: int, tag: int, comm: int) -> int:
+        """Wildcard candidate search over a long queue: python scan of
+        the first ``_SCAN_PREFIX`` arrivals (depth-1 hits stay cheap),
+        then one numpy boolean mask over the remaining envelope columns;
+        ``argmax`` of the mask is the earliest acceptable arrival.
+        Returns the 0-based queue index, or -1 on a miss."""
+        q = self._q
+        n = len(q)
+        pre = self._SCAN_PREFIX
+        if pre > n:
+            pre = n
+        for j in range(pre):
+            m = q[j]
+            if ((src == ANY_SOURCE or m.src == src)
+                    and (tag == ANY_TAG or m.tag == tag)
+                    and m.comm == comm):
+                return j
+        if pre == n:
+            return -1
+        self._sync_cols()
+        lo = self._coff + pre
+        hi = self._coff + len(q)
+        cs, ct, cc = self._cols
+        if src == ANY_SOURCE:
+            if tag == ANY_TAG:
+                mask = cc[lo:hi] == comm
+            else:
+                mask = (ct[lo:hi] == tag) & (cc[lo:hi] == comm)
+        else:
+            mask = (cs[lo:hi] == src) & (cc[lo:hi] == comm)
+        j = int(mask.argmax())
+        if not mask[j]:
+            return -1
+        return pre + j
+
     def match(self, recv: PostedRecv) -> Tuple[Optional[Message], int]:
         return self.match_env(recv.src, recv.tag, recv.comm)
 
@@ -351,31 +492,37 @@ class IndexedUMQ:
             if not dq:
                 del per[src]
             i = q.index(msg)            # identity scan: true rank
+            self.note_del(i)
             del q[i]
             return msg, i + 1
         # wildcard receive: traverse arrival order (earliest accepted
-        # arrival wins), specialized per wildcard shape
-        i = -1
-        if src == ANY_SOURCE:
-            if tag == ANY_TAG:
-                for j, m in enumerate(q):
-                    if m.comm == comm:
-                        i = j
-                        break
+        # arrival wins) — numpy envelope-column filter for long queues,
+        # python scan specialized per wildcard shape otherwise
+        if _np is not None and len(q) >= self._VEC_MIN:
+            i = self._hybrid_find(src, tag, comm)
+        else:
+            i = -1
+            if src == ANY_SOURCE:
+                if tag == ANY_TAG:
+                    for j, m in enumerate(q):
+                        if m.comm == comm:
+                            i = j
+                            break
+                else:
+                    for j, m in enumerate(q):
+                        if m.tag == tag and m.comm == comm:
+                            i = j
+                            break
             else:
                 for j, m in enumerate(q):
-                    if m.tag == tag and m.comm == comm:
+                    if m.src == src and m.comm == comm:
                         i = j
                         break
-        else:
-            for j, m in enumerate(q):
-                if m.src == src and m.comm == comm:
-                    i = j
-                    break
         if i < 0:
             return None, len(q)
         msg = q[i]
         indexed = i < len(q) - self._lazy
+        self.note_del(i)
         del q[i]
         if not indexed:
             self._lazy -= 1             # was still in the lazy suffix
@@ -552,6 +699,8 @@ class MatchEngine:
                         if not dq:
                             del uenv_tc[src]
                         i = uq.index(msg)
+                        if i < umq._cvalid:
+                            umq.note_del(i)
                         del uq[i]
                         depth = i + 1
                     else:
@@ -841,8 +990,12 @@ class MatchEngine:
         hitv = missv = expv = unexv = None
         # consecutive ops usually share (tag, comm) — cache the last
         # resolved inner bin dicts (stable objects: emptied in place)
-        utc = stc = None
+        utag = ucomm = stag = scomm = None
         uper = sper = None
+        anys = ANY_SOURCE
+        anyt = ANY_TAG
+        tevery = TIMING_EVERY
+        pcn = _pcn
         ulen = len(uq)                  # queue lengths mirrored in
         plen = prq._len                 # locals, written back once
         it = iter(ops)
@@ -852,13 +1005,14 @@ class MatchEngine:
             if is_post:
                 sns = -1
                 if tsample:
-                    if src != ANY_SOURCE and tag != ANY_TAG:
+                    if src != anys and tag != anyt:
                         if umq._lazy:
                             umq._flush_index()
-                            utc = None  # flush may create env bins
-                        if (tag, comm) != utc:
-                            utc = (tag, comm)
-                            uper = uenv.get(utc)
+                            utag = None  # flush may create env bins
+                        if tag != utag or comm != ucomm:
+                            utag = tag
+                            ucomm = comm
+                            uper = uenv.get((tag, comm))
                         per = uper
                         dq = per.get(src) if per else None
                         if dq:
@@ -866,6 +1020,8 @@ class MatchEngine:
                             if not dq:
                                 del per[src]
                             i = uq.index(msg)
+                            if i < umq._cvalid:
+                                umq.note_del(i)
                             del uq[i]
                             depth = i + 1
                         else:
@@ -873,11 +1029,11 @@ class MatchEngine:
                     else:
                         msg, depth = umq.match_env(src, tag, comm)
                 else:
-                    tsample = TIMING_EVERY
-                    t0 = _pcn()
+                    tsample = tevery
+                    t0 = pcn()
                     msg, depth = umq.match_env(src, tag, comm)
-                    sns = (_pcn() - t0) * TIMING_EVERY
-                    utc = None      # match_env may have flushed the
+                    sns = (pcn() - t0) * tevery
+                    utag = None     # match_env may have flushed the
                     #                 lazy index, creating env bins
                 if msg is not None:
                     if sns >= 0:
@@ -898,13 +1054,14 @@ class MatchEngine:
                     recv.comm = comm
                     recv.seq = sq - 1
                     recv.message = None
-                    if src != ANY_SOURCE and tag != ANY_TAG:
-                        if (tag, comm) != stc:
-                            stc = (tag, comm)
-                            sper = spec.get(stc)
+                    if src != anys and tag != anyt:
+                        if tag != stag or comm != scomm:
+                            stag = tag
+                            scomm = comm
+                            sper = spec.get((tag, comm))
                         per = sper
                         if per is None:
-                            per = sper = spec[stc] = {}
+                            per = sper = spec[(tag, comm)] = {}
                         bq = per.get(src)
                         if bq is None:
                             bq = per[src] = deque()
@@ -912,7 +1069,7 @@ class MatchEngine:
                     else:
                         prq.post(recv)
                         prq._len -= 1   # the mirror owns the count
-                        stc = None      # generic post may touch any bin
+                        stag = None     # generic post may touch any bin
                     if sns >= 0:
                         buf += (pid, "match.umq.length", ulen, True,
                                 pid, "match.umq.traversal_depth", depth,
@@ -933,10 +1090,10 @@ class MatchEngine:
             msg.nbytes = nb
             msg.seq = sq - 1
             if not tsample:
-                tsample = TIMING_EVERY
-                t0 = _pcn()
+                tsample = tevery
+                t0 = pcn()
                 recv, depth = prq.match(msg)
-                sns = (_pcn() - t0) * TIMING_EVERY
+                sns = (pcn() - t0) * tevery
                 if recv is not None:
                     prq._len += 1       # the mirror owns the count
                     plen -= 1
@@ -955,9 +1112,10 @@ class MatchEngine:
             depth = 0
             best = best_bins = best_key = None
             if spec:
-                if (tag, comm) != stc:
-                    stc = (tag, comm)
-                    sper = spec.get(stc)
+                if tag != stag or comm != scomm:
+                    stag = tag
+                    scomm = comm
+                    sper = spec.get((tag, comm))
                 per = sper
                 if per:
                     q = per.get(src)
@@ -1060,6 +1218,8 @@ class MatchEngine:
                         if not dq:
                             del per[src]
                         i = uq.index(msg)
+                        if i < umq._cvalid:
+                            umq.note_del(i)
                         del uq[i]
                         depth = i + 1
                     else:
@@ -1273,6 +1433,11 @@ class Fabric:
         self._depth = 0                 # collective/fused-span nesting
         self._fuse: Optional[Dict[int, List]] = None
         self._fusecm = _FusedSpan(self)
+        # the unexpected/wildcard tick mix repeats with this period, so
+        # `tick % period` captures everything an exchange plan's
+        # lateness and wildcard substitution depend on (see _PLAN_CACHE)
+        self._period = math.lcm(unexpected_every or 1,
+                                wildcard_every or 1)
         # sanctioned fault-injection seam (repro.faults): a callable
         # (pairs, arrivals, tag, nbytes, comm) -> arrivals applied to
         # every exchange's arrival list *after* deliver validation — the
@@ -1393,6 +1558,89 @@ class Fabric:
             arr = filt(pairs, arr, tag, nbytes, comm)
         self._exchange(pairs, arr, tag, nbytes, comm)
 
+    def _build_groups(self, pairs, arr, k: int):
+        """Per-destination ``(early posts, arrivals, late posts)`` src
+        groups for one phase starting at tick ``k`` — the grouping both
+        untraced dispatch paths (and the plan cache) are defined over.
+        With numpy present, phases of >= 64 pairs are grouped in one
+        batched pass (tick arithmetic, wildcard substitution and the
+        destination sort all vectorized); the pure-python loop is the
+        numpy-absent fallback and produces identical groups. Groups are
+        ordered by destination rank — engines are independent state
+        machines, so cross-engine dispatch order is free."""
+        ue = self.unexpected_every
+        we = self.wildcard_every
+        if _np is not None and len(pairs) >= 64:
+            a = _np.array(pairs, dtype=_np.int64)
+            srcs, dsts = a[:, 0], a[:, 1]
+            t = _np.arange(k + 1, k + len(pairs) + 1, dtype=_np.int64)
+            if we:
+                srcs = _np.where(t % we == 0, ANY_SOURCE, srcs)
+            if ue:
+                late = t % ue == 0
+                early = ~late
+                post_g = _group_np(dsts[early], srcs[early])
+                late_g = _group_np(dsts[late], srcs[late])
+            else:
+                post_g = _group_np(dsts, srcs)
+                late_g = ()
+            aa = a if arr is pairs else _np.array(arr, dtype=_np.int64)
+            return post_g, _group_np(aa[:, 1], aa[:, 0]), late_g
+        post_d: Dict[int, List[int]] = {}
+        late_d: Dict[int, List[int]] = {}
+        for src, dst in pairs:
+            k += 1
+            rsrc = ANY_SOURCE if we and k % we == 0 else src
+            g = late_d if ue and k % ue == 0 else post_d
+            grp = g.get(dst)
+            if grp is None:
+                grp = g[dst] = []
+            grp.append(rsrc)
+        arr_d: Dict[int, List[int]] = {}
+        for src, dst in arr:
+            grp = arr_d.get(dst)
+            if grp is None:
+                grp = arr_d[dst] = []
+            grp.append(src)
+        return (tuple(sorted(post_d.items())),
+                tuple(sorted(arr_d.items())),
+                tuple(sorted(late_d.items())))
+
+    @staticmethod
+    def _store_plan(key, plan):
+        if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+            _PLAN_CACHE.clear()
+        _PLAN_CACHE[key] = plan
+        return plan
+
+    def _fused_plan(self, key, pairs, arr, tag: int, nbytes: int,
+                    comm: int, k: int):
+        """Build + cache one phase's fused plan: per destination, the
+        ready-to-extend flat quint segment (early posts, then arrivals,
+        then late posts — the per-engine order the unfused path
+        produces). The plan pins ``pairs``/``arr`` so the id-based
+        cache key stays valid."""
+        post_g, arr_g, late_g = self._build_groups(pairs, arr, k)
+        segs: Dict[int, List] = {}
+        for dst, srcs in post_g:
+            seg = segs[dst] = []
+            for s in srcs:
+                seg += (True, s, tag, 0, comm)
+        for dst, srcs in arr_g:
+            seg = segs.get(dst)
+            if seg is None:
+                seg = segs[dst] = []
+            for s in srcs:
+                seg += (False, s, tag, nbytes, comm)
+        for dst, srcs in late_g:
+            seg = segs.get(dst)
+            if seg is None:
+                seg = segs[dst] = []
+            for s in srcs:
+                seg += (True, s, tag, 0, comm)
+        return self._store_plan(key, (
+            pairs, arr, tuple((d, tuple(s)) for d, s in segs.items())))
+
     def _exchange(self, pairs, arr, tag: int, nbytes: int,
                   comm: int) -> None:
         """Dispatch one validated/filtered phase: ``pairs`` drives the
@@ -1411,12 +1659,33 @@ class Fabric:
             with self._fusecm:
                 self._exchange(pairs, arr, tag, nbytes, comm)
             return
+        # plans are keyed by tuple identity: the memoized pattern
+        # generators (repro.comm.patterns) intern every recurring pair
+        # list, so repeated phases hit; ad-hoc lists (fault-filtered
+        # arrivals, hand-built pairs) fall through to the loop paths
+        cacheable = (type(pairs) is tuple
+                     and (arr is pairs or type(arr) is tuple))
         fuse = self._fuse
         if fuse is not None:
             # inside a fused span: accumulate flat (is_post, src, tag,
             # nbytes, comm) quints per destination; the span's exit runs
             # each engine's stream in one batch. Stage order per engine
             # (early posts, arrivals, late posts) is preserved.
+            if cacheable:
+                key = ("f", id(pairs), id(arr), ue, we,
+                       k % self._period, tag, nbytes, comm)
+                plan = _PLAN_CACHE.get(key)
+                if plan is None:
+                    plan = self._fused_plan(key, pairs, arr, tag,
+                                            nbytes, comm, k)
+                for dst, seg in plan[2]:
+                    grp = fuse.get(dst)
+                    if grp is None:
+                        fuse[dst] = list(seg)
+                    else:
+                        grp += seg
+                self._tick = k + len(pairs)
+                return
             late_f: List[Tuple[int, int]] = []
             for src, dst in pairs:
                 k += 1
@@ -1441,6 +1710,35 @@ class Fabric:
                 grp += (True, rsrc, tag, 0, comm)
             return
         if self.trace is None:
+            if cacheable:
+                key = ("d", id(pairs), id(arr), ue, we,
+                       k % self._period)
+                plan = _PLAN_CACHE.get(key)
+                if plan is None:
+                    plan = self._store_plan(key, (
+                        pairs, arr, *self._build_groups(pairs, arr, k)))
+                _, _, post_g, arr_g, late_g = plan
+                self._tick = k + len(pairs)
+                engine = self.engine
+                for dst, srcs in post_g:
+                    eng = engine(dst)
+                    if len(srcs) > 1:
+                        eng.post_recv_batch(srcs, tag, comm)
+                    else:
+                        eng.post_recv(srcs[0], tag, comm)
+                for dst, srcs in arr_g:
+                    eng = engine(dst)
+                    if len(srcs) > 1:
+                        eng.arrive_batch(srcs, tag, comm, nbytes)
+                    else:
+                        eng.arrive(srcs[0], tag, comm, nbytes)
+                for dst, srcs in late_g:
+                    eng = engine(dst)
+                    if len(srcs) > 1:
+                        eng.post_recv_batch(srcs, tag, comm)
+                    else:
+                        eng.post_recv(srcs[0], tag, comm)
+                return
             post_g: Dict[int, List[int]] = {}
             late_g: Dict[int, List[int]] = {}
             for src, dst in pairs:

@@ -606,23 +606,33 @@ class Replayer:
         def flush_ops() -> None:
             for rank in sorted(pending):
                 eng = engine(rank)
-                for kind_, a, comm_, nb_, items in pending[rank]:
+                segs_r = pending[rank]
+                quints: Optional[List] = None
+                for kind_, a, comm_, nb_, items in segs_r:
+                    if kind_ <= 1 and len(items) == 1:
+                        # singleton segment (envelope changed every op —
+                        # alternating-tag phases): fold runs of these
+                        # into one run_ops quint stream instead of a
+                        # per-op API call per segment
+                        if quints is None:
+                            quints = []
+                        quints += (kind_, items[0], a, nb_, comm_)
+                        continue
+                    if quints is not None:
+                        eng.run_ops(quints)
+                        quints = None
                     if kind_ == 1:
-                        if len(items) > 1:
-                            eng.post_recv_batch(items, a, comm_)
-                        else:
-                            eng.post_recv(items[0], a, comm_)
+                        eng.post_recv_batch(items, a, comm_)
                     elif kind_ == 0:
-                        if len(items) > 1:
-                            eng.arrive_batch(items, a, comm_, nb_)
-                        else:
-                            eng.arrive(items[0], a, comm_, nb_)
+                        eng.arrive_batch(items, a, comm_, nb_)
                     elif kind_ == 2:
                         eng.run_ops(items)
                     elif kind_ == 3:
                         eng.post_recv_tags(a, items, comm_)
                     else:
                         eng.arrive_tags(a, items, comm_, nb_)
+                if quints is not None:
+                    eng.run_ops(quints)
             pending.clear()
 
         def flush_phase() -> None:

@@ -38,9 +38,9 @@ Params = Dict[str, int]
 )
 def halo3d(fab: Fabric, rng: random.Random, p: Params) -> None:
     n = p["ranks"]
-    for step in range(p["steps"]):
-        fab.set_label(f"halo_step({step})")
-        with fab.fused():           # one batched dispatch per rank/step
+    with fab.fused():               # one batched dispatch per rank/drive
+        for step in range(p["steps"]):
+            fab.set_label(f"halo_step({step})")
             for ax, direction, perm, tag in patterns.halo_shifts(n):
                 fab.ppermute(perm, nbytes=p["face_bytes"], tag=tag)
     fab.set_label(None)
@@ -81,10 +81,10 @@ def ring_allreduce(fab: Fabric, rng: random.Random, p: Params) -> None:
 def alltoall_transpose(fab: Fabric, rng: random.Random,
                        p: Params) -> None:
     pairs = patterns.transpose_pairs(p["ranks"])
+    deliver = patterns.reversed_pairs(pairs)
     for r in range(p["rounds"]):
         fab.phase(f"transpose({r})", n=p["ranks"])
-        fab.exchange(pairs, tag=0, nbytes=p["nbytes"],
-                     deliver=list(reversed(pairs)))
+        fab.exchange(pairs, tag=0, nbytes=p["nbytes"], deliver=deliver)
 
 
 @scenario(
@@ -99,11 +99,12 @@ def alltoall_transpose(fab: Fabric, rng: random.Random,
     fault_expect=("drop", "duplicate", "delay", "rank_join"),
 )
 def sparse_neighbors(fab: Fabric, rng: random.Random, p: Params) -> None:
-    for r in range(p["rounds"]):
-        pairs = patterns.random_neighbor_pairs(p["ranks"], p["degree"],
-                                               rng)
-        fab.phase(f"sparse({r})", n=p["ranks"])
-        fab.exchange(pairs, tag=r, nbytes=p["nbytes"])
+    rounds = patterns.random_neighbor_rounds(p["ranks"], p["degree"],
+                                             p["rounds"], rng)
+    with fab.fused():               # one batched dispatch per rank/drive
+        for r, pairs in enumerate(rounds):
+            fab.phase(f"sparse({r})", n=p["ranks"])
+            fab.exchange(pairs, tag=r, nbytes=p["nbytes"])
 
 
 @scenario(
@@ -218,26 +219,27 @@ def wildcard_pipeline(fab: Fabric, rng: random.Random, p: Params) -> None:
 )
 def amg_coarsen(fab: Fabric, rng: random.Random, p: Params) -> None:
     n = p["ranks"]
-    for c in range(p["cycles"]):
-        active, level = n, 0
-        while active >= 2:
-            fab.phase(f"amg_halo(c={c},l={level})", n=active)
-            for s in range(p["steps"]):
-                tag = (level << 4) | s
-                fab.exchange(patterns.ring_perm(active), tag=tag,
-                             nbytes=p["halo_bytes"] >> level)
-                fab.exchange(patterns.ring_perm(active, -1), tag=tag,
-                             nbytes=p["halo_bytes"] >> level)
-            active >>= 1
-            level += 1
-        # coarse solve: binomial fold to rank 0, broadcast back down
-        fab.phase(f"amg_tree(c={c})", n=n)
-        levels = patterns.tree_pairs(n)
-        for i, lv in enumerate(levels):
-            fab.exchange(lv, tag=900 + i, nbytes=p["halo_bytes"])
-        for i, lv in enumerate(reversed(levels)):
-            fab.exchange([(d, s) for s, d in lv], tag=950 + i,
-                         nbytes=p["halo_bytes"])
+    with fab.fused():               # one batched dispatch per rank/drive
+        for c in range(p["cycles"]):
+            active, level = n, 0
+            while active >= 2:
+                fab.phase(f"amg_halo(c={c},l={level})", n=active)
+                for s in range(p["steps"]):
+                    tag = (level << 4) | s
+                    fab.exchange(patterns.ring_perm(active), tag=tag,
+                                 nbytes=p["halo_bytes"] >> level)
+                    fab.exchange(patterns.ring_perm(active, -1), tag=tag,
+                                 nbytes=p["halo_bytes"] >> level)
+                active >>= 1
+                level += 1
+            # coarse solve: binomial fold to rank 0, broadcast back down
+            fab.phase(f"amg_tree(c={c})", n=n)
+            levels = patterns.tree_pairs(n)
+            for i, lv in enumerate(levels):
+                fab.exchange(lv, tag=900 + i, nbytes=p["halo_bytes"])
+            for i, lv in enumerate(reversed(levels)):
+                fab.exchange(patterns.swap_pairs(lv), tag=950 + i,
+                             nbytes=p["halo_bytes"])
 
 
 @scenario(
@@ -254,29 +256,13 @@ def amg_coarsen(fab: Fabric, rng: random.Random, p: Params) -> None:
 )
 def kripke_sweep(fab: Fabric, rng: random.Random, p: Params) -> None:
     gx, gy = p["gx"], p["gy"]
-
-    def rid(x: int, y: int) -> int:
-        return x * gy + y
-
-    for s in range(p["sweeps"]):
-        cx, cy = ((0, 0), (1, 0), (1, 1), (0, 1))[s % 4]
-        fab.phase(f"sweep({s})", corner=s % 4)
-        for d in range(gx + gy - 1):
-            pairs = []
-            for x in range(gx):
-                y = d - x
-                if not 0 <= y < gy:
-                    continue
-                ax = gx - 1 - x if cx else x
-                ay = gy - 1 - y if cy else y
-                nx = ax + (-1 if cx else 1)
-                ny = ay + (-1 if cy else 1)
-                if 0 <= nx < gx:
-                    pairs.append((rid(ax, ay), rid(nx, ay)))
-                if 0 <= ny < gy:
-                    pairs.append((rid(ax, ay), rid(ax, ny)))
-            if pairs:
-                fab.exchange(pairs, tag=d, nbytes=p["nbytes"])
+    with fab.fused():               # one batched dispatch per rank/drive
+        for s in range(p["sweeps"]):
+            fab.phase(f"sweep({s})", corner=s % 4)
+            diagonals = patterns.kripke_diagonals(gx, gy, s % 4)
+            for d, pairs in enumerate(diagonals):
+                if pairs:
+                    fab.exchange(pairs, tag=d, nbytes=p["nbytes"])
 
 
 @scenario(
@@ -294,20 +280,12 @@ def kripke_sweep(fab: Fabric, rng: random.Random, p: Params) -> None:
 )
 def power_law_burst(fab: Fabric, rng: random.Random, p: Params) -> None:
     n = p["ranks"]
-    for r in range(p["rounds"]):
-        hot = r % n
-        pairs = []
-        for src in range(n):
-            if src == hot:
-                continue
-            # heavy-tailed per-sender batch, capped so a healthy burst
-            # stays well under the umq_flood threshold
-            m = min(1 + int(rng.paretovariate(1.2)), 4)
-            pairs.extend([(src, hot)] * m)
-        nb = min(p["base_bytes"] * (1 << int(rng.paretovariate(1.0))),
-                 1 << 20)
-        fab.phase(f"burst({r})", hot=hot, msgs=len(pairs))
-        fab.exchange(pairs, tag=r, nbytes=nb)
+    rounds = patterns.power_law_rounds(n, p["rounds"], p["base_bytes"],
+                                       rng)
+    with fab.fused():               # one batched dispatch per rank/drive
+        for r, (pairs, nb) in enumerate(rounds):
+            fab.phase(f"burst({r})", hot=r % n, msgs=len(pairs))
+            fab.exchange(pairs, tag=r, nbytes=nb)
 
 
 @scenario(
@@ -328,23 +306,22 @@ def power_law_burst(fab: Fabric, rng: random.Random, p: Params) -> None:
 )
 def request_reply(fab: Fabric, rng: random.Random, p: Params) -> None:
     nc, ns, q = p["clients"], p["servers"], p["quota"]
-    for r in range(p["rounds"]):
-        shard = nc + r % ns           # this round's hot shard server
-        fab.phase(f"rpc({r})", shard=shard)
-        for w in range(q):            # one request wave per quota slot
-            tag = 2 * (r * q + w)
-            # request fan-in: every client's wave-w request lands at
-            # the hot shard (ranks nc..nc+ns-1 rotate through the role)
-            req = [(c, shard) for c in range(nc)]
-            fab.exchange(req, tag=tag, nbytes=64)
-            # replies fan back; the straggling client's reply lands
-            # after all others (a legal delivery-order permutation)
-            rep = [(d, s) for s, d in req]
-            laggard = (r + w) % nc
-            deliver = ([pr for pr in rep if pr[1] != laggard]
-                       + [pr for pr in rep if pr[1] == laggard])
-            fab.exchange(rep, tag=tag + 1, nbytes=p["reply_bytes"],
-                         deliver=deliver)
+    with fab.fused():               # one batched dispatch per rank/drive
+        for r in range(p["rounds"]):
+            shard = nc + r % ns       # this round's hot shard server
+            fab.phase(f"rpc({r})", shard=shard)
+            for w in range(q):        # one request wave per quota slot
+                tag = 2 * (r * q + w)
+                # request fan-in: every client's wave-w request lands at
+                # the hot shard (ranks nc..nc+ns-1 rotate the role)
+                req = patterns.fan_in_pairs(nc, shard)
+                fab.exchange(req, tag=tag, nbytes=64)
+                # replies fan back; the straggling client's reply lands
+                # after all others (a legal delivery-order permutation)
+                rep = patterns.swap_pairs(req)
+                laggard = (r + w) % nc
+                fab.exchange(rep, tag=tag + 1, nbytes=p["reply_bytes"],
+                             deliver=patterns.laggard_last(rep, laggard))
 
 
 @scenario(
@@ -369,19 +346,18 @@ def elastic_ranks(fab: Fabric, rng: random.Random, p: Params) -> None:
                     for m in range(min(prefer_model, n), 0, -1)
                     if n % m == 0]
     n = p["ranks"]
-    for e in range(p["epochs"]):
-        # world size churns: full, minus one, minus two, full, ...
-        w = n - (e % 3)
-        data, model = viable_meshes(w, prefer_model=4)[0]
-        fab.phase(f"epoch({e})", world=w, data=data, model=model)
-        if model > 1:
-            # model-parallel ring within each surviving mesh group
-            for g in range(data):
-                base = g * model
-                ring = [(base + i, base + (i + 1) % model)
-                        for i in range(model)]
-                fab.exchange(ring, tag=e << 4, nbytes=p["nbytes"])
-        # post-churn re-sync: butterfly allreduce across the world
-        for s, stage in enumerate(patterns.butterfly_pairs(w)):
-            fab.exchange(stage, tag=(e << 4) | (s + 1),
-                         nbytes=p["nbytes"] // 2)
+    with fab.fused():               # one batched dispatch per rank/drive
+        for e in range(p["epochs"]):
+            # world size churns: full, minus one, minus two, full, ...
+            w = n - (e % 3)
+            data, model = viable_meshes(w, prefer_model=4)[0]
+            fab.phase(f"epoch({e})", world=w, data=data, model=model)
+            if model > 1:
+                # model-parallel ring within each surviving mesh group
+                for g in range(data):
+                    fab.exchange(patterns.shifted_ring(g * model, model),
+                                 tag=e << 4, nbytes=p["nbytes"])
+            # post-churn re-sync: butterfly allreduce across the world
+            for s, stage in enumerate(patterns.butterfly_pairs(w)):
+                fab.exchange(stage, tag=(e << 4) | (s + 1),
+                             nbytes=p["nbytes"] // 2)

@@ -203,6 +203,137 @@ def test_indexed_umq_depth_contract_matches_linear_scan():
         assert len(u) == len(ref.q)
 
 
+def _drive_umq_against_oracle(rng, steps=2500):
+    """Random add/match stream over all three wildcard shapes plus
+    specific probes; assert IndexedUMQ == linear-scan oracle on every
+    outcome, depth and the queue's arrival order (the order the numpy
+    column mirror must track through deletions)."""
+    u, ref = IndexedUMQ(), _RefUMQ()
+    seq = 0
+    for _ in range(steps):
+        if ref.q and rng.random() < 0.45:
+            shape = rng.randrange(4)
+            src = (ANY_SOURCE if shape in (0, 2)
+                   else rng.randrange(5))
+            tag = ANY_TAG if shape in (1, 2) else rng.randrange(7)
+            recv = PostedRecv(src, tag, rng.randrange(2), seq)
+            got, gd = u.match(recv)
+            want, wd = ref.match(recv)
+            assert gd == wd, (seq, src, tag)
+            assert (got is None) == (want is None), (seq, src, tag)
+            if got is not None:
+                assert got.seq == want.seq, (seq, src, tag)
+        else:
+            m1 = Message(rng.randrange(5), rng.randrange(7),
+                         rng.randrange(2), 0, seq)
+            u.add(m1)
+            ref.add(Message(m1.src, m1.tag, m1.comm, 0, seq))
+        seq += 1
+        assert len(u) == len(ref.q)
+        assert [m.seq for m in u._q] == [m.seq for m in ref.q]
+
+
+@pytest.mark.parametrize("vec_min,prefix", [(1, 0), (1, 3), (4, 16),
+                                            (48, 16)])
+def test_vectorized_wildcard_filter_matches_linear_scan(
+        monkeypatch, vec_min, prefix):
+    """Property check for the numpy envelope-column filter: forcing the
+    vector path down to every queue length (vec_min=1) and through both
+    the pure-mask and hybrid prefix-scan shapes must reproduce the
+    linear-scan oracle exactly — outcomes, depths, and arrival order."""
+    monkeypatch.setattr(IndexedUMQ, "_VEC_MIN", vec_min)
+    monkeypatch.setattr(IndexedUMQ, "_SCAN_PREFIX", prefix)
+    _drive_umq_against_oracle(random.Random(11))
+
+
+def test_numpy_absent_wildcard_fallback_matches_linear_scan(
+        monkeypatch):
+    """With numpy gone the wildcard path must fall back to the python
+    scan loops and stay oracle-identical (vec_min forced low so the
+    vector branch would otherwise trigger constantly)."""
+    from repro.match import engine as engine_mod
+    monkeypatch.setattr(engine_mod, "_np", None)
+    monkeypatch.setattr(IndexedUMQ, "_VEC_MIN", 1)
+    monkeypatch.setattr(IndexedUMQ, "_SCAN_PREFIX", 0)
+    _drive_umq_against_oracle(random.Random(12))
+
+
+@pytest.mark.parametrize("mode", ["fifo", "linear", "leaky_umq"])
+def test_scenarios_stat_identical_under_forced_vector_path(
+        monkeypatch, mode):
+    """Mode matrix over real scenario streams: forcing the envelope
+    filter onto the numpy path for every wildcard probe must leave the
+    deterministic statistics and queue state of every scenario x mode
+    cell unchanged."""
+    from repro.workloads.base import all_scenarios
+    from repro.workloads.bench import build_fabric
+    baseline = {}
+    for sc in all_scenarios():
+        reg = CounterRegistry()
+        fab = build_fabric(sc, mode, registry=reg)
+        sc.drive(fab, random.Random(0), sc.params("smoke"))
+        baseline[sc.name] = (det_stats(reg), fab.outstanding())
+    monkeypatch.setattr(IndexedUMQ, "_VEC_MIN", 1)
+    monkeypatch.setattr(IndexedUMQ, "_SCAN_PREFIX", 0)
+    for sc in all_scenarios():
+        reg = CounterRegistry()
+        fab = build_fabric(sc, mode, registry=reg)
+        sc.drive(fab, random.Random(0), sc.params("smoke"))
+        assert (det_stats(reg), fab.outstanding()) == \
+            baseline[sc.name], (sc.name, mode)
+
+
+@pytest.mark.parametrize("mode", ["fifo", "linear", "leaky_umq"])
+def test_scenarios_stat_identical_without_numpy(monkeypatch, mode):
+    """Numpy-absent engine fallback over real scenario streams: python
+    wildcard scans and python phase grouping must be stat-identical to
+    the vectorized paths for every scenario x mode cell."""
+    from repro.match import engine as engine_mod
+    from repro.workloads.base import all_scenarios
+    from repro.workloads.bench import build_fabric
+    baseline = {}
+    for sc in all_scenarios():
+        reg = CounterRegistry()
+        fab = build_fabric(sc, mode, registry=reg)
+        sc.drive(fab, random.Random(0), sc.params("smoke"))
+        baseline[sc.name] = (det_stats(reg), fab.outstanding())
+    monkeypatch.setattr(engine_mod, "_np", None)
+    # fresh plan cache: cached plans were grouped with numpy present,
+    # and reusing them would let the fallback grouping go untested
+    monkeypatch.setattr(engine_mod, "_PLAN_CACHE", {})
+    for sc in all_scenarios():
+        reg = CounterRegistry()
+        fab = build_fabric(sc, mode, registry=reg)
+        sc.drive(fab, random.Random(0), sc.params("smoke"))
+        assert (det_stats(reg), fab.outstanding()) == \
+            baseline[sc.name], (sc.name, mode)
+
+
+@pytest.mark.parametrize("ue,we", [(0, 0), (3, 0), (0, 4), (3, 4)])
+def test_build_groups_numpy_equals_python(monkeypatch, ue, we):
+    """The batched numpy phase grouping and the pure-python fallback
+    must produce identical (early posts, arrivals, late posts) groups
+    for every unexpected/wildcard cadence."""
+    from repro.match import engine as engine_mod
+    rng = random.Random(5)
+    pairs = tuple((rng.randrange(16), rng.randrange(16))
+                  for _ in range(100))
+    arr = tuple(reversed(pairs))
+    fab = Fabric(mode="binned", registry=CounterRegistry(),
+                 unexpected_every=ue, wildcard_every=we)
+    for k in (0, 7):
+        vec = fab._build_groups(pairs, arr, k)
+        monkeypatch.setattr(engine_mod, "_np", None)
+        plain = fab._build_groups(pairs, arr, k)
+        monkeypatch.undo()
+        assert [(d, list(s)) for d, s in vec[0]] == \
+            [(d, list(s)) for d, s in plain[0]], (ue, we, k)
+        assert [(d, list(s)) for d, s in vec[1]] == \
+            [(d, list(s)) for d, s in plain[1]], (ue, we, k)
+        assert [(d, list(s)) for d, s in vec[2]] == \
+            [(d, list(s)) for d, s in plain[2]], (ue, we, k)
+
+
 def test_indexed_umq_lazy_index_flushes_on_specific_probe():
     u = IndexedUMQ()
     for seq in range(8):
