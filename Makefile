@@ -2,6 +2,7 @@ PYTHON ?= python
 
 .PHONY: verify test bench-match bench-replay replay-smoke \
 	bench-scenarios scenario-smoke faults-smoke bench-faults \
+	whatif-smoke bench-whatif recovery-smoke bench-recovery \
 	scenario-baseline bench-hotpath \
 	hotpath-smoke hotpath-baseline profile-hotpath \
 	bench-trajectory bench-replay-hotpath \
@@ -31,19 +32,36 @@ bench-scenarios:
 scenario-smoke:
 	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke
 
-# fault-injection axis: every scenario x fault kind under the canonical
-# plans, with detector-coverage + fault-free-cleanliness gates
+# fault-injection axis: every scenario x fault cell (single kinds +
+# canonical composite plans) under the canonical plans, with
+# detector-coverage + fault-free-cleanliness gates
 faults-smoke:
-	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --faults
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --faults composite
 
 bench-faults:
-	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --faults
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --faults composite
+
+# what-if fault replay fidelity: predict each committed faulted corpus
+# cell from its healthy trace alone (finding kinds exact 5/5, counter
+# signatures within declared per-kind tolerance)
+whatif-smoke bench-whatif:
+	PYTHONPATH=src $(PYTHON) benchmarks/whatif_bench.py
+
+# self-healing gate: drop/duplicate cells converge under the default
+# RecoveryPolicy (zero net orphans/residue, evidence detectors fire,
+# the healed fault detectors don't), fault-free runs with the policy
+# stay clean, and the idle recovery seams cost < 3% (paired-median)
+recovery-smoke:
+	PYTHONPATH=src $(PYTHON) benchmarks/recovery_bench.py --smoke
+
+bench-recovery:
+	PYTHONPATH=src $(PYTHON) benchmarks/recovery_bench.py
 
 # after an intentional behavior change: regenerate both committed
-# baselines (fault cells included)
+# baselines (fault + composite cells included)
 scenario-baseline:
-	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --faults --write-baseline
-	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --faults --write-baseline
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --faults composite --write-baseline
+	PYTHONPATH=src $(PYTHON) benchmarks/scenario_sweep.py --smoke --faults composite --write-baseline
 
 # hot-path throughput gate: >= 3.1x the frozen pre-overhaul engine,
 # measured in-run (machine-load-proof ratio)

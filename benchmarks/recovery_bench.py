@@ -1,0 +1,261 @@
+"""Self-healing recovery gate: convergence, cleanliness, overhead.
+
+    PYTHONPATH=src python benchmarks/recovery_bench.py [--smoke]
+                                                       [--min-ratio X]
+
+Three acceptance conditions over :mod:`repro.faults.recovery` applied
+through the fault injector, written to ``results/bench/recovery.json``:
+
+1. **convergence** — every scenario that declares the ``drop`` fault
+   detectable (``fault_expect``) is driven under the canonical drop
+   plan with the default :class:`~repro.faults.RecoveryPolicy`: the
+   run must end with *zero net orphan posts on every lane* (each
+   dropped delivery was really retransmitted), ``recovered_drop`` must
+   fire, and ``orphan_posts`` must not. The ``duplicate`` cells
+   converge the same way: zero net unexpected residue,
+   ``suppressed_duplicate`` fires, ``duplicate_match`` does not. A
+   policy-free control run per cell confirms the fault actually bites
+   (its detector fires without recovery).
+2. **cleanliness** — the same scenarios driven fault-free with the
+   policy attached must stay free of every fault-class and
+   recovery-evidence finding: a policy with nothing to heal is
+   invisible.
+3. **overhead** — the recovery-off hot path must stay free: per
+   scenario, interleaved pairs of the faulted drive with no policy vs
+   with an *idle* policy (rules only for kinds the plan never
+   injects, so the recovery seams are wired but never taken). The
+   paired-median throughput ratio idle/none must be >=
+   ``--min-ratio`` (default 0.97). The active-policy ratio (healing
+   actually running) is recorded as advisory context, not gated.
+
+Exit status is non-zero on any failed condition
+(``make recovery-smoke``; ``scripts/verify.sh`` runs the smoke size).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import argparse
+import gc
+import random
+import statistics
+import time
+from typing import Dict, List, Tuple
+
+MIN_RATIO = 0.97
+REPEATS = 5
+
+# (fault kind, recovery-evidence finding, fault finding healed away,
+# lane imbalance judged) — the convergent cells gate #1 runs
+CONVERGENT = (
+    ("drop", "recovered_drop", "orphan_posts", "orphans"),
+    ("duplicate", "suppressed_duplicate", "duplicate_match", "residue"),
+)
+
+
+def net_imbalances(lanes: Dict[int, Dict]) -> Dict[int, Tuple[float,
+                                                              float]]:
+    """Per-lane (net orphan posts, net unexpected residue) — the same
+    end-of-run algebra the orphan/duplicate detectors threshold."""
+    from repro.core.analyses import _orphan_residue
+    out = {}
+    for pid, per in sorted(lanes.items()):
+        orphans, residue = _orphan_residue(per)
+        out[pid] = (orphans - max(residue, 0.0),
+                    residue - max(orphans, 0.0))
+    return out
+
+
+def drive_lanes(sc, size: str, seed: int, fault, recovery
+                ) -> Dict[int, Dict]:
+    """One scenario drive; returns the registry's per-pid lane stats."""
+    from repro.core.counters import CounterRegistry
+    from repro.faults import finish_faults
+    from repro.workloads import build_fabric, plan_for
+    reg = CounterRegistry()
+    if isinstance(fault, str):
+        fault = plan_for(fault, seed=seed)
+    fab = build_fabric(sc, "fifo", registry=reg, fault=fault,
+                       recovery=recovery)
+    sc.drive(fab, random.Random(seed), sc.params(size))
+    finish_faults(fab)
+    return reg.drain_lanes()
+
+
+def measure_overhead(sc, size: str, seed: int, repeats: int) -> Dict:
+    """Paired none/idle/active throughput for one drop-faulted
+    scenario (same interleaved harness as the telemetry gate)."""
+    from repro.core.counters import CounterRegistry
+    from repro.faults import (RecoveryPolicy, RecoveryRule, build_faulty,
+                              default_plan, default_policy,
+                              finish_faults)
+    plan = default_plan("drop", seed=seed)
+    # wired but never taken: the plan injects only drops, the policy
+    # heals only duplicates
+    idle = RecoveryPolicy(rules=(RecoveryRule(kind="duplicate"),))
+    active = default_policy()
+    p = sc.params(size)
+
+    def timed(recovery) -> int:
+        fab = build_faulty(plan, recovery=recovery, mode="fifo",
+                           registry=CounterRegistry(),
+                           unexpected_every=sc.unexpected_every,
+                           wildcard_every=sc.wildcard_every)
+        t0 = time.perf_counter_ns()
+        sc.drive(fab, random.Random(seed), p)
+        finish_faults(fab)
+        return time.perf_counter_ns() - t0
+
+    timed(None)                                   # warmup, untimed
+    idle_ratios: List[float] = []
+    active_ratios: List[float] = []
+    gc.disable()
+    try:
+        for _ in range(max(repeats, 1)):
+            t_none = timed(None)
+            t_idle = timed(idle)
+            t_active = timed(active)
+            idle_ratios.append(t_none / t_idle)
+            active_ratios.append(t_none / t_active)
+    finally:
+        gc.enable()
+    return {
+        "scenario": sc.name, "pairs": repeats,
+        "idle_ratio": round(statistics.median(idle_ratios), 4),
+        "active_ratio": round(statistics.median(active_ratios), 4),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized scenario parameters")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=REPEATS,
+                    help="interleaved none/idle/active triples per "
+                         "overhead scenario")
+    ap.add_argument("--min-ratio", type=float, default=MIN_RATIO,
+                    help="required median idle/none throughput ratio")
+    args = ap.parse_args()
+    size = "smoke" if args.smoke else "full"
+
+    from benchmarks.common import save_json
+    from repro.faults import default_policy
+    from repro.workloads import (FAULT_FINDING_KINDS,
+                                 RECOVERY_FINDING_KINDS, all_scenarios,
+                                 run_scenario)
+
+    policy = default_policy()
+    failures: List[str] = []
+    cells = []
+    print(f"== recovery convergence (size={size}, seed={args.seed}, "
+          f"default policy) ==")
+    for kind, evidence, healed, lane_kind in CONVERGENT:
+        scs = [sc for sc in all_scenarios() if kind in sc.fault_expect]
+        if not scs:
+            failures.append(f"no scenario declares fault_expect "
+                            f"{kind!r} — convergence gate is vacuous")
+        for sc in scs:
+            control = run_scenario(sc, seed=args.seed, size=size,
+                                   fault=kind)
+            recovered = run_scenario(sc, seed=args.seed, size=size,
+                                     fault=kind, recovery=policy)
+            lanes = drive_lanes(sc, size, args.seed, kind, policy)
+            nets = net_imbalances(lanes)
+            idx = 0 if lane_kind == "orphans" else 1
+            worst = max((n[idx] for n in nets.values()), default=0.0)
+            ok = (healed in control.finding_kinds
+                  and evidence in recovered.finding_kinds
+                  and healed not in recovered.finding_kinds
+                  and worst <= 0)
+            cells.append({
+                "scenario": sc.name, "fault": kind,
+                "control_findings": control.finding_kinds,
+                "recovered_findings": recovered.finding_kinds,
+                "worst_net_" + lane_kind: worst,
+                "converged": ok,
+            })
+            print(f"{sc.name:20s} {kind:10s} control="
+                  f"{control.fault_kinds} recovered="
+                  f"{[k for k in recovered.finding_kinds if k in RECOVERY_FINDING_KINDS]} "
+                  f"net {lane_kind}={worst:g}")
+            if healed not in control.finding_kinds:
+                failures.append(
+                    f"{sc.name}/{kind}: control run without recovery "
+                    f"never flagged {healed!r} — cell exercises nothing")
+            if evidence not in recovered.finding_kinds:
+                failures.append(
+                    f"{sc.name}/{kind}: {evidence!r} did not fire under "
+                    f"the default policy (got "
+                    f"{recovered.finding_kinds})")
+            if healed in recovered.finding_kinds:
+                failures.append(
+                    f"{sc.name}/{kind}: {healed!r} still fires with "
+                    "recovery enabled — healing did not converge")
+            if worst > 0:
+                failures.append(
+                    f"{sc.name}/{kind}: net {lane_kind} {worst:g} > 0 "
+                    "on some lane after recovery")
+
+    print("\n== cleanliness (fault-free drives with the policy "
+          "attached) ==")
+    clean_cells = []
+    for sc in all_scenarios():
+        run = run_scenario(sc, seed=args.seed, size=size,
+                           recovery=policy)
+        noisy = sorted(k for k in run.finding_kinds
+                       if k in FAULT_FINDING_KINDS
+                       or k in RECOVERY_FINDING_KINDS)
+        clean_cells.append({"scenario": sc.name, "noisy": noisy})
+        if noisy:
+            failures.append(
+                f"{sc.name}: fault-free run with the policy attached "
+                f"flagged {noisy}")
+    print(f"{len(clean_cells)} scenario(s) clean"
+          if not any(c['noisy'] for c in clean_cells)
+          else "NOISY: " + str([c for c in clean_cells if c['noisy']]))
+
+    print(f"\n== recovery-off overhead ({args.repeats} interleaved "
+          "triples per scenario) ==")
+    overhead = []
+    drop_scs = [sc for sc in all_scenarios()
+                if "drop" in sc.fault_expect][:3]
+    for sc in drop_scs:
+        cell = measure_overhead(sc, size, args.seed, args.repeats)
+        overhead.append(cell)
+        print(f"{sc.name:20s} idle/none {cell['idle_ratio']:.3f} "
+              f"active/none {cell['active_ratio']:.3f} (advisory)")
+    med = (statistics.median(c["idle_ratio"] for c in overhead)
+           if overhead else 0.0)
+    print(f"median idle/none ratio {med:.3f} (gate: >= "
+          f"{args.min_ratio:g})")
+    if med < args.min_ratio:
+        failures.append(
+            f"recovery-off path throughput is {med:.3f}x the "
+            f"policy-free fabric (gate: >= {args.min_ratio:g}x) — the "
+            "idle recovery seams cost too much")
+
+    payload = {
+        "format": "repro.bench.recovery", "version": 1,
+        "size": size, "seed": args.seed,
+        "convergence": cells, "clean": clean_cells,
+        "overhead": overhead, "median_idle_ratio": med,
+        "min_ratio": args.min_ratio, "failures": failures,
+    }
+    path = save_json("recovery.json", payload)
+    print(f"results saved: {path}")
+    if failures:
+        print("\nFAILED recovery acceptance checks:")
+        for f in failures:
+            print(" - " + f)
+        return 1
+    print("\nall recovery acceptance checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,12 +20,14 @@ one versioned ``results/bench/scenario_sweep.json``, and enforces:
    after an intentional behavior change.
 
 With ``--faults`` the sweep adds the fault axis (``make faults-smoke``;
-the verify gate runs ``--smoke --faults``): each scenario also runs once
-per injected fault kind (``repro.faults.KINDS``) under fifo+incoming,
-and the gate additionally enforces that every scenario's declared
-``fault_expect`` kinds are flagged by their dedicated detector, that
-each fault kind is caught in at least 2 scenarios, and that all
-fault-free cells stay free of fault-class findings.
+the verify gate runs ``--smoke --faults composite``): each scenario also
+runs once per injected fault kind (``repro.faults.KINDS``) under
+fifo+incoming — and with the ``composite`` value additionally once per
+canonical multi-kind plan (``drop+delay``, ``duplicate+reorder``). The
+gate then enforces that every scenario's declared ``fault_expect``
+kinds are flagged by their dedicated detector, that each fault cell is
+caught in at least 2 scenarios, and that all fault-free cells stay free
+of fault-class (and recovery-evidence) findings.
 
 Exit status is non-zero on any failed condition, so this file doubles
 as a regression gate (``make bench-scenarios``; ``scripts/verify.sh``
@@ -67,10 +69,13 @@ def main() -> int:
                          "chosen size)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="regenerate the baseline from this sweep")
-    ap.add_argument("--faults", action="store_true",
+    ap.add_argument("--faults", nargs="?", const=True, default=False,
+                    metavar="composite",
                     help="add the fault-injection axis: one faulted cell "
                          "per scenario x fault kind, with coverage and "
-                         "cleanliness gates")
+                         "cleanliness gates; the value 'composite' also "
+                         "runs every canonical multi-kind plan "
+                         "(drop+delay, duplicate+reorder)")
     ap.add_argument("--telemetry", action="store_true",
                     help="stream every cell's counters live over HTTP/SSE "
                          "while the sweep runs (gated metrics unchanged)")
@@ -78,6 +83,12 @@ def main() -> int:
                     help="bind port for --telemetry (default: ephemeral)")
     args = ap.parse_args()
     size = "smoke" if args.smoke else "full"
+    faults = args.faults
+    if faults == "composite":
+        from repro.faults import composite_names
+        faults = list(workloads.FAULT_KINDS) + list(composite_names())
+    elif isinstance(faults, str):
+        faults = [faults]
 
     from benchmarks.common import RESULTS, save_json
     os.makedirs(RESULTS, exist_ok=True)
@@ -93,7 +104,7 @@ def main() -> int:
     print(f"== scenario sweep (size={size}, seed={args.seed}) ==")
     try:
         results = workloads.sweep(size=size, seed=args.seed,
-                                  telemetry=bridge, faults=args.faults)
+                                  telemetry=bridge, faults=faults)
     finally:
         if bridge is not None:
             bridge.stop()
@@ -132,7 +143,8 @@ def main() -> int:
         print("\n== fault coverage (dedicated detector fired under the "
               "injected kind) ==")
         for kind, flagged in sorted(results["fault_coverage"].items()):
-            print(f"{kind:10s} -> {workloads.FAULT_DETECTOR[kind]:18s} "
+            dets = "/".join(workloads.fault_detector_kinds(kind))
+            print(f"{kind:17s} -> {dets:18s} "
                   f"in {len(flagged)} scenario(s): {flagged}")
 
     failures: List[str] = workloads.check(results)

@@ -1,0 +1,167 @@
+"""What-if fault replay fidelity gate.
+
+    PYTHONPATH=src python benchmarks/whatif_bench.py [--corpus DIR]
+
+For every committed faulted corpus cell (``repro.corpus.FAULT_CELLS``),
+predict the faulted run from the *healthy* trace alone: feed the
+healthy ``<scenario>__fifo.jsonl`` through
+:func:`repro.faults.whatif.whatif` with the cell's canonical fault
+plan, then compare the prediction against the actual committed faulted
+trace's replay (``<scenario>__fifo__fault_<kind>.jsonl``):
+
+1. **finding kinds must match exactly** in every cell (5/5) — the
+   what-if engine answers "which detectors would fire?" with zero
+   tolerance;
+2. **deterministic counter signatures** must agree within each cell's
+   declared relative tolerance. Kinds whose injected transform is a
+   pure function of the recorded op stream (drop / duplicate / reorder
+   / rank_join) are gated byte-exact (tolerance 0); ``rank_leave`` is
+   verdict-only (tolerance 1.0 = signature not gated): removing a
+   rank's pairs shifts every downstream exchange's tick phase,
+   wildcard mix and even the per-phase lane set, and recorded wildcard
+   posts have already lost the concrete source the live injector saw,
+   so per-phase queue stats legitimately diverge while the detector
+   verdicts still agree.
+
+The measured per-cell max relative error is recorded next to its
+declared tolerance in ``results/bench/whatif.json``, so tightening a
+tolerance later is a one-line diff against committed evidence.
+
+Exit status is non-zero on any failed condition (``make whatif-smoke``;
+``scripts/verify.sh`` runs this gate).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import argparse
+from typing import Dict, List
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_CORPUS = os.path.join(REPO, "tests", "corpus")
+
+# a tolerance at (or above) this value means verdict-only: the cell's
+# finding kinds are still gated exactly, the signature is advisory
+VERDICT_ONLY = 1.0
+
+# per-kind declared relative tolerance on signature columns (see module
+# docstring for why rank_leave is verdict-only)
+TOLERANCE: Dict[str, float] = {
+    "drop": 0.0,
+    "duplicate": 0.0,
+    "reorder": 0.0,
+    "rank_join": 0.0,
+    "rank_leave": 1.0,
+}
+
+
+def _flat(x):
+    """Flatten a signature column (scalar or arbitrarily nested list —
+    ``encode_stat`` emits nested histogram lists) to a scalar stream."""
+    if isinstance(x, (list, tuple)):
+        for y in x:
+            yield from _flat(y)
+    else:
+        yield float(x or 0)
+
+
+def signature_error(a: List, b: List) -> float:
+    """Max relative error between two replay signatures' deterministic
+    lane columns (wall stamps excluded — they are None on the
+    deterministic traces this gate replays)."""
+    if len(a) != len(b):
+        return float("inf")
+    worst = 0.0
+    for ra, rb in zip(a, b):
+        if [ra[0], ra[1], ra[2]] != [rb[0], rb[1], rb[2]]:
+            return float("inf")
+        la, lb = ra[4], rb[4]
+        if set(la) != set(lb):
+            return float("inf")
+        for pid in la:
+            va = list(_flat(la[pid]))
+            vb = list(_flat(lb[pid]))
+            if len(va) != len(vb):
+                return float("inf")
+            for x, y in zip(va, vb):
+                worst = max(worst, abs(y - x) / max(abs(x), 1.0))
+    return worst
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--corpus", default=DEFAULT_CORPUS,
+                    help="corpus directory (default: tests/corpus)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="fault-plan seed (must match the corpus build)")
+    args = ap.parse_args()
+
+    from benchmarks.common import save_json
+    from repro.corpus import FAULT_CELLS, codec
+    from repro.faults import default_plan
+    from repro.faults.whatif import whatif
+    from repro.trace import replay
+
+    failures: List[str] = []
+    cells = []
+    print(f"== what-if fault replay vs live faulted corpus "
+          f"({len(FAULT_CELLS)} cells) ==")
+    for sc, kind in FAULT_CELLS:
+        healthy = os.path.join(args.corpus, f"{sc}__fifo.jsonl")
+        faulted = os.path.join(args.corpus,
+                               f"{sc}__fifo__fault_{kind}.jsonl")
+        live = replay(faulted, check_matches=False)
+        wr = whatif(healthy, default_plan(kind, seed=args.seed))
+
+        live_kinds = codec.finding_kinds(live)
+        kinds_ok = wr.finding_kinds == live_kinds
+        err = signature_error(codec.signature(live),
+                              codec.signature(wr.replay))
+        tol = TOLERANCE[kind]
+        sig_ok = tol >= VERDICT_ONLY or err <= tol
+        cells.append({
+            "scenario": sc, "fault": kind,
+            "live_findings": live_kinds,
+            "whatif_findings": wr.finding_kinds,
+            "findings_match": kinds_ok,
+            "n_ops": wr.n_ops, "phases": len(wr.phases),
+            "max_rel_err": (err if err != float("inf") else "inf"),
+            "tolerance": tol,
+            "stats": wr.stats,
+        })
+        print(f"{sc:20s} {kind:10s} kinds "
+              f"{'==' if kinds_ok else '!='} {live_kinds} "
+              f"err={err:g} (tol {tol:g})")
+        if not kinds_ok:
+            failures.append(
+                f"{sc}/{kind}: what-if predicted findings "
+                f"{wr.finding_kinds} but the live faulted run shows "
+                f"{live_kinds}")
+        if not sig_ok:
+            failures.append(
+                f"{sc}/{kind}: signature error {err:g} exceeds "
+                f"declared tolerance {tol:g}")
+
+    payload = {
+        "format": "repro.bench.whatif", "version": 1,
+        "seed": args.seed, "cells": cells,
+        "failures": failures,
+    }
+    path = save_json("whatif.json", payload)
+    print(f"results saved: {path}")
+    if failures:
+        print("\nFAILED what-if fidelity checks:")
+        for f in failures:
+            print(" - " + f)
+        return 1
+    print(f"\nall {len(FAULT_CELLS)} what-if cells match the live "
+          "faulted runs (finding kinds exact; stats within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

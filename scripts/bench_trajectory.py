@@ -2,8 +2,8 @@
 
     PYTHONPATH=src python scripts/bench_trajectory.py --label pr9 [--note ...]
 
-Reads the latest ``results/bench/{hotpath,replay,corpus,telemetry}.json``
-(whatever subset exists) and upserts one labeled entry into the
+Reads the latest ``results/bench/{hotpath,replay,corpus,telemetry,
+whatif,recovery}.json`` (whatever subset exists) and upserts one labeled entry into the
 committed ``results/bench/trajectory.json`` — the per-perf-PR history
 of what the gated ratios actually measured, so "the gate floor was
 raised to X" is always backed by a recorded number. Entries are keyed
@@ -75,6 +75,25 @@ def collect() -> dict:
             "size": tl.get("size"),
             "bridged_median_ratio": ov.get("median_ratio"),
             "bridged_min_ratio": ov.get("min_ratio"),
+        }
+    wi = _load("whatif")
+    if wi:
+        cells = wi.get("cells") or []
+        out["whatif"] = {
+            "cells": len(cells),
+            "findings_exact": sum(1 for c in cells
+                                  if c.get("findings_match")),
+            "byte_exact": sum(1 for c in cells
+                              if c.get("max_rel_err") == 0),
+        }
+    rc = _load("recovery")
+    if rc:
+        conv = rc.get("convergence") or []
+        out["recovery"] = {
+            "size": rc.get("size"),
+            "cells": len(conv),
+            "converged": sum(1 for c in conv if c.get("converged")),
+            "idle_median_ratio": rc.get("median_idle_ratio"),
         }
     return out
 

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python scripts/trace_convert.py IN OUT [--schema {2,3}]
                                                           [--check]
+                                                          [--lenient]
 
 Streams the source trace (any supported version — v1/v2 per-op, v3
 chunked) through a writer at the target schema: records, ``t_wall``
@@ -39,6 +40,10 @@ def main() -> int:
                          "compact chunked encoding; 2 = per-op records)")
     ap.add_argument("--check", action="store_true",
                     help="replay both traces and verify stat equality")
+    ap.add_argument("--lenient", action="store_true",
+                    help="salvage a damaged source: skip corrupt lines "
+                         "(dropped from the output, tallied per "
+                         "category) instead of aborting")
     args = ap.parse_args()
 
     from repro.trace import convert_trace, replay
@@ -46,12 +51,19 @@ def main() -> int:
                                              phase_signature)
 
     def convert_one(src: str, dst: str) -> bool:
-        n_records, n_ops = convert_trace(src, dst, schema=args.schema)
+        skipped: dict = {}
+        n_records, n_ops = convert_trace(src, dst, schema=args.schema,
+                                         strict=not args.lenient,
+                                         skipped=skipped)
         s_in = os.path.getsize(src)
         s_out = os.path.getsize(dst)
         print(f"{src} -> {dst}: {n_records} records "
               f"({n_ops} engine ops), {s_in:,} -> {s_out:,} bytes "
               f"({s_in / max(s_out, 1):.2f}x)")
+        if skipped:
+            print("  lenient: skipped "
+                  + ", ".join(f"{n} {cat} line(s)"
+                              for cat, n in sorted(skipped.items())))
         if args.check:
             a = replay(src, check_matches=False)
             b = replay(dst, check_matches=False)

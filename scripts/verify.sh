@@ -62,8 +62,21 @@ python benchmarks/matching_sweep.py
 echo "== replay what-if acceptance gate =="
 python benchmarks/replay_sweep.py --smoke
 
-echo "== workload scenario sweep gate (baseline regression + seeded-defect + fault-injection coverage) =="
-python benchmarks/scenario_sweep.py --smoke --faults
+echo "== workload scenario sweep gate (baseline regression + seeded-defect + fault-injection coverage incl. composite plans) =="
+python benchmarks/scenario_sweep.py --smoke --faults composite
+
+echo "== what-if fault replay gate (healthy trace + plan predicts the live faulted run) =="
+# finding kinds must match the committed faulted corpus exactly in all
+# 5 cells; counter signatures byte-exact except the declared
+# verdict-only rank_leave cell
+python benchmarks/whatif_bench.py
+
+echo "== self-healing recovery gate (convergence + cleanliness + idle overhead) =="
+# every drop/duplicate fault_expect cell converges under the default
+# policy (zero net orphans/residue, recovered_drop/suppressed_duplicate
+# fire, the healed detectors don't), fault-free runs with the policy
+# attached stay clean, idle recovery seams >= 0.97x paired-median
+python benchmarks/recovery_bench.py --smoke
 
 echo "== hot-path throughput gate (vs frozen pre-overhaul engine, in-run) =="
 # full-size gate is 3.1x (make bench-hotpath); the CI-sized run uses a

@@ -33,12 +33,13 @@ LOCK_REGION = "BlockingProgress lock"
 
 
 class Request:
-    __slots__ = ("_event", "_result", "_exc")
+    __slots__ = ("_event", "_result", "_exc", "label")
 
-    def __init__(self):
+    def __init__(self, label: Optional[str] = None):
         self._event = threading.Event()
         self._result = None
         self._exc: Optional[BaseException] = None
+        self.label = label
 
     def _fulfill(self, result=None, exc: Optional[BaseException] = None):
         self._result = result
@@ -51,7 +52,11 @@ class Request:
     def wait(self, timeout: Optional[float] = None):
         with regions.annotate("MPI_Wait", category="api"):
             if not self._event.wait(timeout):
-                raise TimeoutError("request not completed")
+                what = (f"request {self.label!r}" if self.label
+                        else "request")
+                raise TimeoutError(
+                    f"{what} not completed after {timeout}s (progress "
+                    "engine stalled or shut down with work pending?)")
             if self._exc is not None:
                 raise self._exc
             return self._result
@@ -63,26 +68,62 @@ class ProgressEngine:
     processed request its processing quantum, so the offline replayer can
     re-model the same request stream under the *other* queue discipline
     (the shared-queue defect vs the incoming-queue fix) without rerunning
-    any communication."""
+    any communication.
 
-    def __init__(self, mode: str = "incoming", process_fn=None, trace=None):
+    ``process_fn`` overrides the completion step run on each request's
+    result (the default imports JAX and blocks until the result is
+    device-ready) — pass a plain callable to drive the engine JAX-free,
+    e.g. a spin quantum in the fault-scenario harness.
+
+    Lifecycle: the progress thread starts in the constructor
+    (``autostart=False`` defers it); :meth:`start` and :meth:`shutdown`
+    are both idempotent, and :meth:`start` after :meth:`shutdown`
+    brings the engine back up. Submitting to a stopped engine raises
+    instead of queueing work nothing will ever complete."""
+
+    def __init__(self, mode: str = "incoming", process_fn=None,
+                 trace=None, autostart: bool = True):
         assert mode in ("shared", "incoming")
         self.mode = mode
+        self.process_fn = process_fn
         self.trace = trace
         self._lock = threading.Lock()            # the BlockingProgress lock
         self._queue: Deque[Tuple[Callable, tuple, Request]] = deque()
         self._internal: Deque[Tuple[Callable, tuple, Request]] = deque()
         self._wake = threading.Event()
         self._stop = False
-        self._thread = threading.Thread(
-            target=self._progress_loop, name="progress", daemon=True)
-        self._thread.start()
+        self._state = threading.Lock()           # start/shutdown guard
+        self._thread: Optional[threading.Thread] = None
+        if autostart:
+            self.start()
 
     # ---- user-thread side ---------------------------------------------------
 
-    def submit(self, fn: Callable, *args: Any) -> Request:
-        """MPI_Isend analog: enqueue a communication request."""
-        req = Request()
+    def start(self) -> None:
+        """Start (or restart) the progress thread; a no-op when it is
+        already running."""
+        with self._state:
+            if self._thread is not None and self._thread.is_alive():
+                return
+            self._stop = False
+            self._wake.clear()
+            self._thread = threading.Thread(
+                target=self._progress_loop, name="progress", daemon=True)
+            self._thread.start()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def submit(self, fn: Callable, *args: Any,
+               label: Optional[str] = None) -> Request:
+        """MPI_Isend analog: enqueue a communication request. ``label``
+        names the request in ``Request.wait(timeout=...)`` errors."""
+        if self._stop or self._thread is None:
+            raise RuntimeError(
+                "progress engine is not running (submit after "
+                "shutdown, or before start with autostart=False)")
+        req = Request(label=label)
         t0 = time.perf_counter_ns()
         with regions.annotate("MPI_Isend", category="api", mode=self.mode):
             with regions.annotate(LOCK_REGION, category="runtime",
@@ -99,9 +140,15 @@ class ProgressEngine:
         return req
 
     def shutdown(self):
-        self._stop = True
-        self._wake.set()
-        self._thread.join(timeout=10)
+        """Stop the progress thread (idempotent; safe to call twice or
+        on a never-started engine)."""
+        with self._state:
+            thread = self._thread
+            if thread is None:
+                return
+            self._stop = True
+            self._wake.set()
+            thread.join(timeout=10)
 
     # ---- progress-thread side -------------------------------------------------
 
@@ -134,9 +181,12 @@ class ProgressEngine:
         with regions.annotate("progress/process", category="runtime"):
             try:
                 result = fn(*args)
-                import jax
+                if self.process_fn is not None:
+                    self.process_fn(result)
+                else:
+                    import jax
 
-                jax.block_until_ready(result)
+                    jax.block_until_ready(result)
                 req._fulfill(result)
             except BaseException as e:           # surfaced at wait()
                 req._fulfill(exc=e)

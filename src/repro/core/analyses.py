@@ -687,6 +687,183 @@ def straggler_rank_lanes(
                                min_deferred)
 
 
+# -- self-healing evidence (repro.faults.recovery) ---------------------
+# Successful recovery nets the orphan/residue algebra above back to
+# zero — a healed run is indistinguishable from a healthy one in the
+# matching counters. These detectors therefore key on the evidence
+# counters the recovery layer records on the affected lanes:
+#
+#   fault.recovery.retransmit — dropped deliveries healed by a modeled
+#     retransmit (counted on the receiver's lane at redelivery)
+#   fault.recovery.retry      — retransmits that were lost again and
+#     rescheduled with exponential backoff
+#   fault.recovery.suppressed — duplicate deliveries discarded by the
+#     receiver's sequence-number window before reaching the engine
+#   fault.recovery.cancelled  — receives never posted because their
+#     sender was known dead (rank_leave orphan-post cancellation)
+
+
+def _recovered_drop_finding(
+    pid: int,
+    stats: Dict[str, "CounterStat"],
+    min_recovered: int,
+) -> Optional[Finding]:
+    rtx = stats.get("fault.recovery.retransmit")
+    can = stats.get("fault.recovery.cancelled")
+    n_rtx = rtx.total if rtx is not None else 0
+    n_can = can.total if can is not None else 0
+    total = n_rtx + n_can
+    if total < min_recovered:
+        return None
+    detail = (f" and {n_can:.0f} doomed receives cancelled"
+              if n_can else "")
+    return Finding(
+        kind="recovered_drop",
+        message=(
+            f"{n_rtx:.0f} dropped deliveries to pid {pid} were "
+            f"retransmitted{detail} — transport healed message loss"
+        ),
+        severity=total * NS_PER_QUEUE_ENTRY / 1e9,
+        pid=pid,
+    )
+
+
+def _suppressed_duplicate_finding(
+    pid: int,
+    stats: Dict[str, "CounterStat"],
+    min_suppressed: int,
+) -> Optional[Finding]:
+    sup = stats.get("fault.recovery.suppressed")
+    if sup is None or sup.total < min_suppressed:
+        return None
+    return Finding(
+        kind="suppressed_duplicate",
+        message=(
+            f"{sup.total:.0f} duplicate deliveries to pid {pid} were "
+            f"discarded by the sequence-number window before parking "
+            f"on the UMQ"
+        ),
+        severity=sup.total * NS_PER_QUEUE_ENTRY / 1e9,
+        pid=pid,
+    )
+
+
+def _retry_storm_findings(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    min_retries: int,
+    storm_frac: float,
+) -> List[Finding]:
+    # Cross-lane by construction: a storm is a transport property —
+    # retries amplify load on the whole fabric, so the threshold is a
+    # run-wide retry:redelivery ratio, with the worst lane named.
+    retries = redelivered = 0.0
+    worst_pid, worst_n = -1, -1.0
+    for pid in sorted(lanes):
+        stats = lanes[pid]
+        r = stats.get("fault.recovery.retry")
+        t = stats.get("fault.recovery.retransmit")
+        n = r.total if r is not None else 0
+        retries += n
+        redelivered += t.total if t is not None else 0
+        if n > worst_n:
+            worst_pid, worst_n = pid, n
+    if retries < min_retries or retries < storm_frac * max(redelivered, 1):
+        return []
+    return [Finding(
+        kind="retry_storm",
+        message=(
+            f"{retries:.0f} retransmissions were lost and retried "
+            f"against {redelivered:.0f} successful redeliveries "
+            f"(worst lane pid {worst_pid}) — recovery is amplifying "
+            f"load instead of healing it"
+        ),
+        severity=retries * NS_PER_QUEUE_ENTRY / 1e9,
+        pid=worst_pid,
+    )]
+
+
+def recovered_drop(
+    events: Sequence[Event],
+    min_recovered: int = 4,
+) -> List[Finding]:
+    """Dropped deliveries the recovery layer healed (retransmits plus
+    cancelled doomed posts, per rank) — proof the run absorbed message
+    loss without orphaning receives."""
+    out: List[Finding] = []
+    for pid, evs in _counter_events_by_pid(events).items():
+        f = _recovered_drop_finding(pid, counter_stats(evs),
+                                    min_recovered)
+        if f is not None:
+            out.append(f)
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def recovered_drop_lanes(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    min_recovered: int = 4,
+) -> List[Finding]:
+    """:func:`recovered_drop` directly over per-pid lane statistics."""
+    out = [f for pid in sorted(lanes)
+           for f in (_recovered_drop_finding(pid, lanes[pid],
+                                             min_recovered),)
+           if f is not None]
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def suppressed_duplicate(
+    events: Sequence[Event],
+    min_suppressed: int = 4,
+) -> List[Finding]:
+    """Duplicate deliveries the receiver's sequence-number window
+    discarded (per rank) — the healed counterpart of
+    :func:`duplicate_match`."""
+    out: List[Finding] = []
+    for pid, evs in _counter_events_by_pid(events).items():
+        f = _suppressed_duplicate_finding(pid, counter_stats(evs),
+                                          min_suppressed)
+        if f is not None:
+            out.append(f)
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def suppressed_duplicate_lanes(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    min_suppressed: int = 4,
+) -> List[Finding]:
+    """:func:`suppressed_duplicate` directly over per-pid lane stats."""
+    out = [f for pid in sorted(lanes)
+           for f in (_suppressed_duplicate_finding(pid, lanes[pid],
+                                                   min_suppressed),)
+           if f is not None]
+    out.sort(key=lambda f: -f.severity)
+    return out
+
+
+def retry_storm(
+    events: Sequence[Event],
+    min_retries: int = 8,
+    storm_frac: float = 1.0,
+) -> List[Finding]:
+    """Recovery retries outnumbering successful redeliveries — bounded
+    retransmission degenerating into load amplification (run-wide, with
+    the worst lane named)."""
+    lanes = {pid: counter_stats(evs)
+             for pid, evs in _counter_events_by_pid(events).items()}
+    return _retry_storm_findings(lanes, min_retries, storm_frac)
+
+
+def retry_storm_lanes(
+    lanes: Dict[int, Dict[str, "CounterStat"]],
+    min_retries: int = 8,
+    storm_frac: float = 1.0,
+) -> List[Finding]:
+    """:func:`retry_storm` directly over per-pid lane statistics."""
+    return _retry_storm_findings(lanes, min_retries, storm_frac)
+
+
 def analyze_all(events: Sequence[Event], **kwargs) -> List[Finding]:
     out: List[Finding] = []
     out.extend(large_waits(events))
@@ -699,6 +876,9 @@ def analyze_all(events: Sequence[Event], **kwargs) -> List[Finding]:
     out.extend(duplicate_match(events))
     out.extend(reorder_inflation(events))
     out.extend(straggler_rank(events))
+    out.extend(recovered_drop(events))
+    out.extend(suppressed_duplicate(events))
+    out.extend(retry_storm(events))
     out.sort(key=lambda f: -f.severity)
     return out
 

@@ -1,16 +1,28 @@
-"""Deterministic fault injection (``repro.faults``).
+"""Deterministic fault injection and recovery (``repro.faults``).
 
 Declarative, seeded fault plans (:mod:`~repro.faults.plan`) applied to
 scenario runs through the matching fabric's sanctioned rewrite seams
 (:mod:`~repro.faults.inject`): dropped / duplicated / reordered /
 delayed deliveries plus ranks leaving and joining mid-run — the
-transport-level failure modes the new detectors in
+transport-level failure modes the detectors in
 :mod:`repro.core.analyses` (``orphan_posts``, ``duplicate_match``,
 ``reorder_inflation``, ``straggler_rank``) are built to flag.
+
+On top of injection sit the self-healing and predictive layers:
+seeded :class:`~repro.faults.recovery.RecoveryPolicy` healing applied
+through the same seams (retransmits, duplicate suppression, orphan-
+post cancellation — detectors ``recovered_drop`` /
+``suppressed_duplicate`` / ``retry_storm``), and fault-aware what-if
+replay (:mod:`~repro.faults.whatif`) that predicts a faulted run's
+counter lanes and findings from a *healthy* recorded trace.
 """
 from .inject import FaultyFabric, build_faulty, finish_faults
 from .plan import (FaultPlan, FaultSpec, JOINER_RANK, KINDS,
-                   default_plan, plans, single)
+                   composite_kinds, composite_names, composite_plan,
+                   composite_plans, default_plan, plans, single)
+from .recovery import (RECOVERABLE_KINDS, RecoveryPolicy, RecoveryRule,
+                       default_policy)
+from .whatif import WhatIfResult, whatif
 
 __all__ = [
     "FaultPlan",
@@ -18,9 +30,19 @@ __all__ = [
     "FaultyFabric",
     "JOINER_RANK",
     "KINDS",
+    "RECOVERABLE_KINDS",
+    "RecoveryPolicy",
+    "RecoveryRule",
+    "WhatIfResult",
     "build_faulty",
+    "composite_kinds",
+    "composite_names",
+    "composite_plan",
+    "composite_plans",
     "default_plan",
+    "default_policy",
     "finish_faults",
     "plans",
     "single",
+    "whatif",
 ]

@@ -31,15 +31,30 @@ re-injected at the head of a later exchange; :meth:`FaultyFabric
 every sent message delivered (the straggler signature is the *lag*,
 visible as ``fault.delay.deferred`` counts on the straggler's lane and
 depth inflation on its peers — not message loss).
+
+With a :class:`repro.faults.recovery.RecoveryPolicy` attached, the
+same seams also carry the *healing*: dropped deliveries are
+retransmitted after a modeled timeout (with backoff, jitter, and
+bounded re-loss from a dedicated recovery rng — the fault stream is
+untouched, so the same faults fire healed or not), injected
+duplicates are discarded by the receiver's sequence-number window
+before the engine sees them, and peers of a dead rank cancel the
+receives they would have orphaned. Each recovery action writes one
+bare ``rcv`` annotation record (the healed op stream itself is
+ordinary post/arr records, so recovering traces replay and convert
+exactly like faulted ones).
 """
 from __future__ import annotations
 
 import random
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 from ..match.engine import Fabric
 from .plan import FaultPlan, FaultSpec
+from .recovery import (EV_CANCELLED, EV_RETRANSMIT, EV_RETRY,
+                       EV_SUPPRESSED, RecoveryPolicy, RecoveryRule,
+                       recovery_stream)
 
 
 class FaultyFabric(Fabric):
@@ -50,15 +65,30 @@ class FaultyFabric(Fabric):
     a collective) advances the exchange index the plan's windows are
     expressed in."""
 
-    def __init__(self, plan: FaultPlan, **kw):
+    def __init__(self, plan: FaultPlan,
+                 recovery: Optional[RecoveryPolicy] = None, **kw):
         super().__init__(**kw)
         self.plan = plan
+        self.recovery = (recovery if recovery is not None
+                         and recovery.rules else None)
+        self._rules: Dict[str, RecoveryRule] = (
+            {r.kind: r for r in self.recovery.rules}
+            if self.recovery is not None else {})
+        # dedicated recovery stream: jitter and lost-retransmit draws
+        # never touch the fault stream, so enabling recovery does not
+        # change which faults fire
+        self._rrng = (recovery_stream(plan.seed)
+                      if self.recovery is not None else None)
         self._frng = random.Random(plan.seed)
         self._x = 0                   # exchanges dispatched so far
         self._active: List[FaultSpec] = []
         # in-flight delayed arrivals: (due_x, src, dst, tag, nb, comm)
         self._deferred: Deque[Tuple[int, int, int, int, int, int]] = \
             deque()
+        # scheduled retransmits of dropped deliveries:
+        # (due_x, attempt, loss_rate, src, dst, tag, nb, comm)
+        self._retrans: Deque[
+            Tuple[int, int, float, int, int, int, int, int]] = deque()
         self.arrival_filter = self._filter_arrivals
 
     # -- plan application --------------------------------------------------
@@ -69,6 +99,8 @@ class FaultyFabric(Fabric):
         self._x = x + 1
         if self._deferred:
             self._release_due(x)
+        if self._retrans:
+            self._release_retrans(x)
         active = self.plan.active(x)
         if active:
             for spec in active:
@@ -86,6 +118,23 @@ class FaultyFabric(Fabric):
                                        if p[1] != spec.rank]
                         self._note(spec, x, len(pairs) - len(kept))
                         pairs = kept
+                    if "rank_leave" in self._rules:
+                        # peers know the rank is dead: cancel the
+                        # receives they would have posted for its
+                        # traffic instead of orphaning them
+                        dead = spec.rank
+                        kept = [p for p in pairs if p[0] != dead]
+                        n = len(pairs) - len(kept)
+                        if n:
+                            if deliver is not None:
+                                deliver = [p for p in deliver
+                                           if p[0] != dead]
+                            for p in pairs:
+                                if p[0] == dead:
+                                    self._lane(p[1]).count(
+                                        EV_CANCELLED, 1)
+                            self._note_rcv("cancel", x, n, dead)
+                            pairs = kept
                 elif kind == "rank_join" \
                         and (x - spec.start) % spec.every == 0:
                     # balanced warm-up round trip with rank 0: the
@@ -116,29 +165,49 @@ class FaultyFabric(Fabric):
                 n = 0
                 want = spec.rank
                 rate = spec.rate
+                rule = self._rules.get("drop")
                 for p in out:
                     if (want < 0 or p[0] == want) \
                             and rng.random() < rate:
                         n += 1
+                        if rule is not None:
+                            self._schedule_retransmit(
+                                rule, x, 0, rate, p[0], p[1], tag,
+                                nbytes, comm)
                     else:
                         kept.append(p)
                 if n:
                     out = kept
                     self._note(spec, x, n)
+                    if rule is not None:
+                        self._note_rcv("rtx", x, n, want)
             elif kind == "duplicate":
                 dup = []
                 n = 0
+                nsup = 0
                 want = spec.rank
                 rate = spec.rate
+                suppress = "duplicate" in self._rules
                 for p in out:
                     dup.append(p)
                     if (want < 0 or p[0] == want) \
                             and rng.random() < rate:
-                        dup.append(p)
-                        n += 1
+                        if suppress:
+                            # the copy reuses its original's channel
+                            # sequence number: the receiver's dedup
+                            # window discards it before the engine
+                            # can park it
+                            nsup += 1
+                            self._lane(p[1]).count(EV_SUPPRESSED, 1)
+                        else:
+                            dup.append(p)
+                            n += 1
                 if n:
                     out = dup
                     self._note(spec, x, n)
+                elif nsup:
+                    self._note(spec, x, nsup)
+                    self._note_rcv("suppress", x, nsup, want)
             elif kind == "delay":
                 kept = []
                 n = 0
@@ -189,6 +258,51 @@ class FaultyFabric(Fabric):
         for _, src, dst, tag, nb, comm in due:
             self._deliver_direct(src, dst, tag, nb, comm)
 
+    # -- recovery plumbing (repro.faults.recovery) -------------------------
+
+    def _lane(self, pid: int):
+        return self.reg.lane(pid) if self.per_rank_lanes else self.reg
+
+    def _schedule_retransmit(self, rule: RecoveryRule, x: int,
+                             attempt: int, rate: float, src: int,
+                             dst: int, tag: int, nb: int,
+                             comm: int) -> None:
+        """Queue transmission attempt ``attempt`` (0 = first
+        retransmit after the original drop) of one lost delivery;
+        the timeout/backoff/jitter schedule is the rule's."""
+        due = x + rule.delay(attempt, self._rrng)
+        self._retrans.append((due, attempt + 1, rate, src, dst, tag,
+                              nb, comm))
+
+    def _release_retrans(self, x: int) -> None:
+        """Deliver — or lose again, bounded by ``max_retries`` —
+        every retransmit due at or before exchange ``x``, ahead of
+        that exchange's own traffic. Past the retry bound the modeled
+        reliable channel always delivers, so recovery converges."""
+        dq = self._retrans
+        due = [e for e in dq if e[0] <= x]
+        if not due:
+            return
+        self._retrans = deque(e for e in dq if e[0] > x)
+        rrng = self._rrng
+        rule = self._rules["drop"]
+        ndel = nretry = 0
+        for _, attempt, rate, src, dst, tag, nb, comm in due:
+            if attempt <= rule.max_retries and rrng.random() < rate:
+                # the retransmit was lost too: back off and go again
+                nretry += 1
+                self._lane(dst).count(EV_RETRY, 1)
+                self._schedule_retransmit(rule, x, attempt, rate,
+                                          src, dst, tag, nb, comm)
+            else:
+                ndel += 1
+                self._lane(dst).count(EV_RETRANSMIT, 1)
+                self._deliver_direct(src, dst, tag, nb, comm)
+        if nretry:
+            self._note_rcv("retry", x, nretry, -1)
+        if ndel:
+            self._note_rcv("deliver", x, ndel, -1)
+
     def _deliver_direct(self, src: int, dst: int, tag: int, nb: int,
                         comm: int) -> None:
         """One out-of-band arrival, fuse-aware: inside a fused span the
@@ -205,18 +319,29 @@ class FaultyFabric(Fabric):
             self.engine(dst).arrive(src, tag, comm, nb)
 
     def finish(self) -> None:
-        """Flush all still-deferred arrivals (call once, after the
-        scenario's drive loop): straggler messages land late, they do
-        not vanish — a delayed run ends balanced."""
+        """Flush all still-deferred arrivals and still-pending
+        retransmits (call once, after the scenario's drive loop):
+        straggler and retransmitted messages land late, they do not
+        vanish — a delayed or recovering run ends balanced."""
         dq = self._deferred
-        if not dq:
-            return
-        self._deferred = deque()
-        if self.trace is not None:
-            self.trace.emit({"t": "flt", "kind": "delay", "x": self._x,
-                             "n": len(dq), "flush": 1})
-        for _, src, dst, tag, nb, comm in dq:
-            self._deliver_direct(src, dst, tag, nb, comm)
+        if dq:
+            self._deferred = deque()
+            if self.trace is not None:
+                self.trace.emit({"t": "flt", "kind": "delay",
+                                 "x": self._x, "n": len(dq),
+                                 "flush": 1})
+            for _, src, dst, tag, nb, comm in dq:
+                self._deliver_direct(src, dst, tag, nb, comm)
+        rt = self._retrans
+        if rt:
+            # end-of-run reliable flush: whatever the retry schedule
+            # still holds is delivered now, so a recovering run always
+            # converges to zero net orphan posts
+            self._retrans = deque()
+            self._note_rcv("flush", self._x, len(rt), -1)
+            for _, _, _, src, dst, tag, nb, comm in rt:
+                self._lane(dst).count(EV_RETRANSMIT, 1)
+                self._deliver_direct(src, dst, tag, nb, comm)
 
     # -- trace annotation --------------------------------------------------
 
@@ -226,13 +351,25 @@ class FaultyFabric(Fabric):
             self.trace.emit({"t": "flt", "kind": spec.kind, "x": x,
                              "n": n, "rank": spec.rank})
 
+    def _note_rcv(self, act: str, x: int, n: int, rank: int) -> None:
+        """One bare ``rcv`` record per (exchange, recovery action) —
+        annotation only, like ``flt``: the healed op stream itself is
+        carried by the ordinary post/arr records, so recovering traces
+        replay and convert (v2 <-> v3 byte-identical) unchanged."""
+        if self.trace is not None:
+            self.trace.emit({"t": "rcv", "act": act, "x": x, "n": n,
+                             "rank": rank})
 
-def build_faulty(plan: Optional[FaultPlan], **kw) -> Fabric:
+
+def build_faulty(plan: Optional[FaultPlan],
+                 recovery: Optional[RecoveryPolicy] = None,
+                 **kw) -> Fabric:
     """Fabric factory: a plain :class:`Fabric` when ``plan`` is falsy
-    (no plan / no specs), else a :class:`FaultyFabric`."""
+    (no plan / no specs — nothing to recover from either), else a
+    :class:`FaultyFabric`, self-healing when ``recovery`` is set."""
     if plan is None or not plan.specs:
         return Fabric(**kw)
-    return FaultyFabric(plan, **kw)
+    return FaultyFabric(plan, recovery=recovery, **kw)
 
 
 def finish_faults(fab: Fabric) -> None:

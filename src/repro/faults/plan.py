@@ -94,6 +94,47 @@ class FaultSpec:
                       for f in dataclasses.fields(cls)})
 
 
+def _windows_overlap(a: FaultSpec, b: FaultSpec) -> bool:
+    """Do two specs' exchange-index windows intersect? ``stop=-1``
+    means until the end of the run."""
+    a_stop = float("inf") if a.stop < 0 else a.stop
+    b_stop = float("inf") if b.stop < 0 else b.stop
+    return a.start < b_stop and b.start < a_stop
+
+
+def _ranks_overlap(a: FaultSpec, b: FaultSpec) -> bool:
+    return a.rank < 0 or b.rank < 0 or a.rank == b.rank
+
+
+def validate_specs(specs: Sequence[FaultSpec]) -> None:
+    """Composite-plan window validation: reject spec pairs whose
+    combination is ambiguous rather than adversarial-but-legal.
+
+    Two specs of the *same* kind may not overlap in both window and
+    rank scope (the injector would double-draw from one candidate
+    stream), and a ``rank_leave`` window may not overlap any other
+    spec that targets the same rank — a dead rank cannot also
+    straggle, rejoin, or send droppable traffic."""
+    for i, a in enumerate(specs):
+        for b in specs[i + 1:]:
+            if not _windows_overlap(a, b):
+                continue
+            if a.kind == b.kind and _ranks_overlap(a, b):
+                raise ValueError(
+                    f"composite plan has two overlapping {a.kind!r} "
+                    f"specs (windows [{a.start},{a.stop}) and "
+                    f"[{b.start},{b.stop}) with intersecting rank "
+                    "scope); split the windows or merge the specs")
+            for dead, other in ((a, b), (b, a)):
+                if dead.kind == "rank_leave" and other.rank >= 0 \
+                        and other.rank == dead.rank:
+                    raise ValueError(
+                        f"rank_leave(rank={dead.rank}) overlaps a "
+                        f"{other.kind!r} spec targeting the same "
+                        "rank: a dead rank cannot also be a fault "
+                        "target — disjoint windows required")
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
     """An ordered set of :class:`FaultSpec` plus the injector seed."""
@@ -103,6 +144,7 @@ class FaultPlan:
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "specs", tuple(self.specs))
+        validate_specs(self.specs)
 
     def active(self, x: int) -> List[FaultSpec]:
         return [s for s in self.specs if s.active(x)]
@@ -173,3 +215,47 @@ def default_plan(kind: str, seed: int = 0) -> FaultPlan:
 def plans(seed: int = 0) -> Dict[str, FaultPlan]:
     """All canonical single-kind plans, keyed by kind."""
     return {k: default_plan(k, seed=seed) for k in KINDS}
+
+
+# The canonical composite (multi-kind) plans the sweep's
+# ``--faults composite`` axis runs. Kind pairs are chosen so their
+# counter signatures do not cancel: drop's net orphans and delay's
+# deferred-lag evidence are disjoint, as are duplicate's UMQ residue
+# and reorder's traversal-depth tail. (drop+duplicate would be a bad
+# composite — orphans and residue net against each other in the
+# detector algebra, masking both.) Composite names join their member
+# kinds with ``+``, which no single kind contains, so sweep cell keys
+# stay unambiguous.
+_COMPOSITES: Dict[str, Tuple[str, ...]] = {
+    "drop+delay": ("drop", "delay"),
+    "duplicate+reorder": ("duplicate", "reorder"),
+}
+
+
+def composite_plan(name: str, seed: int = 0) -> FaultPlan:
+    """The canonical composite plan ``name`` (see ``composite_names``)."""
+    try:
+        kinds = _COMPOSITES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown composite plan {name!r}; expected one of "
+            f"{tuple(_COMPOSITES)}") from None
+    return FaultPlan(specs=tuple(_DEFAULTS[k] for k in kinds),
+                     seed=seed)
+
+
+def composite_names() -> Tuple[str, ...]:
+    return tuple(_COMPOSITES)
+
+
+def composite_kinds(name: str) -> Tuple[str, ...]:
+    """The member kinds of canonical composite ``name``."""
+    try:
+        return _COMPOSITES[name]
+    except KeyError:
+        raise ValueError(f"unknown composite plan {name!r}") from None
+
+
+def composite_plans(seed: int = 0) -> Dict[str, FaultPlan]:
+    """All canonical composite plans, keyed by name."""
+    return {n: composite_plan(n, seed=seed) for n in _COMPOSITES}

@@ -29,8 +29,9 @@ from typing import Dict, List, Optional, Union
 
 from ..core.analyses import (Finding, contention, duplicate_match_lanes,
                              long_traversal_lanes, orphan_posts_lanes,
-                             reorder_inflation_lanes, straggler_rank_lanes,
-                             umq_flood_lanes)
+                             recovered_drop_lanes, reorder_inflation_lanes,
+                             retry_storm_lanes, straggler_rank_lanes,
+                             suppressed_duplicate_lanes, umq_flood_lanes)
 from ..core.collector import Collector
 from ..core.counters import (COUNTER_CATEGORY, CounterRegistry,
                              merge_lane_stats)
@@ -277,6 +278,9 @@ class TelemetryBridge:
         found += duplicate_match_lanes(cum)
         found += reorder_inflation_lanes(cum)
         found += straggler_rank_lanes(cum)
+        found += recovered_drop_lanes(cum)
+        found += suppressed_duplicate_lanes(cum)
+        found += retry_storm_lanes(cum)
         self._record_findings_locked(name, found, ts)
 
     def _detect_contention_locked(self, name: str, col: Collector,

@@ -12,11 +12,23 @@ Three endpoints, INAM-dashboard shaped:
 curl never blocks the poll thread, it just loses the oldest frames
 (reported via an ``: dropped N`` comment line). Idle streams get
 keep-alive comment lines so proxies don't cut them.
+
+Robustness: binding retries with exponential backoff when the
+requested port is busy (``EADDRINUSE``), falling back to an ephemeral
+port on the last attempt (reported via ``fell_back``/
+``requested_port`` so harnesses can log the substitution);
+``stop()``/``close()`` are idempotent and safe on a never-started
+server; a half-closed or vanished SSE client can only stall its own
+daemon handler thread up to the socket timeout — every stream write
+error (not just the polite pipe/reset pair) detaches that client's
+queue, so the bridge's poll thread is never wedged.
 """
 from __future__ import annotations
 
+import errno
 import json
 import threading
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
@@ -24,11 +36,17 @@ from .bridge import TelemetryBridge
 from .subscribers import ClientQueue
 
 KEEPALIVE_S = 5.0
+BIND_RETRIES = 4
+BIND_BACKOFF_S = 0.05
 
 
 class _Handler(BaseHTTPRequestHandler):
     protocol_version = "HTTP/1.1"
     server_version = "repro-telemetry/1"
+    # socket timeout: a client that half-closes (or disappears without
+    # a RST) leaves writes filling the kernel buffer; the timeout turns
+    # that into an OSError the stream loop treats as a disconnect
+    timeout = 6 * KEEPALIVE_S
 
     # quiet: the poll thread's work must not be interleaved with access
     # logs on stderr during benches
@@ -93,7 +111,11 @@ class _Handler(BaseHTTPRequestHandler):
                 self._send_frame(frame)
                 if frame.get("t") == "te":
                     break
-        except (BrokenPipeError, ConnectionResetError):
+        except OSError:
+            # BrokenPipe/ConnectionReset from a closed peer, timeouts
+            # from a half-closed one that stopped reading — either way
+            # this client is done; detach it so the poller's fan-out
+            # never touches a dead queue again
             pass
         finally:
             self.bridge.unsubscribe(queue)
@@ -109,16 +131,44 @@ class TelemetryServer:
     """Bind the bridge to an HTTP port (port 0 = ephemeral).
 
     ``start()`` serves on a daemon thread and returns the server;
-    ``stop()`` wakes streaming clients and shuts the listener down."""
+    ``stop()`` (alias ``close()``, both idempotent) wakes streaming
+    clients and shuts the listener down. A busy requested port is
+    retried ``bind_retries`` times with exponential backoff, then the
+    OS picks an ephemeral port instead — check ``fell_back`` /
+    ``requested_port`` and report the substituted ``port`` rather than
+    failing a long bench run over a stale listener."""
 
     def __init__(self, bridge: TelemetryBridge, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, bind_retries: int = BIND_RETRIES,
+                 bind_backoff_s: float = BIND_BACKOFF_S):
         self.bridge = bridge
-        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self.requested_port = port
+        self.fell_back = False
+        self._httpd = self._bind(host, port, bind_retries,
+                                 bind_backoff_s)
         self._httpd.daemon_threads = True
         self._httpd.bridge = bridge          # type: ignore[attr-defined]
         self._httpd.stopping = False         # type: ignore[attr-defined]
         self._thread: Optional[threading.Thread] = None
+        self._closed = False
+
+    def _bind(self, host: str, port: int, retries: int,
+              backoff_s: float) -> ThreadingHTTPServer:
+        attempt = 0
+        while True:
+            try:
+                return ThreadingHTTPServer((host, port), _Handler)
+            except OSError as e:
+                if e.errno != errno.EADDRINUSE or port == 0:
+                    raise
+                attempt += 1
+                if attempt > retries:
+                    # last resort: let the OS pick — the caller reads
+                    # the substituted port off ``url`` and can see the
+                    # fallback happened via ``fell_back``
+                    self.fell_back = True
+                    return ThreadingHTTPServer((host, 0), _Handler)
+                time.sleep(backoff_s * (2 ** (attempt - 1)))
 
     @property
     def host(self) -> str:
@@ -133,6 +183,8 @@ class TelemetryServer:
         return f"http://{self.host}:{self.port}"
 
     def start(self) -> "TelemetryServer":
+        if self._closed:
+            raise RuntimeError("telemetry server already closed")
         if self._thread is not None:
             raise RuntimeError("telemetry server already started")
         self._thread = threading.Thread(target=self._httpd.serve_forever,
@@ -142,12 +194,20 @@ class TelemetryServer:
         return self
 
     def stop(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
         self._httpd.stopping = True          # type: ignore[attr-defined]
-        self._httpd.shutdown()
         if self._thread is not None:
+            # shutdown() blocks until serve_forever acknowledges — only
+            # meaningful (and only safe) when the loop actually ran
+            self._httpd.shutdown()
             self._thread.join()
             self._thread = None
         self._httpd.server_close()
+
+    # idempotent alias, symmetric with TelemetryBridge.close()
+    close = stop
 
     def __enter__(self) -> "TelemetryServer":
         return self.start()

@@ -6,8 +6,8 @@
 # counters, detectors and the trace differ all run on replayed data, no
 # workload re-execution needed.
 from .diff import PhaseDelta, TraceDiff, diff
-from .io import (TraceReader, TraceWriter, convert_trace, iter_trace,
-                 read_trace)
+from .io import (TraceCorruptionWarning, TraceReader, TraceWriter,
+                 convert_trace, iter_trace, read_trace)
 from .legacy_replay import LegacyReplayer, legacy_replay
 from .recorder import record_collectives, record_fabric
 from .replay import (LOCK_REGION, PartitionScan, PhaseStats, Replayer,
@@ -20,8 +20,8 @@ from .schema import (SCHEMA_VERSION, SUPPORTED_VERSIONS, TRACE_FORMAT,
 
 __all__ = [
     "PhaseDelta", "TraceDiff", "diff",
-    "TraceReader", "TraceWriter", "convert_trace", "iter_trace",
-    "read_trace",
+    "TraceCorruptionWarning", "TraceReader", "TraceWriter",
+    "convert_trace", "iter_trace", "read_trace",
     "LegacyReplayer", "legacy_replay",
     "record_collectives", "record_fabric",
     "LOCK_REGION", "PartitionScan", "PhaseStats", "Replayer",

@@ -23,7 +23,12 @@ expanding v3 chunks lazily — replaying a long trace never materializes
 the full record list. :func:`read_trace` is the eager convenience over
 it. Reader errors are typed: truncated or corrupt lines and unsupported
 versions raise :class:`repro.trace.schema.TraceFormatError` carrying the
-path and 1-based line number.
+path and 1-based line number. ``strict=False`` turns a reader lenient:
+corrupt payload lines (truncated JSON, non-object lines, invalid
+records, undecodable chunks) are *skipped* instead of raised, tallied
+by category in ``reader.skipped``, and summarized in one
+:class:`TraceCorruptionWarning` when the stream ends — the header stays
+strict either way (a trace without a valid header is not a trace).
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ import gzip
 import json
 import threading
 import time
+import warnings
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from ..core.counters import CounterRegistry
@@ -74,6 +80,11 @@ _PE_KEYS = {
 # one shared encoder: json.dumps(..., separators=...) builds a fresh
 # JSONEncoder per call, which is pure overhead at trace volume
 _encode = json.JSONEncoder(separators=(",", ":")).encode
+
+
+class TraceCorruptionWarning(UserWarning):
+    """A lenient (``strict=False``) reader skipped corrupt lines; the
+    message carries the per-category tally."""
 
 
 def _open(path: str, write: bool, append: bool = False):
@@ -406,11 +417,19 @@ class TraceReader:
     Usable as a context manager; iteration closes the file when the
     stream ends. Malformed input raises
     :class:`~repro.trace.schema.TraceFormatError` with the offending
-    line number."""
+    line number — unless ``strict=False``, which skips corrupt payload
+    lines (counting them by category in ``skipped``: ``"json"`` for
+    unparseable/non-object lines, ``"record"`` for invalid records,
+    ``"chunk"`` for undecodable chunk columns) and warns once with the
+    tally when the stream ends. The header is validated strictly
+    regardless."""
 
-    def __init__(self, path: str, expand: bool = True):
+    def __init__(self, path: str, expand: bool = True,
+                 strict: bool = True):
         self.path = str(path)
         self.expand = expand
+        self.strict = strict
+        self.skipped: Dict[str, int] = {}
         self._lineno = 0
         self._seqs: Dict[int, int] = {}  # per-rank next derived seq
         self._f = _open(self.path, write=False)
@@ -447,11 +466,15 @@ class TraceReader:
                 raise self._fail(str(e)) from None
         raise self._fail(f"empty trace file (no header): {self.path}")
 
+    def _skip(self, category: str) -> None:
+        self.skipped[category] = self.skipped.get(category, 0) + 1
+
     def __iter__(self) -> Iterator[Dict]:
         f = self._f
         if f is None:
             raise ValueError(f"trace reader for {self.path} is closed")
         expand = self.expand
+        strict = self.strict
         v3 = self.header.get("schema", 0) >= 3
         try:
             for line in f:
@@ -459,30 +482,95 @@ class TraceReader:
                 line = line.strip()
                 if not line:
                     continue
-                rec = self._parse(line)
+                try:
+                    rec = self._parse(line)
+                except TraceFormatError:
+                    if strict:
+                        raise
+                    self._skip("json")
+                    continue
                 try:
                     validate_record(rec)
-                    if v3:
-                        # chunk expansion + derived-seq bookkeeping only
-                        # exist at v3; pre-chunk files skip both
-                        kind = rec.get("t")
-                        if expand and kind == REC_CHUNK:
-                            yield from decode_chunk(rec, self._seqs)
-                            continue
-                        if expand and kind == REC_PE_CHUNK:
-                            yield from decode_pe_chunk(rec)
-                            continue
-                        if kind == REC_POST or kind == REC_ARRIVE:
-                            # bare op: re-seed the rank's derived-seq
-                            # counter (mirrors the writer's fallback)
-                            rank, seq = rec.get("rank"), rec.get("seq")
-                            if type(rank) is int and type(seq) is int:
-                                self._seqs[rank] = seq + 1
-                    yield rec
                 except TraceFormatError:
-                    raise
+                    if strict:
+                        raise
+                    self._skip("record")
+                    continue
                 except TraceSchemaError as e:
-                    raise self._fail(str(e)) from None
+                    if strict:
+                        raise self._fail(str(e)) from None
+                    self._skip("record")
+                    continue
+                if v3:
+                    # chunk expansion + derived-seq bookkeeping only
+                    # exist at v3; pre-chunk files skip both
+                    kind = rec.get("t")
+                    if (not strict and not expand
+                            and (kind == REC_CHUNK
+                                 or kind == REC_PE_CHUNK)):
+                        # raw lenient stream (the batched replayer):
+                        # trial-decode against scratch state so a
+                        # corrupt chunk is skipped here rather than
+                        # exploding inside a columnar consumer
+                        try:
+                            if kind == REC_CHUNK:
+                                for _ in decode_chunk(rec,
+                                                      dict(self._seqs)):
+                                    pass
+                            else:
+                                for _ in decode_pe_chunk(rec):
+                                    pass
+                        except (TraceFormatError, TraceSchemaError,
+                                ValueError, TypeError, IndexError,
+                                KeyError):
+                            self._skip("chunk")
+                            continue
+                        yield rec
+                        continue
+                    if expand and (kind == REC_CHUNK
+                                   or kind == REC_PE_CHUNK):
+                        if strict:
+                            try:
+                                if kind == REC_CHUNK:
+                                    yield from decode_chunk(
+                                        rec, self._seqs)
+                                else:
+                                    yield from decode_pe_chunk(rec)
+                            except TraceFormatError:
+                                raise
+                            except TraceSchemaError as e:
+                                raise self._fail(str(e)) from None
+                            continue
+                        # lenient: decode eagerly against a scratch
+                        # seq map so a wrong-arity chunk is skipped
+                        # whole, never half-expanded
+                        seqs = dict(self._seqs)
+                        try:
+                            if kind == REC_CHUNK:
+                                rows = list(decode_chunk(rec, seqs))
+                            else:
+                                rows = list(decode_pe_chunk(rec))
+                        except (TraceFormatError, TraceSchemaError,
+                                ValueError, TypeError, IndexError,
+                                KeyError):
+                            self._skip("chunk")
+                            continue
+                        self._seqs = seqs
+                        yield from rows
+                        continue
+                    if kind == REC_POST or kind == REC_ARRIVE:
+                        # bare op: re-seed the rank's derived-seq
+                        # counter (mirrors the writer's fallback)
+                        rank, seq = rec.get("rank"), rec.get("seq")
+                        if type(rank) is int and type(seq) is int:
+                            self._seqs[rank] = seq + 1
+                yield rec
+            if self.skipped:
+                warnings.warn(TraceCorruptionWarning(
+                    f"{self.path}: skipped "
+                    + ", ".join(f"{n} {cat} line(s)" for cat, n
+                                in sorted(self.skipped.items()))),
+                    stacklevel=2)
         finally:
             self.close()
 
@@ -498,10 +586,13 @@ class TraceReader:
         self.close()
 
 
-def iter_trace(path: str, expand: bool = True) -> TraceReader:
+def iter_trace(path: str, expand: bool = True,
+               strict: bool = True) -> TraceReader:
     """Streaming open: ``with iter_trace(p) as r: r.header; for rec in
-    r: ...`` — decodes chunks lazily, one record in memory at a time."""
-    return TraceReader(path, expand=expand)
+    r: ...`` — decodes chunks lazily, one record in memory at a time.
+    ``strict=False`` skips corrupt payload lines instead of raising
+    (tallied in ``reader.skipped``)."""
+    return TraceReader(path, expand=expand, strict=strict)
 
 
 def read_trace(path: str) -> Tuple[Dict, List[Dict]]:
@@ -514,17 +605,21 @@ def read_trace(path: str) -> Tuple[Dict, List[Dict]]:
         return r.header, list(r)
 
 
-def convert_trace(src: str, dst: str,
-                  schema: Optional[int] = None) -> Tuple[int, int]:
+def convert_trace(src: str, dst: str, schema: Optional[int] = None,
+                  strict: bool = True,
+                  skipped: Optional[Dict[str, int]] = None
+                  ) -> Tuple[int, int]:
     """Re-encode a trace at another schema version (v2 <-> v3) without
     touching its content: records stream through unchanged — ``t_wall``
     stamps, phase markers, snapshots and meta are preserved — only the
     post/arrive encoding changes. Returns ``(n_records, n_ops)``.
     Converting v2 -> v3 -> v2 is byte-identical; replay statistics are
     equal in every direction (``scripts/trace_convert.py`` is the
-    CLI)."""
+    CLI). ``strict=False`` salvages a damaged source: corrupt lines
+    are dropped from the converted output and tallied into the
+    caller's ``skipped`` dict (the CLI's ``--lenient``)."""
     n_ops = 0
-    with TraceReader(src) as r:
+    with TraceReader(src, strict=strict) as r:
         hdr = r.header
         with TraceWriter(dst, mode=hdr.get("mode", "binned"),
                          meta=hdr.get("meta") or None, wall_clock=False,
@@ -533,4 +628,6 @@ def convert_trace(src: str, dst: str,
                 if rec["t"] in (REC_POST, REC_ARRIVE):
                     n_ops += 1
                 w.emit(rec)
+            if skipped is not None:
+                skipped.update(r.skipped)
             return w.n_records, n_ops

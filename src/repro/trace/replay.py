@@ -104,7 +104,8 @@ class ReplayResult:
                  recorded_stats: Optional[
                      Dict[int, Dict[str, CounterStat]]] = None,
                  raw_snap: Optional[Dict] = None,
-                 n_ops: int = 0, phase_ns: int = PHASE_NS):
+                 n_ops: int = 0, phase_ns: int = PHASE_NS,
+                 skipped_records: Optional[Dict[str, int]] = None):
         self.mode = mode
         self.progress_mode = progress_mode
         self.header = header
@@ -112,6 +113,9 @@ class ReplayResult:
         self.divergences = divergences
         self.phases = phases
         self.registry = registry
+        # per-category tally of corrupt source lines a lenient
+        # (strict=False) reader dropped before replay saw them
+        self.skipped_records: Dict[str, int] = skipped_records or {}
         # engine ops replayed; on the batched path (check_matches=False)
         # ``matches`` stays empty, so this is the op count to report
         self.n_ops = n_ops
@@ -419,11 +423,16 @@ class Replayer:
                  progress_mode: Optional[str] = None,
                  phase_ns: int = PHASE_NS, check_matches: bool = True,
                  ranks: Optional[Iterable[int]] = None,
-                 phase_range: Optional[Tuple[int, int]] = None):
+                 phase_range: Optional[Tuple[int, int]] = None,
+                 strict: bool = True):
         self.mode = mode
         self.progress_mode = progress_mode
         self.phase_ns = phase_ns
         self.check_matches = check_matches
+        # strict=False opens path sources leniently: corrupt lines are
+        # skipped by the reader and tallied into the result's
+        # ``skipped_records`` instead of aborting the replay
+        self.strict = strict
         self.ranks: Optional[FrozenSet[int]] = (
             None if ranks is None else frozenset(ranks))
         self.phase_range = phase_range
@@ -451,7 +460,8 @@ class Replayer:
             if self.check_matches:
                 records = _expand_stream(records)
             return header, records
-        reader = iter_trace(str(source), expand=self.check_matches)
+        reader = iter_trace(str(source), expand=self.check_matches,
+                            strict=self.strict)
         return reader.header, reader
 
     def run(self, source: Union[str, TraceReader,
@@ -459,8 +469,15 @@ class Replayer:
             ) -> ReplayResult:
         header, records = self._open(source)
         if self.check_matches:
-            return self._run_checked(header, records)
-        return self._run_batched(header, records)
+            result = self._run_checked(header, records)
+        else:
+            result = self._run_batched(header, records)
+        reader = (records if isinstance(records, TraceReader)
+                  else source if isinstance(source, TraceReader)
+                  else None)
+        if reader is not None and reader.skipped:
+            result.skipped_records = dict(reader.skipped)
+        return result
 
     # -- per-op verification path -----------------------------------------
 
@@ -874,9 +891,12 @@ class Replayer:
 def replay(source: Union[str, TraceReader, Tuple[Dict, Sequence[Dict]]],
            mode: Optional[str] = None,
            progress_mode: Optional[str] = None,
-           check_matches: bool = True) -> ReplayResult:
+           check_matches: bool = True,
+           strict: bool = True) -> ReplayResult:
     """One-call replay: ``replay(path, mode="linear")``;
     ``check_matches=False`` streams batched (fast, no per-op outcome
-    verification)."""
+    verification); ``strict=False`` skips corrupt source lines (see
+    ``ReplayResult.skipped_records``)."""
     return Replayer(mode=mode, progress_mode=progress_mode,
-                    check_matches=check_matches).run(source)
+                    check_matches=check_matches, strict=strict
+                    ).run(source)

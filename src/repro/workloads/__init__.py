@@ -11,10 +11,12 @@ from .base import (DEFECT_DETECTOR, Scenario, all_scenarios, get, names,
 from . import scenarios  # noqa: F401  (registers the gallery)
 from .bench import (DEFECT_KINDS, ENGINE_MODES, FAULT_DETECTOR,
                     FAULT_FINDING_KINDS, FAULT_KINDS, PE_REQUESTS,
-                    PROGRESS_MODES, ScenarioRun, build_fabric, cell_key,
-                    check, compare_to_baseline, count_ops,
-                    defect_coverage, fault_coverage, hist_percentile,
-                    make_baseline, run_scenario, sweep)
+                    PROGRESS_MODES, RECOVERY_FINDING_KINDS, ScenarioRun,
+                    build_fabric, cell_key, check, compare_to_baseline,
+                    count_ops, defect_coverage, fault_coverage,
+                    fault_detector_kinds, hist_percentile,
+                    live_progress_records, make_baseline, plan_for,
+                    run_scenario, sweep)
 from . import hotpath  # noqa: F401  (throughput bench + perf gate)
 from . import telemetry  # noqa: F401  (live-bridge overhead + liveness gate)
 
@@ -23,8 +25,10 @@ __all__ = [
     "progress_schedule", "register", "scenario",
     "DEFECT_KINDS", "ENGINE_MODES", "FAULT_DETECTOR",
     "FAULT_FINDING_KINDS", "FAULT_KINDS", "PE_REQUESTS",
-    "PROGRESS_MODES", "ScenarioRun", "build_fabric", "cell_key",
-    "check", "compare_to_baseline", "count_ops", "defect_coverage",
-    "fault_coverage", "hist_percentile", "hotpath", "make_baseline",
+    "PROGRESS_MODES", "RECOVERY_FINDING_KINDS", "ScenarioRun",
+    "build_fabric", "cell_key", "check", "compare_to_baseline",
+    "count_ops", "defect_coverage", "fault_coverage",
+    "fault_detector_kinds", "hist_percentile", "hotpath",
+    "live_progress_records", "make_baseline", "plan_for",
     "run_scenario", "sweep", "telemetry",
 ]

@@ -32,8 +32,9 @@ from typing import Dict, List, Optional, Sequence, Union
 from ..core import analyses
 from ..core.counters import (CounterRegistry, CounterStat, counter_stats,
                              lane_events)
-from ..faults import (FaultPlan, build_faulty, default_plan,
-                      finish_faults)
+from ..faults import (FaultPlan, RecoveryPolicy, build_faulty,
+                      composite_kinds, composite_names, composite_plan,
+                      default_plan, finish_faults)
 from ..faults.plan import KINDS as FAULT_KINDS
 from ..match import Fabric, canonical_mode
 from ..trace.io import TraceWriter
@@ -63,6 +64,30 @@ FAULT_DETECTOR = {
 }
 FAULT_FINDING_KINDS = tuple(sorted(set(FAULT_DETECTOR.values())))
 
+# recovery-evidence detectors: they may fire only when a RecoveryPolicy
+# actively healed something; on every policy-free run (and every healthy
+# run under a policy) they must stay silent, exactly like the fault set
+RECOVERY_FINDING_KINDS = ("recovered_drop", "retry_storm",
+                          "suppressed_duplicate")
+
+
+def plan_for(name: str, seed: int = 0) -> FaultPlan:
+    """The canonical plan for a fault-axis cell name: a single kind's
+    default plan, or a composite plan when ``name`` joins kinds with
+    ``+`` (e.g. ``drop+delay``)."""
+    if "+" in name:
+        return composite_plan(name, seed=seed)
+    return default_plan(name, seed=seed)
+
+
+def fault_detector_kinds(name: str) -> tuple:
+    """Detectors that evidence injected fault cell ``name`` — the
+    single kind's detector, or the union over a composite's members."""
+    if "+" in name:
+        return tuple(sorted({FAULT_DETECTOR[k]
+                             for k in composite_kinds(name)}))
+    return (FAULT_DETECTOR[name],)
+
 # number of requests in every scenario's deterministic progress-lane
 # schedule (enough backlog for the shared-queue discipline to serialize)
 PE_REQUESTS = 32
@@ -71,16 +96,62 @@ PE_REQUESTS = 32
 GATED_METRICS = ("n_ops", "depth_mean", "depth_max", "umq_mean", "umq_max")
 
 
+class _RecordSink:
+    """Trace hook collecting a live engine's ``pe`` records in memory."""
+
+    def __init__(self):
+        self.records: List[Dict] = []
+
+    def emit(self, rec: Dict) -> None:
+        self.records.append(rec)
+
+
+def live_progress_records(progress_mode: str,
+                          n_requests: int = PE_REQUESTS,
+                          quantum_ns: int = 60_000) -> List[Dict]:
+    """Run a real threaded :class:`repro.comm.progress.ProgressEngine`
+    and return its recorded submit/process stream in the trace's ``pe``
+    encoding (the live analog of :func:`.base.progress_schedule`).
+
+    Each request's work is a JAX-free busy spin of ``quantum_ns``; the
+    user thread enqueues with no gap between submits, so the backlog
+    grows far faster than quanta drain and the shared-queue discipline
+    serializes submits behind whole processing quanta — the paper's
+    Fig. 10 shape, but measured from genuine cross-thread timing rather
+    than modeled. The stream is therefore non-deterministic and must
+    never feed a committed baseline."""
+    from ..comm.progress import ProgressEngine
+
+    def quantum(i: int) -> int:
+        deadline = time.perf_counter_ns() + quantum_ns
+        while time.perf_counter_ns() < deadline:
+            pass
+        return i
+
+    sink = _RecordSink()
+    eng = ProgressEngine(mode=progress_mode, process_fn=lambda _r: None,
+                         trace=sink)
+    try:
+        reqs = [eng.submit(quantum, i, label=f"live-pe[{i}]")
+                for i in range(n_requests)]
+        for r in reqs:
+            r.wait(timeout=30.0)
+    finally:
+        eng.shutdown()
+    return sink.records
+
+
 def build_fabric(sc: Scenario, engine_mode: str,
                  registry: Optional[CounterRegistry] = None,
-                 trace=None, fault: Optional[FaultPlan] = None) -> Fabric:
+                 trace=None, fault: Optional[FaultPlan] = None,
+                 recovery: Optional[RecoveryPolicy] = None) -> Fabric:
     """The fabric configuration every harness drives a scenario through
     (the sweep here, the hotpath throughput bench, golden-trace
     capture): the scenario's deterministic unexpected/wildcard mix over
     a fresh per-run registry. With a ``fault`` plan the returned fabric
     is a :class:`repro.faults.FaultyFabric` applying it to every
-    exchange."""
-    return build_faulty(fault, mode=engine_mode,
+    exchange, self-healing when a ``recovery`` policy is set."""
+    return build_faulty(fault, recovery=recovery, mode=engine_mode,
                         registry=registry if registry is not None
                         else CounterRegistry(),
                         trace=trace,
@@ -170,8 +241,9 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
                  wall_clock: bool = True,
                  trace_schema: Optional[int] = None,
                  telemetry=None,
-                 fault: Optional[Union[str, FaultPlan]] = None
-                 ) -> ScenarioRun:
+                 fault: Optional[Union[str, FaultPlan]] = None,
+                 recovery: Optional[RecoveryPolicy] = None,
+                 live_progress: bool = False) -> ScenarioRun:
     """Run one scenario end-to-end under one engine/progress config:
     drive the fabric, snapshot counters, model the progress lanes, run
     every detector. With ``trace_path`` the run is recorded to a
@@ -185,15 +257,26 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
     identical to an unbridged run (the bridge only changes *when* the
     deltas are folded, never what they sum to). ``fault`` injects a
     :class:`repro.faults.FaultPlan` (or the canonical single-kind plan
-    named by a kind string) into every exchange of the drive."""
+    named by a kind string, or a canonical composite plan named
+    ``kindA+kindB``) into every exchange of the drive; ``recovery``
+    applies a :class:`repro.faults.RecoveryPolicy` so the fabric heals
+    recoverable faults as they land. ``live_progress`` swaps the
+    modeled progress-lane schedule for a real threaded
+    :class:`repro.comm.progress.ProgressEngine` run (JAX-free spin
+    quanta, recorded through the engine's own trace hook) — the lane
+    events and any contention finding then come from genuine
+    cross-thread timing, so the cell is non-deterministic and must
+    never feed a committed baseline."""
     if isinstance(sc, str):
         sc = get(sc)
     p = sc.params(size, **(params or {}))
     engine_mode = canonical_mode(engine_mode)
     if progress_mode not in PROGRESS_MODES:
         raise ValueError(f"progress_mode must be one of {PROGRESS_MODES}")
+    fault_name: Optional[str] = None
     if isinstance(fault, str):
-        fault = default_plan(fault, seed=seed)
+        fault_name = fault
+        fault = plan_for(fault, seed=seed)
 
     reg = CounterRegistry()
     writer = None
@@ -203,11 +286,13 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
                 "progress_mode": progress_mode}
         if fault is not None and fault.specs:
             meta["fault"] = fault.to_dict()
+        if recovery is not None and recovery.rules:
+            meta["recovery"] = recovery.to_dict()
         writer = TraceWriter(
             trace_path, mode=engine_mode, wall_clock=wall_clock,
             schema=trace_schema, meta=meta)
     fab = build_fabric(sc, engine_mode, registry=reg, trace=writer,
-                       fault=fault)
+                       fault=fault, recovery=recovery)
     src = telemetry.watch(reg) if telemetry is not None else None
     rng = random.Random(seed)
     t0 = time.perf_counter_ns()
@@ -216,8 +301,12 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
     wall_ns = time.perf_counter_ns() - t0
 
     # deterministic progress-engine lane schedule (same rng continuation
-    # for every engine mode, so the stream is mode-independent)
-    pe_records = progress_schedule(rng, PE_REQUESTS)
+    # for every engine mode, so the stream is mode-independent) — or, on
+    # request, a real threaded engine's recorded stream
+    if live_progress:
+        pe_records = live_progress_records(progress_mode)
+    else:
+        pe_records = progress_schedule(rng, PE_REQUESTS)
     lanes = telemetry.unwatch(src) if telemetry is not None else None
     if writer is not None:
         for rec in pe_records:
@@ -254,8 +343,9 @@ def run_scenario(sc: Union[str, Scenario], engine_mode: str = "fifo",
         umq_mean=hv(umq, "mean"), umq_max=hv(umq, "vmax"),
         finding_kinds=kinds, defect_kinds=defects,
         fault_kinds=flagged_faults,
-        fault=(fault.kinds[0] if fault is not None and len(fault.kinds) == 1
-               else None),
+        fault=(fault_name if fault_name is not None
+               else fault.kinds[0]
+               if fault is not None and len(fault.kinds) == 1 else None),
         findings=findings, trace_path=trace_path)
 
 
@@ -273,10 +363,11 @@ def sweep(size: str = "full", seed: int = 0,
     versioned ``scenario_sweep.json`` payload. A ``telemetry`` bridge
     streams every cell's counters live without changing any gated
     metric (see :func:`run_scenario`). With ``faults`` (True for all
-    of ``FAULT_KINDS``, or a kind list) every scenario additionally
-    runs once per fault kind under the healthy engine (fifo+incoming)
-    with that kind's canonical plan injected — the fault axis the
-    detector-coverage gate is computed over."""
+    of ``FAULT_KINDS``, or a cell-name list that may mix single kinds
+    and canonical composite names such as ``drop+delay``) every
+    scenario additionally runs once per fault cell under the healthy
+    engine (fifo+incoming) with that cell's canonical plan injected —
+    the fault axis the detector-coverage gate is computed over."""
     scs = ([get(s) if isinstance(s, str) else s for s in scenarios]
            if scenarios is not None else all_scenarios())
     fault_kinds = (list(FAULT_KINDS) if faults is True
@@ -335,15 +426,19 @@ def defect_coverage(results: Dict) -> Dict[str, List[str]]:
 
 
 def fault_coverage(results: Dict) -> Dict[str, List[str]]:
-    """Which scenarios surfaced each injected fault kind: the kind's
-    dedicated detector fired in that kind's faulted cell."""
+    """Which scenarios surfaced each injected fault cell: the kind's
+    dedicated detector fired in that kind's faulted cell (for a
+    composite cell, any member kind's detector counts — composite
+    pairs are chosen so signatures don't cancel, but which member
+    dominates is scenario-dependent)."""
     kinds = results.get("fault_kinds", [])
     cover: Dict[str, List[str]] = {k: [] for k in kinds}
     for name, entry in results["scenarios"].items():
         fcells = entry.get("fault_cells", {})
         for kind in kinds:
             cell = fcells.get(kind)
-            if cell and FAULT_DETECTOR[kind] in cell["faults"]:
+            if cell and any(d in cell["faults"]
+                            for d in fault_detector_kinds(kind)):
                 cover[kind].append(name)
     return cover
 
@@ -378,12 +473,14 @@ def check(results: Dict, min_scenarios: int = 6,
                 failures.append(
                     f"{name}: expected {detector!r} under {key} "
                     f"(seeded defect {defect!r}), got {cell['defects']}")
-        # fault-class detectors must stay silent on every fault-free
-        # cell, defect modes included — their thresholds are calibrated
-        # so only injected (or real) transport faults cross them
+        # fault-class and recovery-evidence detectors must stay silent
+        # on every fault-free cell, defect modes included — their
+        # thresholds are calibrated so only injected (or real)
+        # transport faults / actual healing work cross them
         for key, cell in sorted(entry["cells"].items()):
             noisy = sorted(k for k in cell.get("findings", [])
-                           if k in FAULT_FINDING_KINDS)
+                           if k in FAULT_FINDING_KINDS
+                           or k in RECOVERY_FINDING_KINDS)
             if noisy:
                 failures.append(f"{name}: fault-free cell {key} flagged "
                                 f"fault findings {noisy}")

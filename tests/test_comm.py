@@ -107,6 +107,51 @@ def test_progress_engine_error_propagation():
         eng.shutdown()
 
 
+def test_progress_engine_lifecycle():
+    """Deferred start, restart after shutdown, and loud submit errors
+    instead of silently-hung requests."""
+    import pytest
+
+    eng = ProgressEngine("incoming", process_fn=lambda r: None,
+                         autostart=False)
+    assert not eng.running
+    with pytest.raises(RuntimeError):
+        eng.submit(lambda: 1)            # not started yet
+    eng.start()
+    eng.start()                          # idempotent while running
+    assert eng.running
+    assert eng.submit(lambda: 41 + 1).wait(timeout=10) == 42
+    eng.shutdown()
+    eng.shutdown()                       # idempotent when stopped
+    assert not eng.running
+    with pytest.raises(RuntimeError):
+        eng.submit(lambda: 1)            # stopped engines refuse work
+    eng.start()                          # restart reuses the engine
+    assert eng.submit(lambda: "again").wait(timeout=10) == "again"
+    eng.shutdown()
+
+
+def test_progress_engine_process_fn_and_labels():
+    """process_fn replaces the JAX completion hook (pure-python work
+    stays JAX-free) and request labels surface in timeout errors."""
+    import pytest
+
+    import threading
+
+    done = []
+    gate = threading.Event()
+    eng = ProgressEngine("incoming", process_fn=done.append)
+    try:
+        assert eng.submit(lambda: 7, label="seven").wait(timeout=10) == 7
+        assert done == [7]
+        req = eng.submit(gate.wait, 10, label="stalled-op")
+        with pytest.raises(TimeoutError, match="stalled-op"):
+            req.wait(timeout=0.05)
+    finally:
+        gate.set()                       # unblock the worker first
+        eng.shutdown()
+
+
 def test_shared_queue_contends_incoming_does_not():
     """The paper's §4 finding as an assertion: cross-thread lock-region
     contention exists with one queue and vanishes with the second."""

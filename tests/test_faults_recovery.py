@@ -1,0 +1,293 @@
+"""Self-healing comm layer + fault-aware what-if replay
+(``repro.faults.recovery`` / ``repro.faults.whatif``): policy
+round-trip and validation, retransmit byte-determinism, convergence of
+every recoverable kind, the recovery-evidence detector fire/silent
+matrix, recovery-off byte-identity against the committed corpus,
+what-if-vs-live equivalence over the corpus's faulted cells, composite
+plan firing/validation, lenient trace salvage, and live threaded
+progress under faults."""
+import hashlib
+import json
+import os
+
+import pytest
+
+from repro.corpus import (FAULT_CELLS, CorpusStore, finding_kinds,
+                          signature)
+from repro.faults import (RECOVERABLE_KINDS, FaultPlan, FaultSpec,
+                          RecoveryPolicy, RecoveryRule, composite_kinds,
+                          composite_names, composite_plan, default_plan,
+                          default_policy, single)
+from repro.faults.recovery import recovery_stream
+from repro.faults.whatif import WhatIfError, whatif
+from repro.trace import (TraceCorruptionWarning, TraceFormatError,
+                         iter_trace, read_trace, replay)
+from repro.workloads import (FAULT_FINDING_KINDS, RECOVERY_FINDING_KINDS,
+                             run_scenario)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+CORPUS_ROOT = os.path.join(HERE, "corpus")
+
+SMOKE = dict(size="smoke", seed=0)
+
+
+def sha256(path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        h.update(f.read())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------- policy round-trip
+
+
+def test_policy_round_trips_through_json():
+    pol = default_policy()
+    back = RecoveryPolicy.from_json(pol.to_json())
+    assert back == pol
+    assert back.kinds == tuple(sorted(RECOVERABLE_KINDS))
+
+
+def test_policy_dict_shape_is_versioned():
+    obj = default_policy().to_dict()
+    assert obj["format"] == "repro.faults.recovery"
+    json.dumps(obj)
+    with pytest.raises(ValueError):
+        RecoveryPolicy.from_dict({"format": "something_else"})
+
+
+@pytest.mark.parametrize("bad", [
+    dict(kind="reorder"),           # not a recoverable kind
+    dict(kind="drop", max_retries=-1),
+    dict(kind="drop", timeout=0),
+    dict(kind="drop", backoff=0.5),
+    dict(kind="drop", jitter=-1),
+])
+def test_rule_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        RecoveryRule(**bad)
+
+
+def test_policy_rejects_duplicate_rule_kinds():
+    with pytest.raises(ValueError):
+        RecoveryPolicy(rules=(RecoveryRule(kind="drop"),
+                              RecoveryRule(kind="drop")))
+
+
+def test_backoff_delay_is_deterministic_and_monotone():
+    rule = RecoveryRule(kind="drop", timeout=2, backoff=2.0, jitter=0)
+    rng = recovery_stream(0)
+    delays = [rule.delay(a, rng) for a in range(4)]
+    assert delays == [2, 4, 8, 16]
+    # jitter draws come from the policy's dedicated stream, never the
+    # injector's fault stream — same seed, same jitter sequence
+    j1 = [RecoveryRule(kind="drop", jitter=3).delay(0, recovery_stream(5))
+          for _ in range(3)]
+    j2 = [RecoveryRule(kind="drop", jitter=3).delay(0, recovery_stream(5))
+          for _ in range(3)]
+    assert j1 == j2
+
+
+# ------------------------------------------- retransmit byte-determinism
+
+
+def test_recovered_trace_is_byte_deterministic(tmp_path):
+    pol = default_policy()
+    paths = []
+    for i in range(2):
+        p = tmp_path / f"rec{i}.jsonl"
+        run_scenario("halo3d", engine_mode="fifo", fault="drop",
+                     recovery=pol, trace_path=str(p), wall_clock=False,
+                     **SMOKE)
+        paths.append(p)
+    assert paths[0].read_bytes() == paths[1].read_bytes()
+
+
+def test_recovery_off_matches_committed_corpus_bytes(tmp_path):
+    """The recovery integration must leave the policy-free injector
+    byte-identical: re-recording a faulted corpus cell reproduces the
+    committed file hash exactly."""
+    store = CorpusStore.load(CORPUS_ROOT)
+    entry = next(e for e in store.entries
+                 if e.scenario == "halo3d" and e.fault == "drop")
+    p = tmp_path / "halo3d_drop.jsonl"
+    run_scenario("halo3d", engine_mode="fifo", seed=entry.seed,
+                 size=entry.size, fault="drop", trace_path=str(p),
+                 wall_clock=False, trace_schema=entry.schema)
+    assert sha256(p) == entry.sha256
+
+
+# ------------------------------------------------------- convergence
+
+
+def test_drop_recovery_converges_and_fires_recovered_drop():
+    run = run_scenario("halo3d", fault="drop", recovery=default_policy(),
+                       **SMOKE)
+    assert "recovered_drop" in run.finding_kinds
+    assert "orphan_posts" not in run.finding_kinds
+    # control: without the policy the same cell orphans posts
+    ctl = run_scenario("halo3d", fault="drop", **SMOKE)
+    assert "orphan_posts" in ctl.finding_kinds
+
+
+def test_duplicate_recovery_suppresses_and_fires_evidence():
+    run = run_scenario("ring_allreduce", fault="duplicate",
+                       recovery=default_policy(), **SMOKE)
+    assert "suppressed_duplicate" in run.finding_kinds
+    assert "duplicate_match" not in run.finding_kinds
+
+
+def test_rank_leave_recovery_cancels_orphan_posts():
+    run = run_scenario("amg_coarsen", fault="rank_leave",
+                       recovery=default_policy(), **SMOKE)
+    assert "orphan_posts" not in run.finding_kinds
+    assert "recovered_drop" in run.finding_kinds   # cancellations count
+    ctl = run_scenario("amg_coarsen", fault="rank_leave", **SMOKE)
+    assert "orphan_posts" in ctl.finding_kinds
+
+
+def test_retry_storm_fires_under_heavy_loss_only():
+    heavy = single("drop", rate=0.9, seed=0)
+    run = run_scenario("halo3d", fault=heavy, recovery=default_policy(),
+                       **SMOKE)
+    assert "retry_storm" in run.finding_kinds
+    light = run_scenario("halo3d", fault="drop",
+                         recovery=default_policy(), **SMOKE)
+    assert "retry_storm" not in light.finding_kinds
+
+
+def test_healthy_run_with_policy_is_clean():
+    run = run_scenario("halo3d", recovery=default_policy(), **SMOKE)
+    noisy = [k for k in run.finding_kinds
+             if k in FAULT_FINDING_KINDS or k in RECOVERY_FINDING_KINDS]
+    assert noisy == []
+
+
+# ------------------------------------------------- what-if fault replay
+
+
+@pytest.mark.parametrize("sc,kind", FAULT_CELLS,
+                         ids=[f"{s}-{k}" for s, k in FAULT_CELLS])
+def test_whatif_predicts_live_faulted_finding_kinds(sc, kind):
+    healthy = os.path.join(CORPUS_ROOT, f"{sc}__fifo.jsonl")
+    faulted = os.path.join(CORPUS_ROOT, f"{sc}__fifo__fault_{kind}.jsonl")
+    live = replay(faulted, check_matches=False)
+    wr = whatif(healthy, default_plan(kind, seed=0))
+    assert wr.finding_kinds == finding_kinds(live)
+    if kind != "rank_leave":   # rank_leave is verdict-only by design
+        assert signature(wr.replay) == signature(live)
+
+
+def test_whatif_wrong_unexpected_every_raises():
+    healthy = os.path.join(CORPUS_ROOT, "halo3d__fifo.jsonl")
+    with pytest.raises(WhatIfError):
+        whatif(healthy, default_plan("drop"), unexpected_every=3)
+
+
+def test_whatif_with_recovery_heals_the_prediction():
+    healthy = os.path.join(CORPUS_ROOT, "halo3d__fifo.jsonl")
+    wr = whatif(healthy, default_plan("drop", seed=0),
+                policy=default_policy())
+    assert "recovered_drop" in wr.finding_kinds
+    assert "orphan_posts" not in wr.finding_kinds
+    assert wr.stats["retransmitted"] + wr.stats["cancelled"] > 0
+
+
+# --------------------------------------------------- composite plans
+
+
+def test_composite_plans_fire_both_member_detectors():
+    run = run_scenario("halo3d", fault="drop+delay", **SMOKE)
+    assert "orphan_posts" in run.finding_kinds
+    assert "straggler_rank" in run.finding_kinds
+    run = run_scenario("ring_allreduce", fault="duplicate+reorder",
+                       **SMOKE)
+    assert "duplicate_match" in run.finding_kinds
+    assert "reorder_inflation" in run.finding_kinds
+
+
+def test_composite_names_resolve_and_unknown_rejected():
+    for name in composite_names():
+        plan = composite_plan(name)
+        assert plan.kinds == tuple(sorted(composite_kinds(name)))
+    with pytest.raises(ValueError):
+        composite_plan("drop+duplicate")
+
+
+def test_composite_validation_rejects_overlaps():
+    with pytest.raises(ValueError):
+        FaultPlan(specs=(
+            FaultSpec(kind="drop", rate=0.1, start=0, stop=-1),
+            FaultSpec(kind="drop", rate=0.2, start=5, stop=10)))
+    with pytest.raises(ValueError):
+        FaultPlan(specs=(
+            FaultSpec(kind="rank_leave", rank=1, start=0, stop=-1),
+            FaultSpec(kind="delay", rank=1, hold=2, start=2, stop=6)))
+    # disjoint windows of the same kind are legal
+    FaultPlan(specs=(
+        FaultSpec(kind="drop", rate=0.1, start=0, stop=5),
+        FaultSpec(kind="drop", rate=0.2, start=5, stop=10)))
+
+
+# ------------------------------------------------- lenient trace salvage
+
+
+def corrupt_trace(tmp_path):
+    """A healthy smoke trace with three styles of damage appended in
+    the middle: unparseable JSON, a schema-invalid record, and a
+    wrong-arity columnar chunk."""
+    p = tmp_path / "damaged.jsonl"
+    run_scenario("ring_allreduce", engine_mode="fifo",
+                 trace_path=str(p), wall_clock=False, **SMOKE)
+    lines = p.read_text().splitlines(keepends=True)
+    cut = len(lines) // 2
+    bad = [
+        # wrong-arity chunk: 2-entry rank column for 3 rows
+        '{"t": "chk", "n": 3, "p": 1, "r": [0, 1], "s": 0, "g": 0}\n',
+        '{"t": 12345}\n',                     # invalid record
+        '{truncated\n']                       # unparseable JSON
+    p.write_text("".join(lines[:cut] + bad + lines[cut:]))
+    return p
+
+
+def test_lenient_reader_skips_and_tallies(tmp_path):
+    p = corrupt_trace(tmp_path)
+    with pytest.raises(TraceFormatError):
+        read_trace(str(p))
+    with pytest.warns(TraceCorruptionWarning):
+        with iter_trace(str(p), strict=False) as r:
+            n = sum(1 for _ in r)
+    assert n > 0
+    assert r.skipped == {"chunk": 1, "json": 1, "record": 1}
+
+
+def test_lenient_replay_matches_clean_trace(tmp_path):
+    clean = tmp_path / "clean.jsonl"
+    run_scenario("ring_allreduce", engine_mode="fifo",
+                 trace_path=str(clean), wall_clock=False, **SMOKE)
+    damaged = corrupt_trace(tmp_path)
+    with pytest.warns(TraceCorruptionWarning):
+        res = replay(str(damaged), check_matches=False, strict=False)
+    ref = replay(str(clean), check_matches=False)
+    assert res.skipped_records == {"chunk": 1, "json": 1, "record": 1}
+    assert res.n_ops == ref.n_ops
+    assert signature(res) == signature(ref)
+    assert finding_kinds(res) == finding_kinds(ref)
+    # strict replay refuses the damaged file outright
+    with pytest.raises(TraceFormatError):
+        replay(str(damaged), check_matches=False)
+
+
+# -------------------------------------- live threaded progress engine
+
+
+@pytest.mark.parametrize("sc,kind", [("request_reply", "drop"),
+                                     ("power_law_burst", "reorder")])
+def test_live_progress_under_faults_keeps_contention_gate(sc, kind):
+    shared = run_scenario(sc, progress_mode="shared", fault=kind,
+                          live_progress=True, **SMOKE)
+    assert "contention" in shared.finding_kinds
+    assert shared.fault_kinds          # the fault still detected
+    incoming = run_scenario(sc, progress_mode="incoming", fault=kind,
+                            live_progress=True, **SMOKE)
+    assert "contention" not in incoming.finding_kinds

@@ -3,6 +3,7 @@ consumers, frame schema round-trips, slow-subscriber backpressure, the
 HTTP/SSE endpoints, and detector-finding parity between the live bridge
 and the post-hoc event path on the same run."""
 import json
+import socket
 import threading
 import time
 import urllib.error
@@ -328,3 +329,67 @@ def test_http_404_and_sse_frames():
         kinds = [validate_frame(f) for f in frames]
         assert kinds == [FRAME_HEADER, FRAME_DELTA]
         assert frame_lanes(frames[1])[0]["match.posted"].count == 32
+
+
+def test_server_busy_port_falls_back_to_ephemeral():
+    """A stale listener on the requested port must not fail the run:
+    after the bind retries the server takes an ephemeral port and
+    reports the substitution."""
+    blocker = socket.socket()
+    blocker.bind(("127.0.0.1", 0))
+    blocker.listen(1)
+    busy = blocker.getsockname()[1]
+    try:
+        srv = TelemetryServer(TelemetryBridge(period_s=60), port=busy,
+                              bind_retries=1, bind_backoff_s=0.01)
+        try:
+            assert srv.fell_back
+            assert srv.requested_port == busy
+            assert srv.port != busy
+            with srv:
+                m = json.loads(urllib.request.urlopen(
+                    srv.url + "/metrics", timeout=5).read())
+                assert "session" in m
+        finally:
+            srv.close()
+    finally:
+        blocker.close()
+    # an explicit ephemeral request never counts as a fallback
+    srv = TelemetryServer(TelemetryBridge(period_s=60))
+    assert not srv.fell_back and srv.requested_port == 0
+    srv.close()
+
+
+def test_server_half_closed_sse_client_does_not_wedge():
+    """A /stream client that half-closes its socket only stalls its own
+    handler thread; /metrics (and the bridge's poller fan-out) keep
+    answering."""
+    reg = CounterRegistry()
+    bridge = TelemetryBridge(period_s=60, session="halfclose")
+    bridge.watch(reg, name="r")
+    _produce(reg, 0, 16)
+    bridge.poll()
+    with TelemetryServer(bridge) as srv:
+        c = socket.create_connection((srv.host, srv.port), timeout=5)
+        c.sendall(b"GET /stream HTTP/1.1\r\n"
+                  b"Host: x\r\nConnection: close\r\n\r\n")
+        c.recv(256)                      # headers + first frames arrive
+        c.shutdown(socket.SHUT_WR)       # half-close, never read again
+        c.close()
+        bridge.poll()                    # poller must not block on it
+        m = json.loads(urllib.request.urlopen(
+            srv.url + "/metrics", timeout=5).read())
+        assert m["session"] == "halfclose"
+
+
+def test_server_stop_and_close_idempotent():
+    srv = TelemetryServer(TelemetryBridge(period_s=60)).start()
+    srv.stop()
+    srv.stop()                           # second stop is a no-op
+    srv.close()
+    with pytest.raises(RuntimeError):
+        srv.start()                      # closed servers don't restart
+    # a never-started server must close without hanging in shutdown()
+    cold = TelemetryServer(TelemetryBridge(period_s=60))
+    cold.close()
+    cold.close()
